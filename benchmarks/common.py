@@ -1,0 +1,52 @@
+"""Shared benchmark utilities: timing, model builders, CSV emission."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import AttnConfig, ModelConfig
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 1) -> float:
+    """Median wall time per call in microseconds (jit-compiled fn)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def tiny_vit_cfg(backend: str, n: int, m: int = 8, k: int = 8,
+                 layers: int = 2, d: int = 64,
+                 landmark: str = "pool1d") -> ModelConfig:
+    window = max(1, n // m)
+    return ModelConfig(
+        n_layers=layers, d_model=d, n_heads=4, n_kv=4, d_ff=2 * d,
+        vocab=11,
+        attn=AttnConfig(backend=backend, window=window, k=k, s=1,
+                        causal=False, block_q=32, landmark=landmark))
+
+
+def tiny_lm_cfg(backend: str, m: int = 8, k: int = 16, layers: int = 2,
+                d: int = 64, vocab: int = 211, seq: int = 256) -> ModelConfig:
+    return ModelConfig(
+        n_layers=layers, d_model=d, n_heads=4, n_kv=2, d_ff=2 * d,
+        vocab=vocab,
+        attn=AttnConfig(backend=backend, window=max(1, seq // m), k=k, s=1,
+                        block_q=64))

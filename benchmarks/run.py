@@ -1,0 +1,32 @@
+"""Benchmark harness — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (stdout), mirrored in ROWS.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [tab2 tab5 ...]
+"""
+
+import sys
+
+from benchmarks import tables
+
+
+ALL = [
+    ("tab2", tables.tab2_imagenet_proxy),
+    ("tab4", tables.tab4_segmentation_flops),
+    ("tab5", tables.tab5_lra_throughput),
+    ("tab6", tables.tab6_ablations),
+    ("tab7", tables.tab7_algorithmic_generalization),
+    ("fig5", tables.fig5_inference_throughput),
+]
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    for name, fn in ALL:
+        if want and name not in want:
+            continue
+        fn()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,60 @@
+"""Algorithmic generalization (paper Appendix C / Fig. 9): train a model
+with one attention mechanism, run inference with another.
+
+The paper's headline finding: standard attention and MiTA generalize to
+each other remarkably well — a model trained with full attention keeps >95%
+of its accuracy when MiTA replaces attention at inference (linear-complexity
+inference for free), while compression-only mechanisms transfer worse.
+
+Run:  PYTHONPATH=src python examples/algorithmic_generalization.py
+"""
+
+import dataclasses
+
+import jax
+
+from benchmarks.common import tiny_vit_cfg
+from repro.models import vit
+
+STEPS, N, PATCH_DIM, CLASSES = 60, 128, 48, 10
+
+
+def train(backend: str):
+    from repro.optim import OptConfig, adamw_init, adamw_update
+    cfg = tiny_vit_cfg(backend, N, m=16, k=16)
+    params = vit.vit_init(jax.random.PRNGKey(0), cfg, PATCH_DIM, CLASSES)
+    opt = adamw_init(params)
+    ocfg = OptConfig(lr=2e-3, warmup_steps=5, total_steps=STEPS)
+
+    @jax.jit
+    def step(p, o, b):
+        loss, g = jax.value_and_grad(vit.vit_loss)(p, b, cfg)
+        return *adamw_update(g, o, p, ocfg)[:2], loss
+
+    for i in range(STEPS):
+        batch = vit.synthetic_vision_batch(
+            jax.random.PRNGKey(1000 + i), 32, N, PATCH_DIM, CLASSES,
+            n_signal=3, noise=1.2)
+        params, opt, _ = step(params, opt, batch)
+    return params, cfg
+
+
+def evaluate(params, cfg, infer_backend: str) -> float:
+    cfg_b = dataclasses.replace(
+        cfg, attn=dataclasses.replace(cfg.attn, backend=infer_backend))
+    batch = vit.synthetic_vision_batch(
+        jax.random.PRNGKey(9), 256, N, PATCH_DIM, CLASSES,
+        n_signal=3, noise=1.2)
+    return float(vit.vit_accuracy(params, batch, cfg_b))
+
+
+if __name__ == "__main__":
+    print("training attention -> inference attention accuracy matrix")
+    for train_backend in ("full", "mita"):
+        params, cfg = train(train_backend)
+        row = {ib: evaluate(params, cfg, ib)
+               for ib in ("full", "mita", "agent")}
+        print(f"  train={train_backend:5s}: " +
+              "  ".join(f"infer-{k}={v:.3f}" for k, v in row.items()))
+    print("(expect: full<->mita transfer retains most accuracy; "
+          "agent transfer degrades — paper Fig. 9)")

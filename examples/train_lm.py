@@ -1,0 +1,29 @@
+"""End-to-end training driver example: a few hundred steps of a MiTA LM with
+checkpoint/restart, on the qwen3-family architecture.
+
+CPU note: the default here is a ~6M-param reduced qwen3 so the run finishes
+on this container; on TPU hardware drop `--smoke` to train the real config
+on the production mesh (see src/repro/launch/train.py and DESIGN.md).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm_ckpt")
+    args = ap.parse_args()
+    sys.exit(train_main([
+        "--arch", "qwen3-0.6b", "--smoke",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "256",
+        "--lr", "1e-3",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+        "--resume",
+        "--log-every", "10",
+    ]))

@@ -1,0 +1,83 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hillclimb profiler: compile one cell (optionally at reduced unrolled
+depth so per-layer costs are visible) and dump the top collectives with
+their jax source op_names, plus the biggest fusion outputs — the 'profile'
+available without hardware (DESIGN.md roofline method).
+
+Usage:
+  PYTHONPATH=src python -m repro.analysis.profile_cell \
+      --arch qwen3-32b --shape train_4k [--depth 2] \
+      [--state-policy dh] [--attn impl=capacity,route_per_group=true]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.analysis import roofline as rl
+from repro.configs.registry import SHAPES, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--depth", type=int, default=0,
+                    help="reduced unrolled depth (0 = full scanned)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--state-policy", default="seq")
+    ap.add_argument("--attn", default="")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    if args.attn:
+        overrides = {}
+        for kv in args.attn.split(","):
+            key, val = kv.split("=")
+            overrides[key] = (val.lower() == "true" if val.lower() in
+                              ("true", "false") else
+                              (float(val) if "." in val else int(val))
+                              if val.replace(".", "").isdigit() else val)
+        arch = dataclasses.replace(arch, model=dataclasses.replace(
+            arch.model, attn=dataclasses.replace(arch.model.attn,
+                                                 **overrides)))
+    if args.depth:
+        arch = dataclasses.replace(arch, model=dataclasses.replace(
+            arch.model, n_layers=args.depth, scan_unroll=True))
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cell = build_cell(arch, shape, mesh, state_policy=args.state_policy)
+    with mesh:
+        compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                           out_shardings=cell.out_shardings,
+                           donate_argnums=cell.donate_argnums
+                           ).lower(*cell.args).compile()
+
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else ca
+    mem = compiled.memory_analysis()
+    print(f"== {args.arch} {args.shape} depth={args.depth or 'full'} "
+          f"policy={args.state_policy} attn=[{args.attn}] ==")
+    print(f"flops/chip={ca.get('flops', 0):.3e}  "
+          f"bytes/chip={ca.get('bytes accessed', 0):.3e}  "
+          f"temp_mem={mem.temp_size_in_bytes/2**30:.2f}GiB")
+    text = compiled.as_text()
+    coll = rl.collective_bytes(text)
+    print("collective bytes by kind:",
+          {k: f"{v:.3e}" for k, v in sorted(coll.items(),
+                                            key=lambda kv: -kv[1])})
+    print(f"\ntop {args.top} collectives (per appearance in HLO; ops inside "
+          "a scan body execute once per layer):")
+    for c in rl.top_collectives(text, args.top):
+        print(f"  {c['bytes']:.3e}B  {c['kind']:18s} {c['shape']:34s} "
+              f"g={c['groups']:4d}  {c['op_name']}")
+
+
+if __name__ == "__main__":
+    main()

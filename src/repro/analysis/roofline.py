@@ -1,0 +1,274 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds-per-step:
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs          (197 TF/s bf16, v5e)
+  memory     = HLO_bytes_per_chip / HBM_bw              (819 GB/s)
+  collective = collective_bytes_per_chip / ICI link bw  (50 GB/s/link)
+
+``compiled.cost_analysis()`` reports per-chip (post-SPMD-partitioning)
+flops/bytes with the standard 2·M·N·K dot convention (calibrated in
+EXPERIMENTS.md §Dry-run).  Collective bytes are not in cost_analysis —
+we parse the optimized HLO and cost each collective with ring-algorithm
+byte counts over its replica-group size n:
+
+  all-reduce      2·(n-1)/n · payload     (reduce-scatter + all-gather phases)
+  all-gather        (n-1)/n · full_result
+  reduce-scatter    (n-1)/n · full_input
+  all-to-all        (n-1)/n · payload
+  collective-permute          payload
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from collections import defaultdict
+from typing import Any, Optional
+
+PEAK_FLOPS = 197e12       # bf16 per chip (TPU v5e-class)
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].split(",")
+        return max(1, len([x for x in first if x.strip() != ""]))
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-chip collective traffic (bytes) by op kind, ring-costed."""
+    out: dict[str, float] = defaultdict(float)
+    seen_start = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        # avoid double counting async -start/-done pairs
+        opname = line.split("=")[0].strip()
+        if opname.endswith("-done)") or ("-done(" in line):
+            continue
+        key = re.sub(r"\.(\d+)$", "", opname)
+        shape_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        n = _group_size(line)
+        if n <= 1:
+            continue
+        eff = (n - 1) / n
+        if kind == "all-reduce":
+            out[kind] += 2 * eff * size
+        elif kind == "all-gather":
+            out[kind] += eff * size          # result is the full buffer
+        elif kind == "reduce-scatter":
+            out[kind] += eff * size * n      # result is 1/n of the input
+        elif kind == "all-to-all":
+            out[kind] += eff * size
+        else:  # collective-permute
+            out[kind] += size
+    return dict(out)
+
+
+def top_collectives(hlo_text: str, n: int = 15) -> list[dict]:
+    """The n largest collective ops with byte cost and jax source op_name —
+    the hillclimb profiler (maps HLO collectives back to model code)."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        grp = _group_size(line)
+        if grp <= 1:
+            continue
+        eff = (grp - 1) / grp
+        cost = {"all-reduce": 2 * eff * size, "all-gather": eff * size,
+                "reduce-scatter": eff * size * grp,
+                "all-to-all": eff * size,
+                "collective-permute": size}[kind]
+        op_name = ""
+        mm = re.search(r'op_name="([^"]*)"', line)
+        if mm:
+            op_name = mm.group(1)
+        out.append({"kind": kind, "bytes": cost, "shape": shape_str[:60],
+                    "groups": grp, "op_name": op_name[:160]})
+    out.sort(key=lambda d: -d["bytes"])
+    return out[:n]
+
+
+@dataclasses.dataclass
+class Roofline:
+    name: str
+    mesh: str
+    n_devices: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: dict[str, float]
+    model_flops: float = 0.0           # 6·N_active·D analytic, whole step
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline step time (no overlap assumption: max of terms)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / total HLO flops — catches remat/redundancy waste."""
+        total = self.flops_per_chip * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the bound:
+        (useful flop time) / (roofline step time)."""
+        t_useful = self.model_flops / self.n_devices / self.peak_flops
+        return t_useful / self.t_bound if self.t_bound else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name, "mesh": self.mesh, "n_devices": self.n_devices,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_compiled(name: str, mesh_name: str, n_devices: int, compiled,
+                  model_flops: float = 0.0) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = collective_bytes(compiled.as_text())
+    return Roofline(
+        name=name, mesh=mesh_name, n_devices=n_devices,
+        flops_per_chip=float(ca.get("flops", 0.0)),
+        bytes_per_chip=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes_per_chip=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=model_flops,
+    )
+
+
+# --------------------------------------------------- analytic MODEL_FLOPS ---
+
+def model_flops_for(arch, shape) -> float:
+    """6·N_params_active·D_tokens for train; 2·N_active·tokens for inference.
+
+    enc-dec counts encoder and decoder stacks against their own token
+    streams (t_enc frames vs dec_len tokens) separately."""
+    cfg = arch.model
+    if arch.family == "encdec":
+        enc, dec, emb = _encdec_params(arch)
+        if shape.kind == "train":
+            return 6.0 * shape.batch * (enc * arch.t_enc
+                                        + (dec + emb) * arch.dec_len)
+        if shape.kind == "prefill":
+            return 2.0 * shape.batch * enc * arch.t_enc
+        return 2.0 * shape.batch * (dec + emb)
+    n_active = active_params(arch)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.batch * shape.seq
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.batch * shape.seq
+    return 2.0 * n_active * shape.batch        # decode: one token per seq
+
+
+def _encdec_params(arch):
+    cfg = arch.model
+    d, dh = cfg.d_model, cfg.dh
+    attn = d * dh * (cfg.n_heads * 2 + cfg.n_kv * 2)
+    ffn = 2 * d * cfg.d_ff
+    enc = cfg.n_layers * (attn + ffn)
+    dec = cfg.n_layers * (2 * attn + ffn)  # self + cross
+    emb = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+    return enc, dec, emb
+
+
+def active_params(arch) -> float:
+    """Parameters touched per token (MoE counts shared + top-k experts)."""
+    cfg = arch.model
+    d, dh = cfg.d_model, cfg.dh
+    attn = d * dh * (cfg.n_heads * 2 + cfg.n_kv * 2)
+    if cfg.n_experts:
+        ffn = 3 * d * cfg.d_ff * (cfg.moe_top_k + cfg.n_shared_experts)
+        ffn += d * cfg.n_experts  # router
+    else:
+        ffn = 3 * d * cfg.d_ff
+    if arch.family == "ssm":
+        d_in, s = 2 * d, 128
+        per_layer = d * (2 * d_in + 2 * s + d_in // 64) + d_in * d
+    elif arch.family == "hybrid":
+        # super-block = 2 RG-LRU (5 Dr·Dr maps each) + 1 FFN + 1 attn block
+        rec = 5 * d * d
+        per_layer = (2 * rec + attn + 2 * (3 * d * cfg.d_ff)) / 3.0
+    elif arch.family == "encdec":
+        enc, dec, emb = _encdec_params(arch)
+        return enc + dec + emb
+    else:
+        per_layer = attn + ffn
+    emb = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+    return cfg.n_layers * per_layer + emb

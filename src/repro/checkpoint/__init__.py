@@ -1,0 +1,2 @@
+from repro.checkpoint.manager import (CheckpointManager, restore_checkpoint,
+                                      save_checkpoint)

@@ -1,0 +1,151 @@
+"""Checkpointing: async, atomic, elastic-restorable.
+
+Fault-tolerance contract (DESIGN.md):
+  * **Atomicity** — writes go to ``step_<n>.tmp/`` then ``os.rename`` to
+    ``step_<n>/``; a crash mid-write never corrupts the latest checkpoint.
+  * **Async** — `save` serializes device arrays to host (blocking only for
+    the device->host copy), then hands file I/O to a background thread so
+    the train loop resumes immediately.
+  * **Elastic restore** — arrays are stored unsharded (per-host shard files
+    + a manifest would be the multi-host extension; single-host here).  On
+    restore, arrays are `jax.device_put` with the *current* mesh's sharding,
+    so a job restarted on a different topology (e.g. 256 -> 192 chips after
+    a node failure) resumes from the same state.
+  * **Retention** — `CheckpointManager(keep=k)` prunes old steps.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub":  # ml_dtypes (bf16, fp8): np.savez
+            arr = arr.astype(np.float32)  # can't round-trip them — widen
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[dict] = None,
+                    async_: bool = False) -> threading.Thread | None:
+    """Save pytree. Returns the writer thread if async_."""
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    tmp = os.path.join(directory, f"step_{step}.tmp")
+    final = os.path.join(directory, f"step_{step}")
+
+    def write():
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        meta = {"step": step, "extra": extra or {}}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if async_:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, target_tree: Any,
+                       step: Optional[int] = None,
+                       shardings: Any = None) -> tuple[int, Any]:
+    """Restore into the structure of ``target_tree``.
+
+    ``shardings``: optional pytree of NamedSharding matching target_tree —
+    this is the *elastic* path: the stored arrays are placed onto whatever
+    mesh the restarted job runs with.
+    """
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    new_leaves = []
+    flat_shardings = (jax.tree.leaves(shardings)
+                      if shardings is not None else [None] * len(leaves_p))
+    for (kpath, leaf), shd in zip(leaves_p, flat_shardings):
+        key = "/".join(_path_str(p) for p in kpath)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        new_leaves.append(jax.device_put(arr, shd) if shd is not None
+                          else jax.numpy.asarray(arr))
+    return step, jax.tree_util.tree_unflatten(treedef, [l for l in new_leaves])
+
+
+class CheckpointManager:
+    """Keeps the last ``keep`` checkpoints; async save with join-on-exit."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._pending: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        self.wait()
+        # prune BEFORE the async write starts: keep (keep-1) existing steps,
+        # the in-flight step becomes the keep-th.
+        self._prune(margin=1)
+        self._pending = save_checkpoint(self.directory, step, tree,
+                                        extra=extra, async_=True)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def restore(self, target_tree, step=None, shardings=None):
+        return restore_checkpoint(self.directory, target_tree, step=step,
+                                  shardings=shardings)
+
+    def latest_step(self):
+        return latest_step(self.directory)
+
+    def _prune(self, margin: int = 0):
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.directory)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[: max(0, len(steps) - (self.keep - margin))]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)

@@ -1,0 +1,2 @@
+from repro.configs.registry import (ARCHS, SHAPES, ArchConfig, ShapeSpec,
+                                    get_arch, smoke_variant)

@@ -1,0 +1,23 @@
+"""recurrentgemma-9b — RG-LRU + local attn, 1:2 [arXiv:2402.19427;
+unverified].  MQA (kv=1).
+
+Implemented as 13 scanned super-blocks of (RG-LRU, RG-LRU, attention) = 39
+layers vs the reference 38 (the 1:2 pattern doesn't tile 38 exactly;
+recorded in DESIGN.md).  MiTA replaces the local-attention layers; RG-LRU
+layers are attention-free (paper-taxonomy: recurrent compression expert).
+"""
+
+from repro.configs.registry import ArchConfig, production_dtypes
+from repro.models.modules import AttnConfig, ModelConfig
+
+ARCH = ArchConfig(
+    arch_id="recurrentgemma-9b",
+    family="hybrid",
+    model=production_dtypes(ModelConfig(
+        name="recurrentgemma-9b",
+        n_layers=39, d_model=4096, n_heads=16, n_kv=1,
+        d_ff=12288, vocab=256000, rope_theta=1e4,
+        attn=AttnConfig(backend="mita", window=128, k=128, s=1,
+                        local_window=2048),
+    )),
+)

@@ -1,0 +1,110 @@
+"""Architecture registry + input-shape grid (the assigned 10 × 4 cells).
+
+Each assigned architecture lives in its own module (``repro.configs.<id>``,
+dashes -> underscores) exporting ``ARCH: ArchConfig`` with the exact public
+config, plus a reduced ``smoke_variant`` for CPU tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.models.modules import AttnConfig, ModelConfig
+
+ARCHS = [
+    "internvl2-76b", "deepseek-moe-16b", "dbrx-132b", "tinyllama-1.1b",
+    "qwen3-0.6b", "qwen3-32b", "stablelm-1.6b", "recurrentgemma-9b",
+    "mamba2-370m", "whisper-tiny",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str        # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    family: str                     # dense | moe | vlm | hybrid | ssm | encdec
+    model: ModelConfig
+    n_img_tokens: int = 0           # vlm stub frontend
+    t_enc: int = 0                  # encdec stub frontend
+    dec_len: int = 0                # encdec decoder length (whisper: 448)
+    notes: str = ""
+
+    def shape_supported(self, shape: ShapeSpec) -> tuple[bool, str]:
+        """DESIGN.md §Arch-applicability shape policy."""
+        if self.family == "encdec":
+            if shape.name == "long_500k":
+                return False, ("whisper decoder max context is 448 by "
+                               "construction; 500k decode is not defined "
+                               "for this family (DESIGN.md)")
+            if shape.kind == "decode":
+                return True, ("substituted: decoder-native decode (cap 448) "
+                              "with a 32k-scale encoder memory is not "
+                              "defined either; we lower native decode")
+        return True, ""
+
+
+def get_arch(arch_id: str, *, smoke: bool = False,
+             backend: Optional[str] = None) -> ArchConfig:
+    mod = importlib.import_module(
+        "repro.configs." + arch_id.replace("-", "_").replace(".", "_"))
+    arch: ArchConfig = mod.ARCH
+    if smoke:
+        arch = smoke_variant(arch)
+    if backend is not None:
+        arch = dataclasses.replace(
+            arch, model=dataclasses.replace(
+                arch.model,
+                attn=dataclasses.replace(arch.model.attn, backend=backend)))
+    return arch
+
+
+def production_dtypes(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, param_dtype=jnp.float32,
+                               compute_dtype=jnp.bfloat16, remat=True)
+
+
+def smoke_variant(arch: ArchConfig) -> ArchConfig:
+    """Reduced same-family config: small widths/depth/vocab, f32, no remat."""
+    m = arch.model
+    sm = dataclasses.replace(
+        m,
+        n_layers=min(m.n_layers, 6 if arch.family == "hybrid" else 2),
+        d_model=128,
+        n_heads=4,
+        n_kv=max(1, min(m.n_kv, 2 if m.n_kv < m.n_heads else 4)),
+        head_dim=32,
+        d_ff=64 if m.n_experts else 256,
+        vocab=251,
+        n_experts=min(m.n_experts, 8),
+        moe_top_k=min(m.moe_top_k, 2),
+        n_shared_experts=min(m.n_shared_experts, 1),
+        attn=dataclasses.replace(m.attn, window=16, k=16, block_q=16,
+                                 enc_window=16 if m.attn.enc_window else 0),
+        param_dtype=jnp.float32,
+        compute_dtype=jnp.float32,
+        remat=False,
+    )
+    return dataclasses.replace(
+        arch, model=sm,
+        n_img_tokens=min(arch.n_img_tokens, 16),
+        t_enc=min(arch.t_enc, 64),
+        dec_len=min(arch.dec_len, 32))

@@ -1,0 +1,24 @@
+"""whisper-tiny — enc-dec, conv frontend STUB [arXiv:2212.04356; unverified].
+
+``input_specs`` supplies precomputed frame embeddings [B, 1500, 384].
+MiTA runs bidirectionally in the encoder (the paper's native mode: m=25
+landmarks over 1500 frames, cf. the paper's vision m=k=25 default) and
+causally in the decoder; cross-attention stays full (DESIGN.md).
+"""
+
+from repro.configs.registry import ArchConfig, production_dtypes
+from repro.models.modules import AttnConfig, ModelConfig
+
+ARCH = ArchConfig(
+    arch_id="whisper-tiny",
+    family="encdec",
+    model=production_dtypes(ModelConfig(
+        name="whisper-tiny",
+        n_layers=4, d_model=384, n_heads=6, n_kv=6,
+        d_ff=1536, vocab=51865, rope_theta=1e4,
+        attn=AttnConfig(backend="mita", window=64, k=64, s=1,
+                        enc_window=60),
+    )),
+    t_enc=1500,
+    dec_len=448,
+)

@@ -1,0 +1,154 @@
+"""Baseline attention mechanisms from the paper's taxonomy (Tab. 1).
+
+These are the comparison points the paper measures against, implemented in
+the same [..., N, d] convention as `mita.py`:
+
+  * ``full_attention``    — the N-width fast-weight MLP itself (Eq. 1/3).
+  * ``local_attention``   — banded sliding-window attention (locality prior).
+  * ``linear_attention``  — scaling-by-compression into one linear layer
+                            (Katharopoulos et al., 2020; elu+1 feature map).
+  * ``moba_attention``    — scaling-by-routing with *rigid* block experts
+                            (MoBA, Lu et al. 2025): the paper's route-only,
+                            fixed-shape-expert ancestor.
+  * Agent Attention       — scaling-by-compression with landmark probing is
+                            exactly ``mita_attention`` with
+                            ``compress_only=True`` (paper Sec. 4 notes Agent
+                            is the degenerate compress-only case of MiTA).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.combine import NEG_INF, Partial, combine, partial_from_logits
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   causal: bool = False) -> jax.Array:
+    """Vanilla scaled-dot-product attention (paper Eq. 1)."""
+    d = q.shape[-1]
+    logits = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32)
+    logits = logits / math.sqrt(d)
+    if causal:
+        n = q.shape[-2]
+        mask = jnp.tril(jnp.ones((n, n), bool))
+        logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", p.astype(v.dtype), v)
+
+
+def local_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    window: int, causal: bool = True) -> jax.Array:
+    """Sliding-window attention.
+
+    Causal: query t attends keys in (t-window, t].  Implemented blockwise
+    (block size = window) so cost is O(N·window), not O(N²): each query block
+    attends to its own and the previous key block with a banded mask.
+    """
+    n, d = q.shape[-2:]
+    if n % window:
+        raise ValueError(f"N={n} not divisible by window={window}")
+    nb = n // window
+    lead = q.shape[:-2]
+    qb = q.reshape(lead + (nb, window, d))
+    kb = k.reshape(lead + (nb, window, d))
+    vb = v.reshape(lead + (nb, window, d))
+
+    # keys for block b: blocks [b-1, b] concatenated -> [..., nb, 2w, d]
+    prev_k = jnp.roll(kb, 1, axis=-3).at[..., 0, :, :].set(0.0)
+    prev_v = jnp.roll(vb, 1, axis=-3).at[..., 0, :, :].set(0.0)
+    k2 = jnp.concatenate([prev_k, kb], axis=-2)
+    v2 = jnp.concatenate([prev_v, vb], axis=-2)
+
+    logits = jnp.einsum("...qd,...kd->...qk", qb, k2) / math.sqrt(d)
+    # mask: position of query within block = i; key j in [0, 2w);
+    # absolute key offset = j - w relative to query block start.
+    i = jnp.arange(window)[:, None]
+    j = jnp.arange(2 * window)[None, :]
+    rel = j - window - i  # key position minus query position
+    if causal:
+        band = (rel <= 0) & (rel > -window)
+    else:
+        band = jnp.abs(rel) < window
+    # first block has no previous block
+    first = jnp.zeros((nb, 1, 1), bool).at[0].set(True)
+    valid = band[None] & ~(first & (j[None] < window))
+    logits = jnp.where(valid, logits, NEG_INF)
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("...qk,...kd->...qd", p.astype(v.dtype), v2)
+    return out.reshape(lead + (n, d))
+
+
+def linear_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     causal: bool = False) -> jax.Array:
+    """Linear attention with elu(x)+1 features (Katharopoulos et al.).
+
+    Bidirectional: O = phi(Q) (phi(K)^T V) / (phi(Q) phi(K)^T 1).
+    Causal: running-sum recurrence via cumulative sums (the fast-weight
+    'compressed linear layer' of the taxonomy).
+    """
+    phi_q = jax.nn.elu(q) + 1.0
+    phi_k = jax.nn.elu(k) + 1.0
+    if not causal:
+        kv = jnp.einsum("...nd,...ne->...de", phi_k, v)
+        z = jnp.einsum("...nd,...d->...n", phi_q, jnp.sum(phi_k, axis=-2))
+        out = jnp.einsum("...nd,...de->...ne", phi_q, kv)
+        return out / jnp.maximum(z[..., None], 1e-6)
+    # causal: cumulative fast-weight state
+    kv_t = jnp.einsum("...nd,...ne->...nde", phi_k, v)
+    kv_cum = jnp.cumsum(kv_t, axis=-3)
+    k_cum = jnp.cumsum(phi_k, axis=-2)
+    out = jnp.einsum("...nd,...nde->...ne", phi_q, kv_cum)
+    z = jnp.einsum("...nd,...nd->...n", phi_q, k_cum)
+    return out / jnp.maximum(z[..., None], 1e-6)
+
+
+def moba_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   block_size: int, top_blocks: int,
+                   causal: bool = True) -> jax.Array:
+    """Mixture of Block Attention (MoBA) — rigid routed experts.
+
+    Experts are contiguous blocks; routing vector of a block is its
+    mean-pooled key.  Causal rule (as in the MoBA paper): a query attends its
+    own block causally and routes to ``top_blocks`` fully-past blocks.
+    """
+    n, d = q.shape[-2:]
+    if n % block_size:
+        raise ValueError("N must divide by block_size")
+    nb = n // block_size
+    lead = q.shape[:-2]
+    kb = k.reshape(lead + (nb, block_size, d))
+    vb = v.reshape(lead + (nb, block_size, d))
+    k_mean = jnp.mean(kb, axis=-2)  # [..., nb, d]
+
+    r = jnp.einsum("...nd,...bd->...nb", q, k_mean) / math.sqrt(d)
+    pos = jnp.arange(n)
+    ends = (jnp.arange(nb) + 1) * block_size
+    if causal:
+        avail = ends[None, :] <= pos[:, None] + 1
+        # own block handled by the local branch; exclude it from routing
+        own = (pos[:, None] // block_size) == jnp.arange(nb)[None, :]
+        r = jnp.where(avail & ~own, r, NEG_INF)
+    _, sel = jax.lax.top_k(r, min(top_blocks, nb))  # [..., N, g]
+    sel_valid = jnp.take_along_axis(r, sel, axis=-1) > NEG_INF / 2
+
+    g = sel.shape[-1]
+    flat = sel.reshape(lead + (n * g,))
+    k_sel = jnp.take_along_axis(
+        kb.reshape(lead + (nb, block_size * d)), flat[..., None], axis=-2
+    ).reshape(lead + (n, g * block_size, d))
+    v_sel = jnp.take_along_axis(
+        vb.reshape(lead + (nb, block_size * d)), flat[..., None], axis=-2
+    ).reshape(lead + (n, g * block_size, d))
+    logits = jnp.einsum("...nd,...nkd->...nk", q, k_sel) / math.sqrt(d)
+    mask = jnp.repeat(sel_valid, block_size, axis=-1)
+    parts = [partial_from_logits(logits, v_sel, mask=mask)]
+
+    if causal:
+        from repro.core.mita import MiTAConfig, _local_partial
+        cfg = MiTAConfig(m=nb, k=1, causal=True)
+        parts.append(_local_partial(q, k, v, cfg))
+    return combine(parts)

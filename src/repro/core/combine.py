@@ -1,0 +1,106 @@
+"""Online-softmax combination of attention partials (paper Alg. 1, line 16).
+
+Each attention *branch* (shared expert, routed expert(s), local window) is
+computed independently and summarized by the triple
+
+    (o, m, l)  with  o = sum_j exp(s_j - m) v_j,   m = max_j s_j,
+                     l = sum_j exp(s_j - m)
+
+over its own set of logits ``s_j``.  Branches are then merged exactly as in
+FlashAttention's online softmax so the final result equals one softmax over
+the concatenation of all branches' key/value pairs (paper Eq. 10).
+
+All statistics are kept in float32 regardless of the value dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+@dataclasses.dataclass
+class Partial:
+    """Un-normalized attention partial.
+
+    Attributes:
+      o: [..., d] un-normalized weighted values, sum_j exp(s_j - m) v_j.
+      m: [...]    running max of logits (float32; NEG_INF if branch empty).
+      l: [...]    running sum of exp(s_j - m) (float32; 0 if branch empty).
+    """
+
+    o: jax.Array
+    m: jax.Array
+    l: jax.Array
+
+
+def partial_from_logits(logits: jax.Array, values: jax.Array,
+                        mask: jax.Array | None = None) -> Partial:
+    """Build a Partial from raw logits and values.
+
+    Args:
+      logits: [..., n] attention logits for one branch.
+      values: [..., n, d] corresponding values.
+      mask:   optional [..., n] boolean; False entries are excluded.
+    """
+    logits = logits.astype(jnp.float32)
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)
+    # Guard fully-masked rows: exp(NEG_INF - NEG_INF) would be exp(0)=1.
+    safe_m = jnp.where(m == NEG_INF, 0.0, m)
+    p = jnp.exp(logits - safe_m[..., None])
+    if mask is not None:
+        p = jnp.where(mask, p, 0.0)
+    else:
+        p = jnp.where(logits == NEG_INF, 0.0, p)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("...n,...nd->...d", p.astype(values.dtype), values)
+    return Partial(o=o, m=m, l=l)
+
+
+def partial_from_scores(scores: jax.Array, values: jax.Array,
+                        mask: jax.Array | None = None) -> Partial:
+    """Like ``partial_from_logits`` but for a [..., Q, K] score matrix with
+    values [..., K, d] shared across the query axis (avoids materializing
+    per-query value copies)."""
+    scores = scores.astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)
+    safe_m = jnp.where(m == NEG_INF, 0.0, m)
+    p = jnp.exp(scores - safe_m[..., None])
+    p = jnp.where(scores == NEG_INF, 0.0, p)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("...qk,...kd->...qd", p.astype(values.dtype), values)
+    return Partial(o=o, m=m, l=l)
+
+
+def combine(partials: Sequence[Partial]) -> jax.Array:
+    """Merge branch partials into the final normalized attention output.
+
+    Equivalent to a single softmax over the concatenation of all branches'
+    logits/values.  Queries with no valid key in any branch return zeros.
+    """
+    if not partials:
+        raise ValueError("need at least one partial")
+    m_star = partials[0].m
+    for p in partials[1:]:
+        m_star = jnp.maximum(m_star, p.m)
+    safe_m = jnp.where(m_star == NEG_INF, 0.0, m_star)
+
+    l_tot = jnp.zeros_like(partials[0].l)
+    o_tot = jnp.zeros_like(partials[0].o, dtype=jnp.float32)
+    for p in partials:
+        scale = jnp.exp(jnp.where(p.m == NEG_INF, NEG_INF, p.m - safe_m))
+        l_tot = l_tot + p.l * scale
+        o_tot = o_tot + p.o.astype(jnp.float32) * scale[..., None]
+
+    denom = jnp.where(l_tot == 0.0, 1.0, l_tot)
+    out = o_tot / denom[..., None]
+    return jnp.where((l_tot == 0.0)[..., None], 0.0, out).astype(partials[0].o.dtype)

@@ -1,0 +1,63 @@
+"""Landmark-query extraction strategies (paper Sec. 3.2 + Tab. 6 ablation).
+
+A landmark extractor maps per-head queries ``q: [..., N, d]`` to ``m``
+landmark queries ``[..., m, d]``.  The paper's default — average pooling over
+uniformly spaced, equal-sized windows — is ``pool1d`` (sequences) and
+``pool2d`` (vision, over the patch grid).  ``random`` and ``learnable`` are
+the Tab. 6 ablation alternatives.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pool1d(q: jax.Array, m: int) -> jax.Array:
+    """Average-pool queries over m contiguous windows. N must divide by m."""
+    n = q.shape[-2]
+    if n % m:
+        raise ValueError(f"sequence length {n} not divisible by m={m}")
+    w = n // m
+    shape = q.shape[:-2] + (m, w, q.shape[-1])
+    return jnp.mean(q.reshape(shape), axis=-2)
+
+
+def pool2d(q: jax.Array, grid_hw: tuple[int, int], m_hw: tuple[int, int]) -> jax.Array:
+    """2-D average pooling over the (H, W) patch grid (the paper's default
+    for vision).  ``q`` is [..., H*W, d]; returns [..., mh*mw, d]."""
+    h, w = grid_hw
+    mh, mw = m_hw
+    if h % mh or w % mw:
+        raise ValueError(f"grid {grid_hw} not divisible by landmark grid {m_hw}")
+    d = q.shape[-1]
+    lead = q.shape[:-2]
+    x = q.reshape(lead + (mh, h // mh, mw, w // mw, d))
+    x = jnp.mean(x, axis=(-4, -2))
+    return x.reshape(lead + (mh * mw, d))
+
+
+def random_select(q: jax.Array, m: int, seed: int = 0) -> jax.Array:
+    """Select m queries at fixed random positions (Tab. 6 'Random Selection')."""
+    n = q.shape[-2]
+    idx = jax.random.permutation(jax.random.PRNGKey(seed), n)[:m]
+    idx = jnp.sort(idx)
+    return jnp.take(q, idx, axis=-2)
+
+
+def learnable(params: jax.Array, batch_shape: tuple[int, ...]) -> jax.Array:
+    """Broadcast slow-weight landmark parameters [m, d] (Tab. 6 'Learnable')."""
+    return jnp.broadcast_to(params, batch_shape + params.shape)
+
+
+def window_ends(n: int, m: int) -> jax.Array:
+    """End position (exclusive) of each landmark window: [(i+1)*w]_i."""
+    w = n // m
+    return (jnp.arange(m) + 1) * w
+
+
+EXTRACTORS = {
+    "pool1d": pool1d,
+    "pool2d": pool2d,
+    "random": random_select,
+}

@@ -1,0 +1,249 @@
+"""Mixture-of-Top-k Attention (MiTA) — reference implementation.
+
+Paper: "Mixture-of-Top-k Attention: Efficient Attention via Scalable Fast
+Weights" (a.k.a. "MiTA Attention: Efficient Fast-Weight Scaling via a Mixture
+of Top-k Activations").
+
+This module is the *semantic definition* of MiTA: a straightforwardly
+vectorized pure-jnp implementation used as (a) the oracle for the efficient
+implementations (`mita_sparse.py`, `kernels/mita_expert_attn.py`) and (b) the
+small-scale research path.  It implements:
+
+  * the paper's bidirectional form (vision; Sec. 3.2, Alg. 1), and
+  * our causal LM adaptation (DESIGN.md "Causal MiTA"): MoBA-style window
+    causality — an expert/landmark is visible to query t only when its whole
+    window lies in the past, plus an always-on local causal branch over the
+    query's own window.
+
+Shapes follow [..., N, d] with arbitrary leading (batch, head) dims.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import landmarks as lm
+from repro.core.combine import (NEG_INF, Partial, combine,
+                                partial_from_logits, partial_from_scores)
+
+
+@dataclasses.dataclass(frozen=True)
+class MiTAConfig:
+    """MiTA hyper-parameters (paper Sec. 3.2).
+
+    Attributes:
+      m: number of landmark queries == number of routed experts.
+      k: expert width — top-k key/value pairs gathered per landmark.
+      s: routed experts per query (paper uses s=1 throughout).
+      causal: causal LM adaptation (DESIGN.md) vs the paper's bidirectional.
+      landmark: extraction strategy (Tab. 6): pool1d | pool2d | random.
+      grid_hw / m_hw: patch grid and landmark grid for pool2d.
+      include_local: causal-only — attend to the query's own window causally
+        (MoBA's "current block" rule).  Ignored in bidirectional mode.
+      route_only: drop the shared (compressed) expert  — Tab. 6 ablation.
+      compress_only: drop the routed experts           — Tab. 6 ablation
+        (this degenerates to Agent Attention).
+    """
+
+    m: int
+    k: int
+    s: int = 1
+    causal: bool = False
+    landmark: str = "pool1d"
+    grid_hw: Optional[tuple[int, int]] = None
+    m_hw: Optional[tuple[int, int]] = None
+    include_local: bool = True
+    route_only: bool = False
+    compress_only: bool = False
+    # Beyond-paper (DESIGN.md): one routing decision per KV-head group
+    # (from the group-pooled queries).  The gathered expert tiles and sort
+    # order are then shared by all G query heads of the group — G× less
+    # gather/sort traffic.  The shared-expert branch stays per-head.
+    route_per_group: bool = False
+
+    def __post_init__(self):
+        if self.route_only and self.compress_only:
+            raise ValueError("route_only and compress_only are exclusive")
+        if self.s < 1:
+            raise ValueError("s >= 1 required")
+
+
+def extract_landmarks(q: jax.Array, cfg: MiTAConfig) -> jax.Array:
+    if cfg.landmark == "pool1d":
+        return lm.pool1d(q, cfg.m)
+    if cfg.landmark == "pool2d":
+        assert cfg.grid_hw and cfg.m_hw
+        return lm.pool2d(q, cfg.grid_hw, cfg.m_hw)
+    if cfg.landmark == "random":
+        return lm.random_select(q, cfg.m)
+    raise ValueError(f"unknown landmark extractor {cfg.landmark!r}")
+
+
+def landmark_scores(k: jax.Array, q_lm: jax.Array, cfg: MiTAConfig) -> jax.Array:
+    """S^kv = K^T Q~ / sqrt(d)  (Alg. 1 line 4), causally masked if needed.
+
+    Returns [..., N, m]; entry (n, i) is the score of key n for landmark i.
+    In causal mode key n is visible to landmark i only when n < end(i).
+    """
+    d = k.shape[-1]
+    s_kv = jnp.einsum("...nd,...md->...nm", k, q_lm) / math.sqrt(d)
+    if cfg.causal:
+        n = k.shape[-2]
+        ends = lm.window_ends(n, cfg.m)  # [m]
+        visible = jnp.arange(n)[:, None] < ends[None, :]  # [N, m]
+        s_kv = jnp.where(visible, s_kv, NEG_INF)
+    return s_kv
+
+
+def topk_indices(s_kv: jax.Array, cfg: MiTAConfig):
+    """Top-k key indices per landmark (Alg. 1 line 6).
+
+    Returns (top_idx [..., m, k], valid [..., m, k]); `valid` is False for
+    padded entries (causal mode, when a window end < k).
+    """
+    scores_t = jnp.swapaxes(s_kv, -1, -2)  # [..., m, N]
+    top_vals, top_idx = jax.lax.top_k(scores_t, cfg.k)  # [..., m, k]
+    valid = top_vals > NEG_INF / 2
+    return top_idx, valid
+
+
+def gather_topk(keys: jax.Array, values: jax.Array, s_kv: jax.Array,
+                cfg: MiTAConfig):
+    """Top-k gather per landmark (Alg. 1 lines 6-7).
+
+    Returns (k_e, v_e, valid):
+      k_e, v_e: [..., m, k, d] gathered key/value pairs per expert.
+      valid:    [..., m, k] bool — False for padded (masked-out) entries,
+                which arise in causal mode when a window end < k.
+    """
+    top_idx, valid = topk_indices(s_kv, cfg)
+    lead = top_idx.shape[:-2]
+    flat_idx = top_idx.reshape(lead + (cfg.m * cfg.k,))
+    k_e = jnp.take_along_axis(keys, flat_idx[..., None], axis=-2)
+    v_e = jnp.take_along_axis(values, flat_idx[..., None], axis=-2)
+    k_e = k_e.reshape(lead + (cfg.m, cfg.k, keys.shape[-1]))
+    v_e = v_e.reshape(lead + (cfg.m, cfg.k, values.shape[-1]))
+    return k_e, v_e, valid
+
+
+def landmark_values(values: jax.Array, s_kv: jax.Array) -> jax.Array:
+    """V~ = V softmax(S^kv) over keys (Alg. 1 line 9): [..., m, d]."""
+    p = jax.nn.softmax(s_kv.astype(jnp.float32), axis=-2)  # over N
+    return jnp.einsum("...nm,...nd->...md", p.astype(values.dtype), values)
+
+
+def routing_logits(q: jax.Array, q_lm: jax.Array, cfg: MiTAConfig) -> jax.Array:
+    """Q^T Q~ / sqrt(d): [..., N, m]; availability-masked in causal mode.
+
+    Expert i is available to query t iff (i+1)*w <= t+1 (its window — keys,
+    pooled queries, and landmark value — lies entirely in the past).
+    """
+    d = q.shape[-1]
+    r = jnp.einsum("...nd,...md->...nm", q, q_lm) / math.sqrt(d)
+    if cfg.causal:
+        n = q.shape[-2]
+        ends = lm.window_ends(n, cfg.m)
+        avail = ends[None, :] <= jnp.arange(n)[:, None] + 1  # [N, m]
+        r = jnp.where(avail, r, NEG_INF)
+    return r
+
+
+def _local_partial(q: jax.Array, k: jax.Array, v: jax.Array,
+                   cfg: MiTAConfig) -> Partial:
+    """Causal attention of each query over its own window (current block)."""
+    n, d = q.shape[-2:]
+    m, w = cfg.m, n // cfg.m
+    lead = q.shape[:-2]
+    qw = q.reshape(lead + (m, w, d))
+    kw = k.reshape(k.shape[:-2] + (m, w, d))  # kv lead may broadcast (GQA)
+    vw = v.reshape(v.shape[:-2] + (m, w, d))
+    logits = jnp.einsum("...qd,...kd->...qk", qw, kw) / math.sqrt(d)
+    causal = jnp.tril(jnp.ones((w, w), bool))
+    p = partial_from_scores(logits, vw, mask=causal)
+    return Partial(
+        o=p.o.reshape(lead + (n, d)),
+        m=p.m.reshape(lead + (n,)),
+        l=p.l.reshape(lead + (n,)),
+    )
+
+
+def _shared_partial(r: jax.Array, v_lm: jax.Array) -> Partial:
+    """Queries attend to (landmark-query, landmark-value) pairs (Eq. 9);
+    reuses the routing logits ``r`` as the paper prescribes."""
+    return partial_from_scores(r, v_lm)
+
+
+def _routed_partial(q: jax.Array, k_e: jax.Array, v_e: jax.Array,
+                    valid: jax.Array, r: jax.Array, cfg: MiTAConfig) -> Partial:
+    """Each query attends to the union of its s routed experts' top-k pairs.
+
+    Reference implementation: gathers [..., N, s, k, d] — O(N s k d) memory,
+    fine for the oracle; the production paths avoid this materialization.
+    """
+    d = q.shape[-1]
+    lead = q.shape[:-2]
+    n = q.shape[-2]
+    # routing logits may be group-shared (route_per_group): broadcast-1 lead
+    r = jnp.broadcast_to(r, lead + r.shape[-2:])
+    _, e_idx = jax.lax.top_k(r, cfg.s)  # [..., N, s]
+    # expert availability for the chosen experts (causal early tokens may
+    # have no available expert at all).
+    e_avail = jnp.take_along_axis(r, e_idx, axis=-1) > NEG_INF / 2
+
+    flat_e = e_idx.reshape(lead + (n * cfg.s,))
+
+    def take_expert(arr):  # [kv_lead..., m, k, d] -> [lead..., N, s, k, d]
+        kv_lead = arr.shape[:-3]
+        out = jnp.take_along_axis(
+            arr.reshape(kv_lead + (cfg.m, cfg.k * arr.shape[-1])),
+            flat_e[..., None], axis=-2)
+        return out.reshape(lead + (n, cfg.s, cfg.k, arr.shape[-1]))
+
+    k_sel = take_expert(k_e)
+    v_sel = take_expert(v_e)
+    valid_sel = jnp.take_along_axis(
+        valid, flat_e[..., None], axis=-2
+    ).reshape(lead + (n, cfg.s, cfg.k))
+    valid_sel = valid_sel & e_avail[..., None]
+
+    logits = jnp.einsum("...nd,...nskd->...nsk", q, k_sel) / math.sqrt(d)
+    logits = logits.reshape(lead + (n, cfg.s * cfg.k))
+    vals = v_sel.reshape(lead + (n, cfg.s * cfg.k, d))
+    return partial_from_logits(logits, vals,
+                               mask=valid_sel.reshape(lead + (n, cfg.s * cfg.k)))
+
+
+def mita_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   cfg: MiTAConfig,
+                   q_landmarks: jax.Array | None = None) -> jax.Array:
+    """MiTA attention (paper Eq. 10): softmax over the concatenation of the
+    shared expert's (Q~, V~) pairs and the routed experts' top-k pairs —
+    computed branch-wise and merged with the online softmax.
+
+    ``q_landmarks``: optional query tensor to pool landmarks from — used by
+    GQA models to share one landmark/expert set per KV-head group (pass the
+    group-pooled queries with a broadcastable leading 1 on the group axis).
+    """
+    q_lm = extract_landmarks(q if q_landmarks is None else q_landmarks, cfg)
+    s_kv = landmark_scores(k, q_lm, cfg)
+    r = routing_logits(q, q_lm, cfg)
+    if cfg.route_per_group and q_landmarks is not None:
+        r_route = routing_logits(q_landmarks, q_lm, cfg)
+    else:
+        r_route = r
+
+    parts: list[Partial] = []
+    if not cfg.route_only:
+        v_lm = landmark_values(v, s_kv)
+        parts.append(_shared_partial(r, v_lm))
+    if not cfg.compress_only:
+        k_e, v_e, valid = gather_topk(k, v, s_kv, cfg)
+        parts.append(_routed_partial(q, k_e, v_e, valid, r_route, cfg))
+    if cfg.causal and cfg.include_local:
+        parts.append(_local_partial(q, k, v, cfg))
+    return combine(parts)

@@ -1,0 +1,286 @@
+"""Incremental (decode-time) MiTA — our LM-serving adaptation.
+
+The paper (§D) defers LLM decoding to future work; this module supplies it.
+The key observation: the landmark/expert structures of causal MiTA depend
+only on *completed* windows, so they can be maintained incrementally next to
+the KV cache:
+
+  * every step appends (k, v) to the cache and accumulates the query into a
+    running window sum;
+  * every ``window`` steps the just-completed window is *finalized*: its
+    landmark query (mean of the window's queries), landmark value
+    (cross-attention over the whole past), and top-k expert indices are
+    computed once — O(t·d) work amortized to O(t·d/window) per token;
+  * each decoded token then attends to: the shared expert (all finalized
+    landmark pairs, ≤ m_max), its top-s routed experts (s·k gathered cache
+    rows), and the local causal window — O(m_max + s·k + window) per token,
+    which is what makes 500k-token decode lowerable.
+
+State is per layer; models stack states over layers (scan axis 0).
+Landmarks are shared per KV-head group (DESIGN.md GQA adaptation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.combine import (NEG_INF, Partial, combine,
+                                partial_from_logits, partial_from_scores)
+
+
+class MiTADecodeState(NamedTuple):
+    """Decode-time cache for one attention layer.
+
+    Shapes (B batch, Hkv KV heads, C cache capacity, d head dim,
+    M = C // window landmark capacity, K expert width):
+      k_cache, v_cache: [B, Hkv, C, d]
+      lm_q, lm_v:       [B, Hkv, M, d]   finalized landmark queries/values
+      expert_idx:       [B, Hkv, M, K]   gathered top-k cache rows per expert
+      expert_valid:     [B, Hkv, M, K]
+      q_sum:            [B, Hkv, d]      running query sum, current window
+      t:                []               tokens currently in the cache
+    """
+
+    k_cache: jax.Array
+    v_cache: jax.Array
+    lm_q: jax.Array
+    lm_v: jax.Array
+    expert_idx: jax.Array
+    expert_valid: jax.Array
+    q_sum: jax.Array
+    t: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeConfig:
+    window: int          # w — landmark window size (train-time N/m)
+    k: int               # expert width
+    s: int = 1           # routed experts per query
+    capacity: int = 0    # C — cache capacity (set by init)
+    # Externalize the every-w-steps landmark finalize into its own jitted
+    # step (`mita_finalize_if_due`), called by the serving loop at window
+    # boundaries.  The per-token decode step then carries no O(context)
+    # branch (§Perf: the lax.cond finalize dominated the decode cell's
+    # collective/memory terms even though it runs 1/w of steps).  Semantics
+    # vs inline: the last token of each window routes among j instead of
+    # j+1 experts (1/w of tokens, one-expert-stale routing).
+    external_finalize: bool = False
+
+
+def init_decode_state(batch: int, n_kv: int, head_dim: int, capacity: int,
+                      cfg: DecodeConfig, dtype=jnp.bfloat16) -> MiTADecodeState:
+    m_max = capacity // cfg.window
+    z = lambda *s: jnp.zeros((batch, n_kv) + s, dtype)
+    return MiTADecodeState(
+        k_cache=z(capacity, head_dim), v_cache=z(capacity, head_dim),
+        lm_q=z(m_max, head_dim), lm_v=z(m_max, head_dim),
+        expert_idx=jnp.zeros((batch, n_kv, m_max, cfg.k), jnp.int32),
+        expert_valid=jnp.zeros((batch, n_kv, m_max, cfg.k), bool),
+        q_sum=jnp.zeros((batch, n_kv, head_dim), jnp.float32),
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+def mita_prefill_state(q: jax.Array, k: jax.Array, v: jax.Array,
+                       cfg: DecodeConfig, capacity: int) -> MiTADecodeState:
+    """Build a decode state from a full-sequence prefill.
+
+    q: [B, Hkv, G, N, d]; k, v: [B, Hkv, 1, N, d].  Landmark/expert caches
+    are computed with the training-path functions so decode continues
+    *exactly* where training-time causal MiTA leaves off.
+    """
+    from repro.core import mita as mref
+
+    b, hkv, _, n, d = q.shape
+    w = cfg.window
+    m_cnt = n // w
+    m_max = capacity // w
+    dtype = k.dtype
+
+    ql = jnp.mean(q, axis=2)                       # [B, Hkv, N, d] group-pool
+    state = init_decode_state(b, hkv, d, capacity, cfg, dtype=dtype)
+
+    if m_cnt > 0:
+        mcfg = mref.MiTAConfig(m=m_cnt, k=cfg.k, s=cfg.s, causal=True)
+        q_lm = jnp.mean(
+            ql[:, :, : m_cnt * w].reshape(b, hkv, m_cnt, w, d), axis=3)
+        s_kv = mref.landmark_scores(k[:, :, 0, :n], q_lm, mcfg)
+        idx, valid = mref.topk_indices(s_kv, mcfg)
+        v_lm = mref.landmark_values(v[:, :, 0, :n], s_kv)
+        pad_m = m_max - m_cnt
+        state = state._replace(
+            lm_q=jnp.pad(q_lm.astype(dtype), ((0, 0), (0, 0), (0, pad_m), (0, 0))),
+            lm_v=jnp.pad(v_lm.astype(dtype), ((0, 0), (0, 0), (0, pad_m), (0, 0))),
+            expert_idx=jnp.pad(idx, ((0, 0), (0, 0), (0, pad_m), (0, 0))),
+            expert_valid=jnp.pad(valid, ((0, 0), (0, 0), (0, pad_m), (0, 0))),
+        )
+    tail = ql[:, :, m_cnt * w:]                    # partial-window queries
+    return state._replace(
+        k_cache=jnp.pad(k[:, :, 0], ((0, 0), (0, 0), (0, capacity - n), (0, 0))),
+        v_cache=jnp.pad(v[:, :, 0], ((0, 0), (0, 0), (0, capacity - n), (0, 0))),
+        q_sum=jnp.sum(tail, axis=2).astype(jnp.float32),
+        t=jnp.asarray(n, jnp.int32),
+    )
+
+
+# ------------------------------------------------- full-attention baseline --
+
+class FullDecodeState(NamedTuple):
+    k_cache: jax.Array   # [B, Hkv, C, d]
+    v_cache: jax.Array
+    t: jax.Array
+
+
+def init_full_state(batch, n_kv, head_dim, capacity, dtype=jnp.bfloat16):
+    z = lambda *s: jnp.zeros((batch, n_kv) + s, dtype)
+    return FullDecodeState(k_cache=z(capacity, head_dim),
+                           v_cache=z(capacity, head_dim),
+                           t=jnp.zeros((), jnp.int32))
+
+
+def full_prefill_state(k: jax.Array, v: jax.Array, capacity: int):
+    """k, v: [B, Hkv, 1, N, d]."""
+    n = k.shape[-2]
+    pad = ((0, 0), (0, 0), (0, capacity - n), (0, 0))
+    return FullDecodeState(k_cache=jnp.pad(k[:, :, 0], pad),
+                           v_cache=jnp.pad(v[:, :, 0], pad),
+                           t=jnp.asarray(n, jnp.int32))
+
+
+def full_decode_step(state: FullDecodeState, q, k_new, v_new):
+    """O(t) per token — the quadratic baseline MiTA replaces.
+    q: [B, Hkv, G, d]; k_new/v_new: [B, Hkv, d]."""
+    d = q.shape[-1]
+    cap = state.k_cache.shape[-2]
+    t = state.t
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        state.k_cache, k_new[:, :, None, :].astype(state.k_cache.dtype), t, axis=2)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        state.v_cache, v_new[:, :, None, :].astype(state.v_cache.dtype), t, axis=2)
+    logits = jnp.einsum("bhgd,bhnd->bhgn", q, kc) / math.sqrt(d)
+    mask = jnp.arange(cap)[None, None, None, :] <= t
+    out = combine([partial_from_scores(logits, vc, mask=mask)])
+    return out, FullDecodeState(k_cache=kc, v_cache=vc, t=t + 1)
+
+
+def mita_finalize_if_due(state: MiTADecodeState,
+                         cfg: DecodeConfig) -> MiTADecodeState:
+    """External-finalize step: call from the serving loop every ``window``
+    tokens (or unconditionally — it no-ops off-boundary).  This is its own
+    jitted program so the per-token decode step stays O(m + s·k + w)."""
+    return jax.lax.cond(
+        (state.t % cfg.window == 0) & (state.t > 0),
+        lambda s: _finalize_window(s, cfg, s.t),
+        lambda s: s,
+        state)
+
+
+def _finalize_window(state: MiTADecodeState, cfg: DecodeConfig,
+                     t_new: jax.Array) -> MiTADecodeState:
+    """Finalize landmark i = t_new//w - 1 from the accumulated query sum."""
+    d = state.k_cache.shape[-1]
+    cap = state.k_cache.shape[-2]
+    i = t_new // cfg.window - 1
+    q_lm = (state.q_sum / cfg.window).astype(state.k_cache.dtype)  # [B,Hkv,d]
+
+    scores = jnp.einsum("bhnd,bhd->bhn", state.k_cache, q_lm) / math.sqrt(d)
+    visible = jnp.arange(cap)[None, None, :] < t_new
+    scores = jnp.where(visible, scores.astype(jnp.float32), NEG_INF)
+    top_vals, top_idx = jax.lax.top_k(scores, cfg.k)        # [B,Hkv,K]
+    valid = top_vals > NEG_INF / 2
+    p = jax.nn.softmax(scores, axis=-1)
+    v_lm = jnp.einsum("bhn,bhnd->bhd",
+                      p.astype(state.v_cache.dtype), state.v_cache)
+
+    return state._replace(
+        lm_q=state.lm_q.at[:, :, i, :].set(q_lm),
+        lm_v=state.lm_v.at[:, :, i, :].set(v_lm),
+        expert_idx=state.expert_idx.at[:, :, i, :].set(top_idx),
+        expert_valid=state.expert_valid.at[:, :, i, :].set(valid),
+        q_sum=jnp.zeros_like(state.q_sum),
+    )
+
+
+def mita_decode_step(state: MiTADecodeState, q: jax.Array, k_new: jax.Array,
+                     v_new: jax.Array, cfg: DecodeConfig) -> tuple[jax.Array, MiTADecodeState]:
+    """One decode step.
+
+    Args:
+      q:     [B, Hkv, G, d] new queries (G = query heads per KV group).
+      k_new: [B, Hkv, d] new key;  v_new: [B, Hkv, d] new value.
+    Returns: (output [B, Hkv, G, d], updated state).
+    """
+    b, hkv, g, d = q.shape
+    cap = state.k_cache.shape[-2]
+    m_max = state.lm_q.shape[-2]
+    t = state.t
+
+    # 1. append to cache, accumulate window query sum
+    state = state._replace(
+        k_cache=jax.lax.dynamic_update_slice_in_dim(
+            state.k_cache, k_new[:, :, None, :].astype(state.k_cache.dtype), t, axis=2),
+        v_cache=jax.lax.dynamic_update_slice_in_dim(
+            state.v_cache, v_new[:, :, None, :].astype(state.v_cache.dtype), t, axis=2),
+        q_sum=state.q_sum + jnp.mean(q, axis=2).astype(jnp.float32),
+    )
+    t_new = t + 1
+
+    # 2. finalize the window if it just completed (amortized O(t/w) per step)
+    if not cfg.external_finalize:
+        state = jax.lax.cond(
+            t_new % cfg.window == 0,
+            lambda s: _finalize_window(s, cfg, t_new),
+            lambda s: s,
+            state)
+
+    # 3. attend: shared + routed + local window
+    if cfg.external_finalize:
+        # the serving loop finalizes at window boundaries; the last token of
+        # a window does not yet see its own window's landmark
+        m_cnt = t // cfg.window
+    else:
+        m_cnt = t_new // cfg.window  # finalized landmarks
+    lm_mask = jnp.arange(m_max)[None, None, None, :] < m_cnt
+
+    # routing / shared logits: [B, Hkv, G, M]
+    r = jnp.einsum("bhgd,bhmd->bhgm", q, state.lm_q) / math.sqrt(d)
+    r = jnp.where(lm_mask, r.astype(jnp.float32), NEG_INF)
+    parts: list[Partial] = [partial_from_scores(r, state.lm_v)]
+
+    # routed experts: gather s·k cache rows per (b, h, g)
+    s_ = min(cfg.s, m_max)
+    _, e_idx = jax.lax.top_k(r, s_)                         # [B,Hkv,G,s]
+    e_ok = jnp.take_along_axis(r, e_idx, axis=-1) > NEG_INF / 2
+    flat_e = e_idx.reshape(b, hkv, g * s_)
+    rows = jnp.take_along_axis(
+        state.expert_idx.reshape(b, hkv, m_max, cfg.k),
+        flat_e[..., None], axis=2)                          # [B,Hkv,g*s,K]
+    rows_valid = jnp.take_along_axis(
+        state.expert_valid, flat_e[..., None], axis=2)
+    rows = rows.reshape(b, hkv, g * s_ * cfg.k)
+    k_sel = jnp.take_along_axis(state.k_cache, rows[..., None], axis=2)
+    v_sel = jnp.take_along_axis(state.v_cache, rows[..., None], axis=2)
+    k_sel = k_sel.reshape(b, hkv, g, s_ * cfg.k, d)
+    v_sel = v_sel.reshape(b, hkv, g, s_ * cfg.k, d)
+    logits = jnp.einsum("bhgd,bhgkd->bhgk", q, k_sel) / math.sqrt(d)
+    mask = (rows_valid.reshape(b, hkv, g, s_, cfg.k)
+            & e_ok[..., None]).reshape(b, hkv, g, s_ * cfg.k)
+    parts.append(partial_from_logits(logits, v_sel, mask=mask))
+
+    # local: the query's OWN window [ (t//w)*w, t ] — note t//w, not
+    # t_new//w: the last token of a window still attends its window locally
+    # (matching training-time `_local_partial`).
+    start = (t // cfg.window) * cfg.window
+    k_loc = jax.lax.dynamic_slice_in_dim(state.k_cache, start, cfg.window, axis=2)
+    v_loc = jax.lax.dynamic_slice_in_dim(state.v_cache, start, cfg.window, axis=2)
+    loc_logits = jnp.einsum("bhgd,bhwd->bhgw", q, k_loc) / math.sqrt(d)
+    loc_mask = (jnp.arange(cfg.window)[None, None, None, :] + start) < t_new
+    parts.append(partial_from_scores(loc_logits, v_loc, mask=loc_mask))
+
+    out = combine(parts)
+    return out, state._replace(t=t_new)

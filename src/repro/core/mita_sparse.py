@@ -1,0 +1,287 @@
+"""Efficient MiTA — the production O(N·(m+ks)) implementations of Alg. 1.
+
+Two interchangeable routed-branch strategies (both exact w.r.t. `mita.py`
+up to documented drop conditions):
+
+``sorted``  — the paper's Alg. 1 adapted to TPU static shapes: sub-queries are
+    sorted by expert assignment (line 13); attention is computed in fixed-size
+    query blocks.  Because assignments are sorted, a block touches a
+    *contiguous* range of experts; we load a static span of ``expert_span``
+    expert KV tiles per block and mask.  Expected span is
+    1 + (m-1)/(N/block_q) ≪ expert_span; queries whose expert falls outside
+    the span (pathological skew) fall back to shared+local branches only.
+
+``capacity`` — beyond-paper optimization: classic MoE capacity routing.  Each
+    expert processes at most ``C = ceil(s·N/m · capacity_factor)`` queries;
+    attention is a fully dense [m, C, k] batched matmul (zero masked-lane
+    waste beyond the capacity factor).  Overflowing queries drop their routed
+    branch.  Use with the load-balance auxiliary loss (`aux_load_balance`).
+
+The gather of the m·k expert key/value rows happens **once per layer** and is
+reused by every routed query — the TPU-native restructuring of the paper's
+per-query gather bottleneck (DESIGN.md, "Hardware adaptation").
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mita as mref
+from repro.core.combine import (NEG_INF, Partial, combine,
+                                partial_from_scores)
+from repro.core.mita import MiTAConfig
+
+
+def _routed_sorted(q, k_e, v_e, valid, r, cfg: MiTAConfig,
+                   block_q: int, expert_span: int) -> Partial:
+    """Sorted block-span routed branch.  q: [..., N, d].
+
+    ``r`` may have broadcast-1 lead dims (route_per_group): the assignment,
+    sort order, and expert-tile spans are then computed ONCE per KV group
+    and shared by all G query heads — the G× traffic saving is real because
+    every group-shared array below keeps the broadcast-1 lead (``rlead``).
+    """
+    lead = q.shape[:-2]
+    rlead = r.shape[:-2]                               # may be broadcast-1
+    n, d = q.shape[-2:]
+    s = cfg.s
+    m, kk = cfg.m, cfg.k
+
+    if s == 1:   # argmax is a plain reduction — shards cleanly where the
+        # sort-based top_k forces GSPMD to all-gather the [*, N, m] logits
+        # (§Perf iteration: qwen3-32b train)
+        e_idx = jnp.argmax(r, axis=-1)[..., None]
+        e_ok = (jnp.max(r, axis=-1) > NEG_INF / 2)[..., None]
+    else:
+        _, e_idx = jax.lax.top_k(r, s)                 # [rlead, N, s]
+        e_ok = jnp.take_along_axis(r, e_idx, axis=-1) > NEG_INF / 2
+
+    # flatten sub-queries: each query contributes s routed lookups
+    ns = n * s
+    a = e_idx.reshape(rlead + (ns,))                   # assignment per sub-q
+    ok = e_ok.reshape(rlead + (ns,))
+    # push invalid sub-queries to the end so they don't pollute spans
+    a_sortkey = jnp.where(ok, a, m)
+    order = jnp.argsort(a_sortkey, axis=-1, stable=True)     # [rlead, ns]
+    inv = jnp.argsort(order, axis=-1)
+
+    sub_q = jnp.repeat(q, s, axis=-2)                  # [lead..., ns, d]
+    q_sorted = jnp.take_along_axis(sub_q, order[..., None], axis=-2)
+    a_sorted = jnp.take_along_axis(a_sortkey, order, axis=-1)
+
+    if ns % block_q:
+        raise ValueError(f"N*s={ns} not divisible by block_q={block_q}")
+
+    if expert_span == 0:   # Pallas kernel path: dynamic expert walk
+        from repro.kernels.ops import routed_expert_partial
+        o_s, m_s, l_s = routed_expert_partial(
+            q_sorted, jnp.broadcast_to(a_sorted, lead + (ns,)),
+            k_e, v_e, valid, block_q=block_q)
+        o = jnp.take_along_axis(o_s, inv[..., None], axis=-2)
+        mm = jnp.take_along_axis(m_s, inv, axis=-1)
+        ll = jnp.take_along_axis(l_s, inv, axis=-1)
+        return _merge_subqueries(o, mm, ll, lead, n, s, q.dtype)
+
+    nb = ns // block_q
+    qb = q_sorted.reshape(lead + (nb, block_q, d))
+    ab = a_sorted.reshape(rlead + (nb, block_q))
+    lo = jnp.minimum(ab[..., 0], m - 1)                # first expert in block
+
+    # static span of expert tiles per block: ids lo..lo+span-1.  Slots past
+    # expert m-1 are gathered clipped but masked out below (a clipped slot
+    # would otherwise duplicate expert m-1 in the softmax).
+    raw_ids = lo[..., None] + jnp.arange(expert_span)           # [..., nb, e]
+    slot_ok = raw_ids <= m - 1
+    # sentinel m+1: must differ from the invalid-sub-query sort key (m)
+    span_ids = jnp.where(slot_ok, raw_ids, m + 1)
+    gather_ids = jnp.minimum(raw_ids, m - 1)
+    flat_span = gather_ids.reshape(rlead + (nb * expert_span,))
+
+    def take(arr, trailing):
+        """[kv_lead..., m, *trailing-dims] -> [lead..., nb, span, width].
+        kv_lead may have broadcast-1 dims (GQA group-shared experts)."""
+        kv_lead = arr.shape[:-(trailing + 1)]
+        width = math.prod(arr.shape[-trailing:])
+        arr2 = arr.reshape(kv_lead + (m, width))
+        out = jnp.take_along_axis(arr2, flat_span[..., None], axis=-2)
+        return out.reshape(rlead + (nb, expert_span, width))
+
+    k_span = take(k_e, 2).reshape(rlead + (nb, expert_span, kk, d))
+    v_span = take(v_e, 2).reshape(rlead + (nb, expert_span, kk, d))
+    valid_span = take(valid, 1)                        # [..., nb, span, kk]
+
+    scores = jnp.einsum("...bqd,...bekd->...bqek", qb, k_span) / math.sqrt(d)
+    # mask: sub-query's expert must equal the span slot's expert id
+    match = ab[..., :, None] == span_ids[..., None, :]          # [..., nb, q, e]
+    mask = match[..., None] & valid_span[..., None, :, :]       # [...,nb,q,e,kk]
+    p = partial_from_scores(
+        scores.reshape(lead + (nb, block_q, expert_span * kk)),
+        v_span.reshape(rlead + (nb, expert_span * kk, d)),
+        mask=mask.reshape(rlead + (nb, block_q, expert_span * kk)))
+
+    # unsort sub-queries, then merge the s partials of each query
+    o = jnp.take_along_axis(p.o.reshape(lead + (ns, d)), inv[..., None], axis=-2)
+    mm = jnp.take_along_axis(p.m.reshape(lead + (ns,)), inv, axis=-1)
+    ll = jnp.take_along_axis(p.l.reshape(lead + (ns,)), inv, axis=-1)
+    return _merge_subqueries(o, mm, ll, lead, n, s, q.dtype)
+
+
+def _merge_subqueries(o, mm, ll, lead, n, s, dtype) -> Partial:
+    """Merge the s per-sub-query partials of each query (online softmax)."""
+    d = o.shape[-1]
+    if s == 1:
+        return Partial(o=o.reshape(lead + (n, d)), m=mm, l=ll)
+    subs = [Partial(o=o.reshape(lead + (n, s, d))[..., j, :],
+                    m=mm.reshape(lead + (n, s))[..., j],
+                    l=ll.reshape(lead + (n, s))[..., j]) for j in range(s)]
+    m_star = subs[0].m
+    for pp in subs[1:]:
+        m_star = jnp.maximum(m_star, pp.m)
+    safe = jnp.where(m_star == NEG_INF, 0.0, m_star)
+    l_tot = sum(pp.l * jnp.exp(jnp.where(pp.m == NEG_INF, NEG_INF, pp.m - safe))
+                for pp in subs)
+    o_tot = sum(pp.o.astype(jnp.float32)
+                * jnp.exp(jnp.where(pp.m == NEG_INF, NEG_INF, pp.m - safe))[..., None]
+                for pp in subs)
+    return Partial(o=o_tot.astype(dtype), m=m_star, l=l_tot)
+
+
+def _routed_capacity(q, k_e, v_e, valid, r, cfg: MiTAConfig,
+                     capacity_factor: float) -> Partial:
+    """Capacity-routed branch (beyond-paper, fully dense)."""
+    lead = q.shape[:-2]
+    n, d = q.shape[-2:]
+    r = jnp.broadcast_to(r, lead + r.shape[-2:])   # group-shared routing ok
+    s, m, kk = cfg.s, cfg.m, cfg.k
+    cap = int(math.ceil(s * n / m * capacity_factor))
+    cap = max(8, ((cap + 7) // 8) * 8)  # pad to lane multiple
+
+    _, e_idx = jax.lax.top_k(r, s)                     # [..., N, s]
+    e_ok = jnp.take_along_axis(r, e_idx, axis=-1) > NEG_INF / 2
+    a = e_idx.reshape(lead + (n * s,))
+    ok = e_ok.reshape(lead + (n * s,))
+
+    # position of each sub-query within its expert's queue (stable order)
+    onehot = jax.nn.one_hot(jnp.where(ok, a, m), m + 1, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=-2) - 1              # [..., ns, m+1]
+    slot = jnp.take_along_axis(
+        pos, jnp.where(ok, a, m)[..., None], axis=-1)[..., 0]
+    keep = ok & (slot < cap)
+
+    # scatter sub-queries into [..., m, cap, d]
+    flat_dst = jnp.where(keep, a * cap + slot, m * cap)
+    qpad = jnp.zeros(lead + (m * cap + 1, d), q.dtype)
+    q_exp = _scatter_rows(qpad, flat_dst, jnp.repeat(q, s, axis=-2))
+    q_exp = q_exp[..., : m * cap, :].reshape(lead + (m, cap, d))
+
+    scores = jnp.einsum("...mcd,...mkd->...mck", q_exp, k_e) / math.sqrt(d)
+    p = partial_from_scores(scores, v_e, mask=valid[..., None, :])
+    # gather partials back per sub-query
+    src = jnp.where(keep, a * cap + slot, m * cap)
+    o = _gather_rows(_pad_rows(p.o.reshape(lead + (m * cap, d))), src)
+    mm = _gather_vals(_pad_vals(p.m.reshape(lead + (m * cap,)), NEG_INF), src)
+    ll = _gather_vals(_pad_vals(p.l.reshape(lead + (m * cap,)), 0.0), src)
+    mm = jnp.where(keep, mm, NEG_INF)
+    ll = jnp.where(keep, ll, 0.0)
+    o = jnp.where(keep[..., None], o, 0.0)
+
+    if s == 1:
+        return Partial(o=o, m=mm, l=ll)
+    sub = [Partial(o=o.reshape(lead + (n, s, d))[..., j, :],
+                   m=mm.reshape(lead + (n, s))[..., j],
+                   l=ll.reshape(lead + (n, s))[..., j]) for j in range(s)]
+    m_star = sub[0].m
+    for pp in sub[1:]:
+        m_star = jnp.maximum(m_star, pp.m)
+    safe = jnp.where(m_star == NEG_INF, 0.0, m_star)
+    l_tot = sum(pp.l * jnp.exp(jnp.where(pp.m == NEG_INF, NEG_INF, pp.m - safe))
+                for pp in sub)
+    o_tot = sum(pp.o.astype(jnp.float32)
+                * jnp.exp(jnp.where(pp.m == NEG_INF, NEG_INF, pp.m - safe))[..., None]
+                for pp in sub)
+    return Partial(o=o_tot.astype(q.dtype), m=m_star, l=l_tot)
+
+
+def _scatter_rows(dst, idx, rows):
+    return dst.at[..., idx, :].set(rows) if dst.ndim == 2 else _batched_scatter(dst, idx, rows)
+
+
+def _batched_scatter(dst, idx, rows):
+    def one(d_, i_, r_):
+        return d_.at[i_, :].set(r_)
+    fn = one
+    for _ in range(dst.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(dst, idx, rows)
+
+
+def _gather_rows(src, idx):
+    return jnp.take_along_axis(src, idx[..., None], axis=-2)
+
+
+def _gather_vals(src, idx):
+    return jnp.take_along_axis(src, idx, axis=-1)
+
+
+def _pad_rows(x):
+    pad = [(0, 0)] * (x.ndim - 2) + [(0, 1), (0, 0)]
+    return jnp.pad(x, pad)
+
+
+def _pad_vals(x, val):
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, 1)]
+    return jnp.pad(x, pad, constant_values=val)
+
+
+def aux_load_balance(r: jax.Array, cfg: MiTAConfig) -> jax.Array:
+    """Switch-style load-balance loss over expert assignments (beyond-paper;
+    keeps the capacity path's drop rate low)."""
+    probs = jax.nn.softmax(jnp.where(r <= NEG_INF / 2, NEG_INF, r), axis=-1)
+    top = jnp.argmax(r, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top, cfg.m, dtype=jnp.float32), axis=-2)
+    imp = jnp.mean(probs, axis=-2)
+    return cfg.m * jnp.mean(jnp.sum(frac * imp, axis=-1))
+
+
+def mita_attention_sparse(
+    q: jax.Array, k: jax.Array, v: jax.Array, cfg: MiTAConfig,
+    impl: Literal["sorted", "capacity", "pallas"] = "sorted",
+    block_q: int = 128, expert_span: int = 4,
+    capacity_factor: float = 1.25,
+    q_landmarks: jax.Array | None = None,
+) -> jax.Array:
+    """Production MiTA.  Semantics == `mita.mita_attention` (oracle), with the
+    routed branch computed by the selected static-shape strategy."""
+    q_lm = mref.extract_landmarks(q if q_landmarks is None else q_landmarks,
+                                  cfg)
+    s_kv = mref.landmark_scores(k, q_lm, cfg)
+    r = mref.routing_logits(q, q_lm, cfg)
+    if cfg.route_per_group and q_landmarks is not None:
+        r_route = mref.routing_logits(q_landmarks, q_lm, cfg)
+    else:
+        r_route = r
+
+    parts: list[Partial] = []
+    if not cfg.route_only:
+        parts.append(mref._shared_partial(r, mref.landmark_values(v, s_kv)))
+    if not cfg.compress_only:
+        k_e, v_e, valid = mref.gather_topk(k, v, s_kv, cfg)
+        if impl == "sorted":
+            bq = min(block_q, q.shape[-2] * cfg.s)
+            parts.append(_routed_sorted(q, k_e, v_e, valid, r_route, cfg, bq,
+                                        min(expert_span, cfg.m)))
+        elif impl == "pallas":
+            # expert_span=0 routes _routed_sorted to the Pallas kernel
+            bq = min(block_q, q.shape[-2] * cfg.s)
+            parts.append(_routed_sorted(q, k_e, v_e, valid, r_route, cfg,
+                                        bq, 0))
+        else:
+            parts.append(_routed_capacity(q, k_e, v_e, valid, r_route, cfg,
+                                          capacity_factor))
+    if cfg.causal and cfg.include_local:
+        parts.append(mref._local_partial(q, k, v, cfg))
+    return combine(parts)

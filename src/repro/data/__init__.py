@@ -1,0 +1,3 @@
+from repro.data.pipeline import (DataConfig, SyntheticLMStream,
+                                 synthetic_batch, synthetic_image_embeds,
+                                 synthetic_audio_embeds)

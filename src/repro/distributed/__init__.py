@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (batch_spec, param_specs,
+                                        state_specs, tree_shardings)

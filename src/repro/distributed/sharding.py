@@ -1,0 +1,165 @@
+"""Logical-axis sharding rules: param/batch/state pytrees -> PartitionSpecs.
+
+Parallelism map (DESIGN.md):
+  * DP  — batch over ("pod", "data").
+  * TP  — attention heads / FFN hidden / vocab over "model"
+          (Megatron pairing: column-parallel in-proj, row-parallel out-proj,
+          so each block needs only one all-reduce per pass).
+  * EP  — MoE expert dim over "model".
+  * SP  — sequence over "data" (+"model" for decode caches) when the batch
+          axis is too small to shard (long-context decode, batch 1).
+
+Rules are matched on the flattened parameter path (regex on the joined
+path).  Stacked per-layer params (leading scan dim) get `None` prepended
+automatically.  Unmatched params are replicated — a safe default.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# (path regex, spec WITHOUT the stacked layer dim)
+PARAM_RULES: list[tuple[str, P]] = [
+    # attention projections (also whisper xattn; rglru/mamba in/out)
+    (r"(attn|xattn)/w[qkv]$", P(None, "model")),
+    (r"(attn|xattn)/wo$", P("model", None)),
+    # dense FFN: column-parallel in, row-parallel out
+    (r"(ffn|ffn1|mlp|shared)/w[ig]$", P(None, "model")),
+    (r"(ffn|ffn1|mlp|shared)/wo$", P("model", None)),
+    (r"(mlp)/bi$", P("model")),
+    # MoE experts: EP over "model"
+    (r"moe/w[ig]$", P("model", None, None)),
+    (r"moe/wo$", P("model", None, None)),
+    (r"moe/router$", P(None, None)),
+    # embeddings: vocab-sharded
+    (r"emb/tok$", P("model", None)),
+    (r"emb/head$", P(None, "model")),
+    # recurrent blocks: recurrent width over "model"
+    (r"(rec\d|.*)/(w_in|w_gate|w_a|w_x)$", P(None, "model")),
+    (r"(rec\d|.*)/w_out$", P("model", None)),
+    (r"conv$", P(None, "model")),
+    (r"(b_a|b_x|lam)$", P("model")),
+    (r"ln_y$", P("model")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+_STACKED_ROOTS = ("blocks", "supers", "enc", "dec")
+
+
+def spec_for_param(path_str: str, ndim: int,
+                   shape: tuple[int, ...],
+                   model_size: int = 1) -> P:
+    stacked = any(f"{r}/" in path_str or path_str.startswith(f"{r}/")
+                  for r in _STACKED_ROOTS)
+    base_ndim = ndim - 1 if stacked else ndim
+    for pattern, spec in PARAM_RULES:
+        if re.search(pattern, path_str):
+            if len(spec) > base_ndim:
+                continue
+            padded = tuple(spec) + (None,) * (base_ndim - len(spec))
+            # verify divisibility of the sharded dims; replicate otherwise
+            dims = shape[1:] if stacked else shape
+            ok = all(ax is None or dims[i] % model_size == 0
+                     for i, ax in enumerate(padded))
+            if not ok:
+                padded = tuple(None for _ in padded)
+            return P(*(((None,) + padded) if stacked else padded))
+    return P(*([None] * ndim))
+
+
+def param_specs(params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree for a model parameter pytree."""
+    msize = int(np.prod([mesh.shape[a] for a in ("model",)
+                         if a in mesh.shape]))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [spec_for_param(_path_str(p), np.ndim(x), np.shape(x), msize)
+             for p, x in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(mesh: Mesh, batch: int, rank: int = 2,
+               shard_seq_if_small: bool = True) -> P:
+    """Spec for [B, S, ...] host batches.  If B can't be sharded (e.g.
+    long-context batch 1) shard the sequence dim instead (SP)."""
+    dp = batch_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    if batch % dp_size == 0:
+        return P(dp, *([None] * (rank - 1)))
+    if shard_seq_if_small and rank >= 2:
+        return P(None, dp, *([None] * (rank - 2)))
+    return P(*([None] * rank))
+
+
+def state_specs(state: Any, mesh: Mesh, batch: int,
+                policy: str = "seq") -> Any:
+    """Specs for stacked decode-state pytrees [L, B, ...].
+
+    policy="seq" (baseline): KV caches ([L, B, Hkv, C, d]) shard B over DP
+    axes and the cache length C over "model" (kv-head counts are often <
+    TP width, so TP shards the *time* dim).  The dry-run showed this makes
+    every cache update/slice a cross-shard reshard — GSPMD "involuntary full
+    rematerialization" — so decode cells are collective-bound.
+
+    policy="dh" (§Perf optimized): shard the trailing head/feature dim over
+    "model" instead.  Cache writes (dynamic_update_slice over C) and local-
+    window slices become shard-local; attention contractions over the
+    sharded d produce small partial-sum all-reduces ([B,H,G,·] logits)
+    instead of cache-sized reshards.
+    """
+    dp = batch_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    msize = mesh.shape.get("model", 1)
+    b_ax = dp if batch % dp_size == 0 else None
+
+    def spec(path, x):
+        nd = np.ndim(x)
+        shape = np.shape(x)
+        name = _path_str(path)
+        if nd <= 2:      # step counters, scalars
+            return P(*([None] * nd))
+        axes: list = [None] * nd
+        axes[1] = b_ax
+        if policy == "dh":
+            if shape[-1] % msize == 0 and shape[-1] >= msize:
+                axes[-1] = "model"
+            return P(*axes)
+        seq_dim = 3 if nd >= 4 else nd - 1  # [L,B,H,C,(d)] -> C at idx 3
+        if nd >= 4 and shape[seq_dim] % msize == 0:
+            if b_ax is None and shape[seq_dim] % (msize * dp_size) == 0:
+                axes[seq_dim] = dp + ("model",)
+            else:
+                axes[seq_dim] = "model"
+        if name.endswith("t"):
+            return P(*([None] * nd))
+        return P(*axes)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, x) for p, x in flat])
+
+
+def tree_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,113 @@
+"""Flash attention for TPU (Pallas): online-softmax with explicit BlockSpec
+VMEM tiling.
+
+Grid layout: (batch·heads, q_blocks, kv_blocks).  TPU grid iteration is
+sequential over the trailing dim, so the kv dimension accumulates into the
+same output block (revisited across kv steps) with running (max, sumexp)
+statistics in VMEM scratch — the standard TPU flash pattern.  Block shapes
+default to (128, d) — MXU-aligned for d ∈ {64, 128, 256}.
+
+Causal masking skips fully-masked kv blocks via `pl.when` (no wasted MXU
+work above the diagonal at block granularity).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, causal: bool, scale: float, block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(jnp.where(m_prev == NEG_INF, NEG_INF, m_prev - m_cur))
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(s == NEG_INF, 0.0, p)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        v = v_ref[0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_cur
+
+    if causal:
+        # skip blocks entirely above the diagonal
+        pl.when((ki * block_k) <= (qi * block_q + block_q - 1))(compute)
+    else:
+        compute()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k",
+                                    "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = False, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False) -> jax.Array:
+    """q,k,v: [B, H, N, d] -> [B, H, N, d]."""
+    b, h, n, d = q.shape
+    nk = k.shape[-2]
+    block_q = min(block_q, n)
+    block_k = min(block_k, nk)
+    if n % block_q or nk % block_k:
+        raise ValueError("sequence length must divide block size")
+    qf = q.reshape(b * h, n, d)
+    kf = k.reshape(b * h, nk, d)
+    vf = v.reshape(b * h, nk, d)
+
+    grid = (b * h, n // block_q, nk // block_k)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, causal=causal,
+                          scale=1.0 / math.sqrt(d),
+                          block_q=block_q, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, n, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, n, d)

@@ -1,0 +1,129 @@
+"""MiTA routed-expert attention kernel (paper Alg. 1 line 14, TPU-native).
+
+The GPU reference implementation uses varlen FlashAttention with cu_seqlens;
+TPU kernels want static shapes, so (DESIGN.md "Hardware adaptation"):
+
+  * sub-queries arrive *sorted by expert id* — a fixed-size query block then
+    touches a contiguous expert range [a[0], a[-1]];
+  * each expert's top-k KV tile ([K, d]) is resident in VMEM (the gathered
+    tiles k_e/v_e total m·K·d, materialized once per layer — the TPU answer
+    to the paper's per-query gather bottleneck);
+  * the kernel walks the block's expert range with a dynamically-bounded
+    `fori_loop`, computing one MXU matmul per (query-block × expert tile)
+    with an equality mask — load imbalance costs masked lanes, never a
+    recompile.
+
+Outputs are un-normalized online-softmax partials (o, m, l) merged with the
+shared-expert and local-window branches by `repro.core.combine` — exactly
+the paper's Alg. 1 line 16.
+
+VMEM budget: the full expert bank k_e+v_e is 2·m·K·d·2B; ops.py dispatches
+to this kernel only when that fits (≲8 MiB), else falls back to the XLA
+sorted-span path.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _expert_kernel(a_ref, q_ref, ke_ref, ve_ref, bias_ref,
+                   o_ref, m_ref, l_ref,
+                   *, n_experts: int, k_width: int, scale: float,
+                   block_q: int):
+    """One (bh, q-block) step: walk experts [a[0], a[-1]] of this block."""
+    a = a_ref[0]                                   # [block_q] int32, sorted
+    q = q_ref[0].astype(jnp.float32) * scale       # [block_q, d]
+    d = q.shape[-1]
+
+    lo = jnp.minimum(a[0], n_experts - 1)
+    hi = jnp.minimum(a[block_q - 1], n_experts - 1)
+
+    def body(e, carry):
+        m_prev, l_prev, acc = carry
+        kt = ke_ref[0, pl.dslice(e * k_width, k_width), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, kt, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s + bias_ref[0, pl.dslice(e * k_width, k_width)][None, :]
+        s = jnp.where((a == e)[:, None], s, NEG_INF)   # routing mask
+
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(jnp.where(m_prev == NEG_INF, NEG_INF, m_prev - m_cur))
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(s == NEG_INF, 0.0, p)
+        vt = ve_ref[0, pl.dslice(e * k_width, k_width), :].astype(jnp.float32)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, vt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_cur, l_prev * alpha + jnp.sum(p, axis=-1), acc
+
+    init = (jnp.full((block_q,), NEG_INF, jnp.float32),
+            jnp.zeros((block_q,), jnp.float32),
+            jnp.zeros((block_q, d), jnp.float32))
+    m_out, l_out, acc = jax.lax.fori_loop(lo, hi + 1, body, init)
+
+    o_ref[0] = acc.astype(o_ref.dtype)
+    m_ref[0] = m_out
+    l_ref[0] = l_out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "interpret"))
+def mita_expert_attention(q_sorted: jax.Array, assign: jax.Array,
+                          k_e: jax.Array, v_e: jax.Array, valid: jax.Array,
+                          block_q: int = 128, interpret: bool = False):
+    """Routed-expert attention partials.
+
+    q_sorted: [B, H, NS, d] sub-queries sorted by expert id
+    assign:   [B, H, NS] int32 expert per sub-query (>= m means inactive)
+    k_e/v_e:  [B, H, M, K, d]; valid: [B, H, M, K]
+    Returns (o, m_stat, l): [B,H,NS,d], [B,H,NS], [B,H,NS].
+    """
+    b, h, ns, d = q_sorted.shape
+    m, kw = k_e.shape[-3], k_e.shape[-2]
+    block_q = min(block_q, ns)
+    if ns % block_q:
+        raise ValueError("NS must divide by block_q")
+
+    qf = q_sorted.reshape(b * h, ns, d)
+    af = assign.reshape(b * h, ns).astype(jnp.int32)
+    kef = k_e.reshape(b * h, m * kw, d)
+    vef = v_e.reshape(b * h, m * kw, d)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    bias = bias.reshape(b * h, m * kw)
+
+    grid = (b * h, ns // block_q)
+    kern = functools.partial(_expert_kernel, n_experts=m, k_width=kw,
+                             scale=1.0 / math.sqrt(d), block_q=block_q)
+    o, m_stat, l = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda bh, qi: (bh, qi)),
+            pl.BlockSpec((1, block_q, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, m * kw, d), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((1, m * kw, d), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((1, m * kw), lambda bh, qi: (bh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda bh, qi: (bh, qi)),
+            pl.BlockSpec((1, block_q), lambda bh, qi: (bh, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, ns, d), q_sorted.dtype),
+            jax.ShapeDtypeStruct((b * h, ns), jnp.float32),
+            jax.ShapeDtypeStruct((b * h, ns), jnp.float32),
+        ],
+        interpret=interpret,
+    )(af, qf, kef, vef, bias)
+    return (o.reshape(b, h, ns, d), m_stat.reshape(b, h, ns),
+            l.reshape(b, h, ns))

@@ -1,0 +1,70 @@
+"""Dispatch wrappers: Pallas kernels on TPU, interpret/XLA fallbacks on CPU.
+
+`routed_expert_partial` is the integration point used by
+`repro.core.mita_sparse` when ``impl="pallas"``: it takes the sorted
+sub-queries + expert bank and returns online-softmax partials compatible
+with `repro.core.combine.Partial`.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attn as _fa
+from repro.kernels import mita_expert_attn as _mea
+
+VMEM_BUDGET_BYTES = 8 * 2**20   # expert bank budget for the resident kernel
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, causal: bool = False,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """[B,H,N,d] flash attention; interpret mode on CPU."""
+    if interpret is None:
+        interpret = not on_tpu()
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+def expert_bank_fits(m: int, k: int, d: int, bytes_per_el: int = 2) -> bool:
+    return 2 * m * k * d * bytes_per_el <= VMEM_BUDGET_BYTES
+
+
+def routed_expert_partial(q_sorted, assign, k_e, v_e, valid,
+                          block_q: int = 128,
+                          interpret: Optional[bool] = None):
+    """Kernel-backed routed-expert partials with arbitrary lead dims.
+
+    q_sorted: [..., NS, d]; assign: [..., NS];
+    k_e/v_e: [kv_lead..., M, K, d] (lead may contain broadcast-1 dims);
+    valid: [kv_lead..., M, K].
+    Returns (o, m_stat, l) with q_sorted's lead dims.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    lead = q_sorted.shape[:-2]
+    ns, d = q_sorted.shape[-2:]
+    m, kw = k_e.shape[-3], k_e.shape[-2]
+
+    def bcast(x, trailing):
+        tgt = lead + x.shape[-trailing:]
+        return jnp.broadcast_to(x, tgt).reshape((1, -1) + x.shape[-trailing:])
+
+    q4 = q_sorted.reshape((1, -1, ns, d))
+    a4 = assign.reshape((1, -1, ns))
+    ke4 = bcast(k_e, 3)
+    ve4 = bcast(v_e, 3)
+    va4 = bcast(valid, 2)
+    o, ms, l = _mea.mita_expert_attention(
+        q4, a4, ke4, ve4, va4,
+        block_q=min(block_q, ns), interpret=interpret)
+    return (o.reshape(lead + (ns, d)), ms.reshape(lead + (ns,)),
+            l.reshape(lead + (ns,)))

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every kernel in this package is validated against these references across
+shape/dtype sweeps in tests/test_kernels.py (interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = False) -> jax.Array:
+    """q,k,v: [B, H, N, d] -> [B, H, N, d] (f32 softmax accumulation)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / math.sqrt(d)
+    if causal:
+        n = q.shape[-2]
+        mask = jnp.tril(jnp.ones((n, n), bool))
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def mita_expert_attention_ref(q_sorted: jax.Array, assign: jax.Array,
+                              k_e: jax.Array, v_e: jax.Array,
+                              valid: jax.Array):
+    """Routed-expert attention partial (paper Alg. 1 line 14).
+
+    q_sorted: [B, H, NS, d]  sub-queries sorted by expert id
+    assign:   [B, H, NS]     expert id per sub-query (== m -> inactive)
+    k_e, v_e: [B, H, M, K, d] gathered expert key/value tiles
+    valid:    [B, H, M, K]   gather validity
+    Returns (o [B,H,NS,d], m_stat [B,H,NS], l [B,H,NS]) un-normalized
+    online-softmax partials (combined downstream with shared/local branches).
+    """
+    b, h, ns, d = q_sorted.shape
+    m, kk = k_e.shape[-3], k_e.shape[-2]
+    scores = jnp.einsum("bhnd,bhmkd->bhnmk", q_sorted, k_e) / math.sqrt(d)
+    ok = (assign[..., None] == jnp.arange(m)[None, None, None, :])
+    mask = ok[..., None] & valid[..., None, :, :]
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    scores = scores.reshape(b, h, ns, m * kk)
+    mx = jnp.max(scores, axis=-1)
+    safe = jnp.where(mx == NEG_INF, 0.0, mx)
+    p = jnp.exp(scores - safe[..., None])
+    p = jnp.where(scores == NEG_INF, 0.0, p)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhnk,bhkd->bhnd", p.astype(v_e.dtype),
+                   v_e.reshape(b, h, m * kk, d))
+    return o, mx, l

@@ -1,0 +1,248 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: a sharding
+mismatch, compile-time OOM, or unsupported collective fails the cell.
+Writes one JSON record per cell (memory analysis, cost analysis, collective
+schedule, roofline terms) to results/dryrun/<arch>_<shape>_<mesh>.json —
+resumable, so a long sweep can be interrupted and restarted.
+
+Usage:
+  python -m repro.launch.dryrun --all
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --multi-pod
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis import roofline as rl
+from repro.configs.registry import ARCHS, SHAPES, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _depth_variant(arch, n_layers: int):
+    """Same arch at reduced depth with layer scans fully unrolled."""
+    return dataclasses.replace(
+        arch, model=dataclasses.replace(
+            arch.model, n_layers=n_layers, scan_unroll=True))
+
+
+def _measure(arch, shape, mesh, state_policy: str = "seq",
+             microbatch: int = 1):
+    cell = build_cell(arch, shape, mesh, state_policy=state_policy,
+                      microbatch=microbatch)
+    # NOTE: must lower inside the mesh context — bare-PartitionSpec
+    # with_sharding_constraints (MoE EP layout) need the ambient mesh.
+    with mesh:
+        lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                          out_shardings=cell.out_shardings,
+                          donate_argnums=cell.donate_argnums).lower(*cell.args)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = rl.collective_bytes(compiled.as_text())
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)), coll)
+
+
+def calibrated_roofline(arch, shape, mesh, mesh_name: str,
+                        model_flops: float,
+                        state_policy: str = "seq",
+                        microbatch: int = 1) -> rl.Roofline:
+    """Scan-trip-count-corrected roofline terms.
+
+    XLA cost_analysis counts a while-loop (scan) body ONCE (verified in
+    EXPERIMENTS.md §Dry-run calibration), so deep models are under-counted.
+    We compile the cell at two shallow depths with scans UNROLLED (counted
+    exactly), fit flops/bytes/collective-bytes linearly in depth, and
+    extrapolate to the full layer count.
+    """
+    unit = 3 if arch.family == "hybrid" else 1
+    n1, n2 = 2 * unit, 4 * unit
+    f1, b1, c1 = _measure(_depth_variant(arch, n1), shape, mesh,
+                          state_policy, microbatch)
+    f2, b2, c2 = _measure(_depth_variant(arch, n2), shape, mesh,
+                          state_policy, microbatch)
+    l_eff = (arch.model.n_layers // unit) * unit
+
+    def extrap(v1, v2):
+        slope = max(0.0, (v2 - v1) / (n2 - n1))
+        return v1 + slope * (l_eff - n1)
+
+    kinds = set(c1) | set(c2)
+    coll = {k: extrap(c1.get(k, 0.0), c2.get(k, 0.0)) for k in kinds}
+    return rl.Roofline(
+        name=f"{arch.arch_id}:{shape.name}", mesh=mesh_name,
+        n_devices=mesh.size,
+        flops_per_chip=extrap(f1, f2),
+        bytes_per_chip=extrap(b1, b2),
+        coll_bytes_per_chip=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=model_flops,
+    )
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: str, force: bool = False,
+             backend_override: str | None = None,
+             tag: str = "", state_policy: str = "seq",
+             attn_overrides: dict | None = None,
+             microbatch: int = 1) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    fname = f"{arch_id}_{shape_name}_{mesh_name}{tag}.json"
+    path = os.path.join(out_dir, fname)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    arch = get_arch(arch_id, backend=backend_override)
+    if attn_overrides:
+        arch = dataclasses.replace(
+            arch, model=dataclasses.replace(
+                arch.model, attn=dataclasses.replace(
+                    arch.model.attn, **attn_overrides)))
+    shape = SHAPES[shape_name]
+    ok, why = arch.shape_supported(shape)
+    rec: dict = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                 "backend": backend_override or arch.model.attn.backend,
+                 "state_policy": state_policy,
+                 "attn_overrides": attn_overrides or {},
+                 "microbatch": microbatch}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _write(path, rec)
+        return rec
+    if why:
+        rec["note"] = why
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape, mesh, state_policy=state_policy,
+                          microbatch=microbatch)
+        with mesh:
+            lowered = jax.jit(
+                cell.fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate_argnums,
+            ).lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        raw = rl.from_compiled(
+            cell.name, mesh_name, mesh.size, compiled,
+            model_flops=rl.model_flops_for(arch, shape))
+        roof = calibrated_roofline(arch, shape, mesh, mesh_name,
+                                   rl.model_flops_for(arch, shape),
+                                   state_policy=state_policy,
+                                   microbatch=microbatch)
+        rec["roofline_raw_body_once"] = raw.to_dict()
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory=dict(
+                argument_bytes=mem.argument_size_in_bytes,
+                output_bytes=mem.output_size_in_bytes,
+                temp_bytes=mem.temp_size_in_bytes,
+                alias_bytes=mem.alias_size_in_bytes,
+                peak_per_device=mem.argument_size_in_bytes
+                + mem.output_size_in_bytes + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes,
+            ),
+            roofline=roof.to_dict(),
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure
+        rec.update(status="failed", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    _write(path, rec)
+    return rec
+
+
+def _write(path: str, rec: dict):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--backend", default=None,
+                    help="attention backend override (e.g. full for the "
+                         "paper-baseline comparison)")
+    ap.add_argument("--tag", default="", help="suffix for result files")
+    ap.add_argument("--state-policy", default="seq", choices=["seq", "dh"])
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--attn", default="",
+                    help="attention overrides, e.g. impl=capacity,"
+                         "route_per_group=true,block_q=512")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in filter(None, args.attn.split(",")):
+        key, val = kv.split("=")
+        if val.lower() in ("true", "false"):
+            overrides[key] = val.lower() == "true"
+        elif val.replace(".", "").isdigit():
+            overrides[key] = float(val) if "." in val else int(val)
+        else:
+            overrides[key] = val
+
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) \
+        else [args.multi_pod]
+
+    n_fail = 0
+    for arch_id in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                t0 = time.time()
+                rec = run_cell(arch_id, shape_name, mp, args.out,
+                               force=args.force,
+                               backend_override=args.backend, tag=args.tag,
+                               state_policy=args.state_policy,
+                               attn_overrides=overrides,
+                               microbatch=args.microbatch)
+                status = rec.get("status")
+                msg = f"[{time.strftime('%H:%M:%S')}] " \
+                      f"{arch_id:20s} {shape_name:12s} " \
+                      f"{'2x16x16' if mp else '16x16':8s} {status:8s} " \
+                      f"({time.time()-t0:6.1f}s)"
+                if status == "ok":
+                    r = rec["roofline"]
+                    msg += (f" bottleneck={r['bottleneck']:10s} "
+                            f"t={max(r['t_compute'], r['t_memory'], r['t_collective']):.3e}s "
+                            f"mem/dev={rec['memory']['peak_per_device']/2**30:.2f}GiB")
+                elif status == "failed":
+                    n_fail += 1
+                    msg += " " + rec.get("error", "")[:120]
+                print(msg, flush=True)
+    print(f"done; failures: {n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

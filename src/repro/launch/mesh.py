@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS *before* any jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (possibly fake) local devices exist —
+    used by tests and the CPU examples."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"mesh {data}x{model} needs {data*model} devices, "
+                         f"have {n}")
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,250 @@
+"""Step-function + input-spec builders for every (arch × shape) cell.
+
+`build_cell(arch, shape, mesh)` returns everything the dry-run / trainer /
+server needs: the jit-able step function, abstract input shapes
+(ShapeDtypeStruct — no allocation), and in/out shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ArchConfig, ShapeSpec
+from repro.distributed import sharding as shd
+from repro.models import mamba2 as mb
+from repro.models import rglru as rg
+from repro.models import transformer as tfm
+from repro.models import whisper as wh
+from repro.optim import OptConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    fn: Callable              # jit-able step function
+    args: tuple               # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any        # None -> GSPMD chooses
+    donate_argnums: tuple = ()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ------------------------------------------------------------- family fns ---
+
+def family_fns(arch: ArchConfig):
+    """(init, loss, prefill, decode_step, init_decode_states) per family."""
+    cfg = arch.model
+    fam = arch.family
+    if fam in ("dense", "moe", "vlm"):
+        return dict(
+            init=lambda rng: tfm.lm_init(rng, cfg),
+            loss=lambda p, b: tfm.lm_loss(p, b, cfg),
+            prefill=lambda p, b, cap: tfm.lm_prefill(
+                p, b["tokens"], cfg, cap,
+                extra_embeds=b.get("image_embeds")),
+            decode=lambda p, st, tok, pos: tfm.lm_decode_step(p, st, tok, pos, cfg),
+            init_states=lambda b, cap: tfm.init_decode_states(cfg, b, cap),
+        )
+    if fam == "hybrid":
+        return dict(
+            init=lambda rng: rg.rg_init(rng, cfg),
+            loss=lambda p, b: rg.rg_loss(p, b, cfg),
+            prefill=None,
+            decode=lambda p, st, tok, pos: rg.rg_decode_step(p, st, tok, pos, cfg),
+            init_states=lambda b, cap: rg.rg_init_decode_states(cfg, b, cap),
+        )
+    if fam == "ssm":
+        return dict(
+            init=lambda rng: mb.mamba_init(rng, cfg),
+            loss=lambda p, b: mb.mamba_loss(p, b, cfg),
+            prefill=None,
+            decode=lambda p, st, tok, pos: mb.mamba_decode_step(p, st, tok, pos, cfg),
+            init_states=lambda b, cap: mb.mamba_init_decode_states(cfg, b, cap),
+        )
+    if fam == "encdec":
+        return dict(
+            init=lambda rng: wh.whisper_init(rng, cfg, t_enc=arch.t_enc),
+            loss=lambda p, b: wh.whisper_loss(p, b, cfg),
+            prefill=None,
+            decode=lambda p, st, tok, pos: wh.whisper_decode_step(p, st, tok, pos, cfg),
+            init_states=None,   # whisper serve states need params (xattn KV)
+        )
+    raise ValueError(fam)
+
+
+def abstract_params(arch: ArchConfig):
+    fns = family_fns(arch)
+    return jax.eval_shape(lambda: fns["init"](jax.random.PRNGKey(0)))
+
+
+# ------------------------------------------------------------------ cells ---
+
+def _train_batch_shapes(arch: ArchConfig, shape: ShapeSpec):
+    cfg = arch.model
+    b, s = shape.batch, shape.seq
+    if arch.family == "encdec":
+        # enc-dec: audio frames (stub frontend) + native decoder length
+        return {
+            "audio_embeds": _sds((b, arch.t_enc, cfg.d_model), cfg.compute_dtype),
+            "tokens": _sds((b, arch.dec_len), jnp.int32),
+            "labels": _sds((b, arch.dec_len), jnp.int32),
+        }
+    batch = {"tokens": _sds((b, s), jnp.int32),
+             "labels": _sds((b, s), jnp.int32)}
+    if arch.family == "vlm":
+        batch["image_embeds"] = _sds((b, arch.n_img_tokens, cfg.d_model),
+                                     cfg.compute_dtype)
+    return batch
+
+
+def _batch_specs(batch, mesh, b):
+    return {k: shd.batch_spec(mesh, b, rank=len(v.shape)) for k, v in batch.items()}
+
+
+def build_cell(arch: ArchConfig, shape: ShapeSpec, mesh,
+               opt_cfg: Optional[OptConfig] = None,
+               state_policy: str = "seq",
+               microbatch: int = 1) -> Cell:
+    fns = family_fns(arch)
+    cfg = arch.model
+    params = abstract_params(arch)
+    pspecs = shd.param_specs(params, mesh)
+    psh = shd.tree_shardings(pspecs, mesh)
+    name = f"{arch.arch_id}:{shape.name}"
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or OptConfig()
+        opt_state = jax.eval_shape(adamw_init, params)
+        opt_sh = type(opt_state)(
+            mu=shd.tree_shardings(pspecs, mesh),
+            nu=shd.tree_shardings(pspecs, mesh),
+            step=NamedSharding(mesh, P()))
+        batch = _train_batch_shapes(arch, shape)
+        bspecs = _batch_specs(batch, mesh, shape.batch)
+        bsh = {k: NamedSharding(mesh, s) for k, s in bspecs.items()}
+
+        loss_fn = fns["loss"]
+
+        if microbatch > 1:
+            # gradient accumulation: scan over A microbatches — activation
+            # memory / A at identical total FLOPs/collective bytes (the
+            # HBM-fit lever for the big train cells, §Perf).
+            if shape.batch % microbatch:
+                raise ValueError("microbatch must divide global batch")
+
+            def train_step(p, opt, b):
+                def split(x):
+                    return x.reshape((microbatch, x.shape[0] // microbatch)
+                                     + x.shape[1:])
+                mb = jax.tree.map(split, b)
+
+                # remat the accumulation body: without it the outer scan
+                # hoists every microbatch's inner-layer residuals and the
+                # activation-memory saving evaporates (§Perf measurement)
+                @functools.partial(jax.checkpoint,
+                                   policy=jax.checkpoint_policies.nothing_saveable)
+                def acc_fn(carry, bi):
+                    loss, grads = jax.value_and_grad(loss_fn)(p, bi)
+                    g_acc, l_acc = carry
+                    return (jax.tree.map(jnp.add, g_acc, grads),
+                            l_acc + loss), None
+
+                g0 = jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), p)
+                (grads, loss), _ = jax.lax.scan(
+                    acc_fn, (g0, jnp.zeros((), jnp.float32)), mb)
+                grads = jax.tree.map(lambda g: g / microbatch, grads)
+                new_p, new_opt, metrics = adamw_update(grads, opt, p, opt_cfg)
+                metrics["loss"] = loss / microbatch
+                return new_p, new_opt, metrics
+        else:
+            def train_step(p, opt, b):
+                loss, grads = jax.value_and_grad(loss_fn)(p, b)
+                new_p, new_opt, metrics = adamw_update(grads, opt, p, opt_cfg)
+                metrics["loss"] = loss
+                return new_p, new_opt, metrics
+
+        return Cell(
+            name=name, fn=train_step,
+            args=(params, opt_state, batch),
+            in_shardings=(psh, opt_sh, bsh),
+            out_shardings=(psh, opt_sh, None),
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        if arch.family == "encdec":
+            # encoder prefill over the (stub) audio memory — DESIGN.md
+            audio = _sds((shape.batch, arch.t_enc, cfg.d_model),
+                         cfg.compute_dtype)
+            ash = NamedSharding(mesh, shd.batch_spec(mesh, shape.batch, 3))
+
+            def enc_prefill(p, a):
+                return wh.whisper_encode(p, a, cfg)
+
+            return Cell(name=name, fn=enc_prefill, args=(params, audio),
+                        in_shardings=(psh, ash), out_shardings=None)
+        if fns["prefill"] is None:
+            # ssm / hybrid prefill == a forward pass at that length
+            batch = {"tokens": _sds((shape.batch, shape.seq), jnp.int32)}
+            bsh = {"tokens": NamedSharding(
+                mesh, shd.batch_spec(mesh, shape.batch))}
+
+            def fwd(p, b):
+                if arch.family == "ssm":
+                    return mb.mamba_forward(p, b["tokens"], cfg)[0][:, -1]
+                return rg.rg_forward(p, b["tokens"], cfg)[0][:, -1]
+
+            return Cell(name=name, fn=fwd, args=(params, batch),
+                        in_shardings=(psh, bsh), out_shardings=None)
+
+        batch = _train_batch_shapes(arch, dataclasses.replace(shape, kind="train"))
+        batch.pop("labels")
+        bspecs = _batch_specs(batch, mesh, shape.batch)
+        bsh = {k: NamedSharding(mesh, s) for k, s in bspecs.items()}
+        prefill = fns["prefill"]
+
+        def prefill_step(p, b):
+            return prefill(p, b, shape.seq)
+
+        return Cell(name=name, fn=prefill_step, args=(params, batch),
+                    in_shardings=(psh, bsh), out_shardings=None)
+
+    # ---- decode ----
+    b = shape.batch
+    cap = shape.seq
+    if arch.family == "encdec":
+        cap = arch.dec_len  # native decoder capacity (DESIGN.md substitution)
+        states = jax.eval_shape(
+            lambda p: wh.whisper_init_serve(
+                p, jnp.zeros((b, arch.t_enc, cfg.d_model), cfg.compute_dtype),
+                cfg, cap), params)
+    else:
+        states = jax.eval_shape(lambda: fns["init_states"](b, cap))
+    st_specs = shd.state_specs(states, mesh, b, policy=state_policy)
+    st_sh = shd.tree_shardings(st_specs, mesh)
+    token = _sds((b,), jnp.int32)
+    tok_sh = NamedSharding(mesh, shd.batch_spec(mesh, b, rank=1,
+                                                shard_seq_if_small=False))
+    pos = _sds((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+    decode = fns["decode"]
+
+    def decode_step(p, st, tok, pp):
+        return decode(p, st, tok, pp)
+
+    return Cell(name=name, fn=decode_step,
+                args=(params, states, token, pos),
+                in_shardings=(psh, st_sh, tok_sh, pos_sh),
+                out_shardings=(None, st_sh),
+                donate_argnums=(1,))

@@ -1,0 +1,233 @@
+"""Mamba-2 (SSD — state-space duality) model, attention-free.
+
+Per DESIGN.md §Arch-applicability: MiTA is inapplicable (no attention); in
+the paper's taxonomy the SSD state *is* the compressed fast-weight module
+(scaling-by-compression with a recurrent expert).  Implemented with the
+chunk-parallel SSD algorithm (Dao & Gu, 2024, "minimal SSD"): quadratic
+attention-like matmuls inside chunks (MXU-friendly) + a linear recurrence
+across chunk states — O(N·Q) compute, O(N/Q) sequential depth.
+
+Decode is the dual recurrent form: h ← h·exp(dtA) + dt·B⊗x, y = C·h + D·x.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+
+Params = dict[str, Any]
+
+_CONV_K = 4
+_CHUNK = 64
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """[..., T] -> [..., T, T]: L[i, j] = sum_{j < t <= i} x_t, -inf above
+    the diagonal (the 1-semiseparable decay mask of SSD)."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int = _CHUNK):
+    """Chunk-parallel SSD.
+
+    x:  [B, L, H, P]   inputs per head
+    dt: [B, L, H]      positive step sizes (already softplus'd)
+    a_log: [H]         negative state decay (A = -exp(a_log))
+    b, c: [B, L, S]    input/output projections (single group)
+    Returns y: [B, L, H, P].
+    """
+    bsz, l, h, p = x.shape
+    s = b.shape[-1]
+    nc = l // chunk
+    q = chunk
+
+    da = dt * (-jnp.exp(a_log.astype(jnp.float32)))[None, None, :]  # [B,L,H]
+    xdt = x * dt[..., None]
+
+    # reshape to chunks
+    da_c = da.reshape(bsz, nc, q, h).transpose(0, 3, 1, 2)       # [B,H,C,Q]
+    x_c = xdt.reshape(bsz, nc, q, h, p)                          # [B,C,Q,H,P]
+    b_c = b.reshape(bsz, nc, q, s)
+    c_c = c.reshape(bsz, nc, q, s)
+
+    a_cs = jnp.cumsum(da_c, axis=-1)                             # [B,H,C,Q]
+
+    # 1) intra-chunk (diagonal blocks):  Y[i] += sum_{j<=i} C_i·B_j L_ij x_j
+    lmask = jnp.exp(_segsum(da_c))                               # [B,H,C,Q,Q]
+    cb = jnp.einsum("bcis,bcjs->bcij", c_c, b_c)                 # [B,C,Q,Q]
+    y_diag = jnp.einsum("bcij,bhcij,bcjhp->bcihp",
+                        cb, lmask, x_c)
+
+    # 2) chunk final states: state[c] = sum_j exp(A_end - A_j) B_j x_j
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)                # [B,H,C,Q]
+    states = jnp.einsum("bcjs,bhcj,bcjhp->bchps", b_c, decay_states, x_c)
+
+    # 3) inter-chunk linear recurrence over chunk states
+    chunk_decay = jnp.exp(a_cs[..., -1])                         # [B,H,C]
+
+    def op(left, right):
+        al, sl = left
+        ar, sr = right
+        return al * ar, sl * ar[..., None, None] + sr
+
+    dec_t = chunk_decay.transpose(0, 2, 1)                       # [B,C,H]
+    _, states_inc = jax.lax.associative_scan(op, (dec_t, states), axis=1)
+    # states_inc[c] = state at END of chunk c; we need state BEFORE chunk c
+    prev = jnp.concatenate(
+        [jnp.zeros_like(states_inc[:, :1]), states_inc[:, :-1]], axis=1)
+
+    # 4) state -> output contribution
+    state_decay = jnp.exp(a_cs)                                  # [B,H,C,Q]
+    y_off = jnp.einsum("bcis,bhci,bchps->bcihp", c_c, state_decay, prev)
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y
+
+
+def mamba_block_init(rng, cfg: nn.ModelConfig) -> Params:
+    d = cfg.d_model
+    d_in = 2 * d                       # expand factor 2
+    hdim = 64
+    heads = d_in // hdim
+    s = getattr(cfg, "ssm_state", 0) or 128
+    ks = jax.random.split(rng, 6)
+    return {
+        "ln": jnp.zeros((d,), cfg.param_dtype),
+        "w_in": nn.dense_init(ks[0], d, 2 * d_in + 2 * s + heads, cfg.param_dtype),
+        "conv": (jax.random.normal(ks[1], (_CONV_K, d_in + 2 * s)) * 0.1
+                 ).astype(cfg.param_dtype),
+        "a_log": jnp.zeros((heads,), cfg.param_dtype),
+        "dt_bias": jnp.full((heads,), -1.0, cfg.param_dtype),
+        "d_skip": jnp.ones((heads,), cfg.param_dtype),
+        "ln_y": jnp.zeros((d_in,), cfg.param_dtype),
+        "w_out": nn.dense_init(ks[2], d_in, d, cfg.param_dtype),
+    }
+
+
+def _mamba_proj(p: Params, xn: jax.Array, cfg: nn.ModelConfig):
+    d = cfg.d_model
+    d_in = 2 * d
+    hdim = 64
+    heads = d_in // hdim
+    s = 128
+    ct = cfg.compute_dtype
+    zxbcdt = xn @ p["w_in"].astype(ct)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in: 2 * d_in + 2 * s]
+    dt = zxbcdt[..., 2 * d_in + 2 * s:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return z, xbc, dt, (d_in, hdim, heads, s)
+
+
+def mamba_block_apply(p: Params, x: jax.Array, cfg: nn.ModelConfig):
+    ct = cfg.compute_dtype
+    bsz, l, d = x.shape
+    xn = nn.rms_norm(x, p["ln"], cfg.norm_eps)
+    z, xbc, dt, (d_in, hdim, heads, s) = _mamba_proj(p, xn, cfg)
+
+    xpad = jnp.pad(xbc, ((0, 0), (_CONV_K - 1, 0), (0, 0)))
+    xbc = jax.nn.silu(sum(xpad[:, j: j + l] * p["conv"][j].astype(ct)
+                          for j in range(_CONV_K)))
+    xs = xbc[..., :d_in].reshape(bsz, l, heads, hdim)
+    b = xbc[..., d_in: d_in + s]
+    c = xbc[..., d_in + s:]
+
+    chunk = min(_CHUNK, l)
+    y = ssd_chunked(xs.astype(jnp.float32), dt, p["a_log"],
+                    b.astype(jnp.float32), c.astype(jnp.float32), chunk=chunk)
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, l, d_in).astype(ct)
+    y = nn.rms_norm(y * jax.nn.silu(z), p["ln_y"], cfg.norm_eps)
+    return x + y @ p["w_out"].astype(ct)
+
+
+def mamba_init(rng, cfg: nn.ModelConfig) -> Params:
+    k_emb, k_blocks = jax.random.split(rng)
+    keys = jax.random.split(k_blocks, cfg.n_layers)
+    return {
+        "emb": nn.embedding_init(k_emb, cfg),
+        "blocks": jax.vmap(lambda k: mamba_block_init(k, cfg))(keys),
+        "ln_f": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def mamba_forward(params: Params, tokens: jax.Array, cfg: nn.ModelConfig):
+    x = nn.embed(params["emb"], tokens, cfg)
+
+    def body(h, bp):
+        return mamba_block_apply(bp, h, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
+    x = nn.rms_norm(x, params["ln_f"])
+    return nn.unembed(params["emb"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def mamba_loss(params, batch, cfg: nn.ModelConfig):
+    logits, _ = mamba_forward(params, batch["tokens"], cfg)
+    return nn.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+
+
+class MambaState(NamedTuple):
+    h: jax.Array      # [B, H, P, S] ssm state (f32)
+    conv: jax.Array   # [B, _CONV_K-1, d_in + 2S]
+
+
+def mamba_init_decode_states(cfg: nn.ModelConfig, batch: int, capacity: int):
+    d_in, s = 2 * cfg.d_model, 128
+    heads = d_in // 64
+    one = MambaState(h=jnp.zeros((batch, heads, 64, s), jnp.float32),
+                     conv=jnp.zeros((batch, _CONV_K - 1, d_in + 2 * s), jnp.float32))
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)
+
+
+def mamba_block_decode(p: Params, x: jax.Array, st: MambaState,
+                       cfg: nn.ModelConfig):
+    """x: [B, D]."""
+    ct = cfg.compute_dtype
+    bsz, d = x.shape
+    xn = nn.rms_norm(x, p["ln"], cfg.norm_eps)
+    z, xbc, dt, (d_in, hdim, heads, s) = _mamba_proj(p, xn[:, None, :], cfg)
+    z, xbc, dt = z[:, 0], xbc[:, 0], dt[:, 0]
+
+    hist = jnp.concatenate([st.conv, xbc[:, None, :].astype(jnp.float32)], axis=1)
+    xbc = jax.nn.silu(sum(hist[:, j] * p["conv"][j].astype(jnp.float32)
+                          for j in range(_CONV_K))).astype(jnp.float32)
+    xs = xbc[..., :d_in].reshape(bsz, heads, hdim)
+    b = xbc[..., d_in: d_in + s]
+    c = xbc[..., d_in + s:]
+
+    da = jnp.exp(dt * (-jnp.exp(p["a_log"].astype(jnp.float32)))[None, :])
+    h = st.h * da[..., None, None] + jnp.einsum(
+        "bh,bhp,bs->bhps", dt, xs, b)
+    y = jnp.einsum("bhps,bs->bhp", h, c) \
+        + xs * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, d_in).astype(ct)
+    y = nn.rms_norm(y * jax.nn.silu(z), p["ln_y"], cfg.norm_eps)
+    return x + y @ p["w_out"].astype(ct), MambaState(h=h, conv=hist[:, 1:])
+
+
+def mamba_decode_step(params: Params, states, token: jax.Array,
+                      pos: jax.Array, cfg: nn.ModelConfig):
+    x = nn.embed(params["emb"], token, cfg)
+
+    def body(h, layer):
+        bp, st = layer
+        h, st = mamba_block_decode(bp, h, st, cfg)
+        return h, st
+
+    x, new_states = jax.lax.scan(body, x, (params["blocks"], states),
+                                 unroll=cfg.scan_unroll)
+    logits = nn.unembed(params["emb"], nn.rms_norm(x, params["ln_f"]), cfg)
+    return logits, new_states

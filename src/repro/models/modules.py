@@ -1,0 +1,299 @@
+"""Pure-JAX neural-net primitives (no flax/optax in this environment).
+
+Conventions:
+  * a "module" is a pair of functions `<name>_init(rng, ...) -> params`
+    (nested dict of jnp arrays) and `<name>_apply(params, x, ...)`;
+  * activations default to ``cfg.compute_dtype`` (bf16 on TPU), parameters to
+    ``cfg.param_dtype`` (f32 master copies); norms/softmax accumulate in f32;
+  * attention tensors are [B, Hkv, G, N, dh] (G = query heads per KV group)
+    so GQA broadcasting works throughout `repro.core`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import (full_attention, linear_attention,
+                                  local_attention, moba_attention)
+from repro.core.mita import MiTAConfig, mita_attention
+from repro.core.mita_sparse import mita_attention_sparse
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------- config ---
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    """Attention backend selection + MiTA hyper-parameters."""
+    backend: str = "mita"     # mita | mita_ref | full | moba | agent | linear | local
+    window: int = 128         # landmark window w  (m = N // w)
+    k: int = 128              # expert width
+    s: int = 1                # routed experts per query
+    causal: bool = True
+    impl: str = "sorted"      # sorted | capacity   (mita_sparse strategy)
+    block_q: int = 128
+    expert_span: int = 4
+    capacity_factor: float = 1.25
+    landmark: str = "pool1d"          # landmark extractor (Tab. 6 ablation)
+    landmark_per_group: bool = True   # share landmarks per KV-head group
+    route_per_group: bool = False     # share ROUTING per KV-head group (opt)
+    # "grouped": [B, Hkv, G, N, dh] (KV broadcast; landmark/expert sharing
+    #            possible) — but Hkv and G are each < TP width for most
+    #            GQA configs, so GSPMD cannot shard the attention math and
+    #            REPLICATES routing/sort/top-k (§Perf iteration 2).
+    # "repeat":  [B, H, N, dh] with KV repeated per head — H divides the
+    #            TP axis, the whole MiTA pipeline shards 16-way.
+    gqa_layout: str = "grouped"
+    local_window: int = 2048  # for backend == "local" (recurrentgemma)
+    enc_window: int = 0       # enc-dec: encoder-side window (0 = same)
+    external_finalize: bool = False  # serve-loop landmark finalize (opt)
+
+    def mita_cfg(self, n: int, bidir: bool = False) -> MiTAConfig:
+        m = max(1, n // self.window)
+        return MiTAConfig(
+            m=m, k=min(self.k, n), s=min(self.s, m),
+            causal=self.causal and not bidir,
+            landmark=self.landmark,
+            compress_only=self.backend == "agent",
+            route_only=self.backend == "mita_route",
+            route_per_group=self.route_per_group)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv: int = 4
+    d_ff: int = 1024
+    vocab: int = 1024
+    head_dim: int = 0          # 0 -> d_model // n_heads
+    rope_theta: float = 1e6
+    qk_norm: bool = False
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    attn: AttnConfig = dataclasses.field(default_factory=AttnConfig)
+    # MoE (n_experts == 0 -> dense FFN)
+    n_experts: int = 0
+    moe_top_k: int = 2
+    n_shared_experts: int = 0
+    moe_capacity_factor: float = 1.25
+    # hybrid / ssm / enc-dec extras live in their model files
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    remat: bool = False
+    # Unroll layer scans (dry-run FLOP calibration: XLA cost_analysis counts
+    # a while-loop body once, so calibration compiles unroll at small depth).
+    scan_unroll: bool = False
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def group(self) -> int:
+        return self.n_heads // self.n_kv
+
+
+# ------------------------------------------------------------ primitives ---
+
+def _normal(rng, shape, scale, dtype):
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype) -> jax.Array:
+    return _normal(rng, (d_in, d_out), 1.0 / math.sqrt(d_in), dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., N, dh]; positions: [N] or broadcastable."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., N, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention ---
+
+def attention_init(rng, cfg: ModelConfig) -> Params:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.dh
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * dh, cfg.param_dtype),
+        "wk": dense_init(ks[1], d, kv * dh, cfg.param_dtype),
+        "wv": dense_init(ks[2], d, kv * dh, cfg.param_dtype),
+        "wo": dense_init(ks[3], h * dh, d, cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), cfg.param_dtype)
+        p["k_norm"] = jnp.zeros((dh,), cfg.param_dtype)
+    return p
+
+
+def _qkv(params: Params, x: jax.Array, cfg: ModelConfig,
+         positions: jax.Array):
+    """Project to [B,Hkv,G,N,dh] query and [B,Hkv,1,N,dh] key/value."""
+    b, n, _ = x.shape
+    kv, g, dh = cfg.n_kv, cfg.group, cfg.dh
+    ct = cfg.compute_dtype
+    q = (x @ params["wq"].astype(ct)).reshape(b, n, kv, g, dh)
+    k = (x @ params["wk"].astype(ct)).reshape(b, n, kv, 1, dh)
+    v = (x @ params["wv"].astype(ct)).reshape(b, n, kv, 1, dh)
+    q = jnp.moveaxis(q, 1, 3)   # [B,kv,G,N,dh]
+    k = jnp.moveaxis(k, 1, 3)
+    v = jnp.moveaxis(v, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_apply(params: Params, x: jax.Array, cfg: ModelConfig,
+                    positions: Optional[jax.Array] = None,
+                    bidir: bool = False) -> jax.Array:
+    """Full-sequence attention (training / prefill).  x: [B, N, D]."""
+    b, n, _ = x.shape
+    a = cfg.attn
+    if positions is None:
+        positions = jnp.arange(n)
+    q, k, v = _qkv(params, x, cfg, positions)
+
+    causal = a.causal and not bidir
+    if a.gqa_layout == "repeat":
+        # single head dim (divisible by the TP axis): KV repeated per head
+        h = cfg.n_heads
+        q = q.reshape(b, h, n, cfg.dh)
+        k = jnp.broadcast_to(k, (b, cfg.n_kv, cfg.group, n, cfg.dh)
+                             ).reshape(b, h, n, cfg.dh)
+        v = jnp.broadcast_to(v, (b, cfg.n_kv, cfg.group, n, cfg.dh)
+                             ).reshape(b, h, n, cfg.dh)
+    if a.backend in ("mita", "mita_ref", "agent", "mita_route"):
+        mcfg = a.mita_cfg(n, bidir=bidir)
+        q_lm = jnp.mean(q, axis=2, keepdims=True) if (
+            a.landmark_per_group and cfg.group > 1
+            and a.gqa_layout != "repeat") else None
+        if a.backend == "mita_ref" or mcfg.compress_only:
+            o = mita_attention(q, k, v, mcfg, q_landmarks=q_lm)
+        else:
+            # block_q ~ expected tokens-per-expert so a sorted block spans
+            # ~2 experts on average; span-4 then drops almost nothing.
+            bq = min(a.block_q, a.window * mcfg.s, n * mcfg.s)
+            o = mita_attention_sparse(
+                q, k, v, mcfg, impl=a.impl, block_q=bq,
+                expert_span=min(a.expert_span, mcfg.m),
+                capacity_factor=a.capacity_factor, q_landmarks=q_lm)
+    elif a.backend == "full":
+        o = full_attention(q, k, v, causal=causal)
+    elif a.backend == "local":
+        o = local_attention(q, k, v, window=min(a.local_window, n),
+                            causal=causal)
+    elif a.backend == "moba":
+        o = moba_attention(q, k, v, block_size=a.window,
+                           top_blocks=max(1, a.k // a.window), causal=causal)
+    elif a.backend == "linear":
+        o = linear_attention(q, k, v, causal=causal)
+    else:
+        raise ValueError(f"unknown attention backend {a.backend!r}")
+
+    if a.gqa_layout == "repeat":
+        o = jnp.moveaxis(o, 2, 1).reshape(b, n, cfg.n_heads * cfg.dh)
+    else:
+        o = jnp.moveaxis(o, 3, 1).reshape(b, n, cfg.n_heads * cfg.dh)
+    return o @ params["wo"].astype(cfg.compute_dtype)
+
+
+# -------------------------------------------------------------------- ffn ---
+
+def swiglu_init(rng, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "wi": dense_init(ks[0], cfg.d_model, d_ff, cfg.param_dtype),
+        "wg": dense_init(ks[1], cfg.d_model, d_ff, cfg.param_dtype),
+        "wo": dense_init(ks[2], d_ff, cfg.d_model, cfg.param_dtype),
+    }
+
+
+def swiglu_apply(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    ct = cfg.compute_dtype
+    h = jax.nn.silu(x @ params["wg"].astype(ct)) * (x @ params["wi"].astype(ct))
+    return h @ params["wo"].astype(ct)
+
+
+def gelu_mlp_init(rng, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 2)
+    return {
+        "wi": dense_init(ks[0], cfg.d_model, d_ff, cfg.param_dtype),
+        "bi": jnp.zeros((d_ff,), cfg.param_dtype),
+        "wo": dense_init(ks[1], d_ff, cfg.d_model, cfg.param_dtype),
+        "bo": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def gelu_mlp_apply(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    ct = cfg.compute_dtype
+    h = jax.nn.gelu(x @ params["wi"].astype(ct) + params["bi"].astype(ct))
+    return h @ params["wo"].astype(ct) + params["bo"].astype(ct)
+
+
+# ------------------------------------------------------------- embeddings ---
+
+def embedding_init(rng, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(rng, 2)
+    p = {"tok": _normal(ks[0], (cfg.vocab, cfg.d_model), 0.02, cfg.param_dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[1], cfg.d_model, cfg.vocab, cfg.param_dtype)
+    return p
+
+
+def embed(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return jnp.take(params["tok"], tokens, axis=0).astype(cfg.compute_dtype)
+
+
+def unembed(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    ct = cfg.compute_dtype
+    if cfg.tie_embeddings:
+        return x @ params["tok"].astype(ct).T
+    return x @ params["head"].astype(ct)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy, f32 accumulation. logits: [..., V]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,170 @@
+"""Mixture-of-Experts FFN — fine-grained (DeepSeekMoE) and coarse (DBRX).
+
+Token dispatch uses sort-based capacity routing (static shapes, EP-shardable):
+tokens are ranked within their expert's queue via a stable argsort — no
+[T, E, C] one-hot dispatch tensors.  Expert compute is a dense
+[E, C, d] × [E, d, f] batched matmul, sharded over the "model" (EP) axis.
+
+Note the symmetry the paper's fast-weight framing makes explicit: this module
+routes tokens to *slow-weight* experts; MiTA routes queries to *fast-weight*
+(key/value) experts.  Both use the same capacity machinery.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+
+Params = dict[str, Any]
+
+
+def moe_init(rng, cfg: nn.ModelConfig) -> Params:
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 5)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": nn.dense_init(ks[0], d, e, jnp.float32),  # router in f32
+        "wi": (jax.random.normal(ks[1], (e, d, f)) * scale).astype(cfg.param_dtype),
+        "wg": (jax.random.normal(ks[2], (e, d, f)) * scale).astype(cfg.param_dtype),
+        "wo": (jax.random.normal(ks[3], (e, f, d)) / math.sqrt(f)).astype(cfg.param_dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = nn.swiglu_init(ks[4], cfg,
+                                     d_ff=cfg.n_shared_experts * cfg.d_ff)
+    return p
+
+
+def _dispatch_slots(assign: jax.Array, n_experts: int):
+    """Rank of each sub-token within its expert queue (stable), via sort.
+
+    assign: [T] int32 expert ids (n_experts = drop sentinel allowed).
+    Returns slot: [T] int32.
+    """
+    t = assign.shape[-1]
+    order = jnp.argsort(assign, axis=-1, stable=True)
+    a_sorted = jnp.take_along_axis(assign, order, axis=-1)
+    counts = jax.ops.segment_sum(jnp.ones((t,), jnp.int32), a_sorted,
+                                 num_segments=n_experts + 1)
+    starts = jnp.cumsum(counts) - counts
+    slot_sorted = jnp.arange(t, dtype=jnp.int32) - starts[a_sorted]
+    inv = jnp.argsort(order, axis=-1)
+    return jnp.take_along_axis(slot_sorted, inv, axis=-1)
+
+
+def _ep_constraint(x: jax.Array) -> jax.Array:
+    """Pin the expert-parallel layout of an [E, C, ...] buffer.
+
+    Without this, GSPMD shards the expert matmuls over the expert dim only
+    (16 of 256 chips' worth of parallelism) — measured as a 16x per-chip
+    FLOP inflation in the dry-run (EXPERIMENTS.md §Perf, dbrx cell).  The
+    constraint shards experts over "model" AND each expert's capacity slots
+    over the data axes, making the token->expert redistribution an
+    all-to-all and the einsum fully partitioned (EP × DP).
+    """
+    from jax.sharding import PartitionSpec as P
+    rest = (None,) * (x.ndim - 2)
+    for dp in (("pod", "data"), ("data",), None):
+        try:
+            return jax.lax.with_sharding_constraint(
+                x, P("model", dp, *rest))
+        except (ValueError, KeyError, RuntimeError):
+            continue
+    return x  # no mesh context (single-device tests)
+
+
+def _group_constraint(x: jax.Array, major: str) -> jax.Array:
+    """Constrain a grouped buffer.
+
+    major == "data":  [G, ...] with G on the DP axes and NOTHING on
+    "model" — every dispatch/combine gather and scatter is then strictly
+    shard-local (a gather touching a model-sharded dim degenerates to a
+    replicate+all-reduce; measured in §Perf iteration 3).
+    major == "model": [E, G, ...] expert-major (EP×DP) for the expert
+    matmuls.  The transpose between the two layouts is the canonical MoE
+    all-to-all, which GSPMD partitions natively."""
+    from jax.sharding import PartitionSpec as P
+    rest = (None,) * (x.ndim - 2)
+    for dp in (("pod", "data"), ("data",), None):
+        try:
+            if major == "data":
+                return jax.lax.with_sharding_constraint(
+                    x, P(dp, None, *rest))
+            return jax.lax.with_sharding_constraint(
+                x, P("model", dp, *rest))
+        except (ValueError, KeyError, RuntimeError):
+            continue
+    return x
+
+
+def moe_apply(params: Params, x: jax.Array, cfg: nn.ModelConfig):
+    """x: [B, N, D].  Returns (out, aux_load_balance_loss).
+
+    Grouped capacity dispatch (GSPMD MoE layout, §Perf iterations 1-3):
+    tokens are split into G groups aligned with the data shards; routing,
+    slotting, and the index-scatter/row-gather dispatch are *local to each
+    group* (no cross-shard scatter); the [G, E, Cg, d] -> [E, G, Cg, d]
+    transpose between the data-major and expert-major layouts is the one
+    all-to-all, which GSPMD partitions natively.  Per-group capacity
+    Cg = ceil(Tg·K/E · capacity_factor) (standard grouped-MoE semantics).
+    """
+    b, n, d = x.shape
+    e, kk = cfg.n_experts, cfg.moe_top_k
+    ct = cfg.compute_dtype
+    t = b * n
+    g = math.gcd(t, getattr(cfg, "moe_groups", 0) or 16)
+    tg = t // g
+    tokens = x.reshape(g, tg, d)
+
+    gates = jax.nn.softmax(
+        (tokens.astype(jnp.float32) @ params["router"]), axis=-1)  # [G,Tg,E]
+    gate_w, gate_idx = jax.lax.top_k(gates, kk)                    # [G,Tg,K]
+    gate_w = gate_w / jnp.maximum(jnp.sum(gate_w, -1, keepdims=True), 1e-9)
+
+    cap = max(8, int(math.ceil(tg * kk / e * cfg.moe_capacity_factor)))
+    cap = ((cap + 7) // 8) * 8
+
+    assign = gate_idx.reshape(g, tg * kk)
+    slot = jax.vmap(lambda a: _dispatch_slots(a, e))(assign)
+    keep = slot < cap
+    dst = jnp.where(keep, assign * cap + slot, e * cap)            # [G, Tg·K]
+
+    # local index-scatter (int32 only) + local row-gather per group
+    rows = jnp.broadcast_to(
+        (jnp.arange(tg * kk, dtype=jnp.int32) // kk)[None], dst.shape)
+    src = jax.vmap(lambda d_, r_: jnp.zeros((e * cap + 1,), jnp.int32)
+                   .at[d_].set(r_))(dst, rows)[:, : e * cap]       # [G, E·Cg]
+    xe = jnp.take_along_axis(tokens.astype(ct), src[..., None], axis=1)
+    xe = _group_constraint(xe.reshape(g, e, cap, d), "data")
+
+    # the MoE all-to-all: data-major -> expert-major
+    xe = _group_constraint(jnp.swapaxes(xe, 0, 1), "model")        # [E,G,Cg,d]
+
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, params["wg"].astype(ct)))
+    h = h * jnp.einsum("egcd,edf->egcf", xe, params["wi"].astype(ct))
+    ye = jnp.einsum("egcf,efd->egcd", h, params["wo"].astype(ct))
+    ye = _group_constraint(ye, "model")
+
+    # all-to-all back, then local combine per group
+    ye = _group_constraint(jnp.swapaxes(ye, 0, 1), "data")         # [G,E,Cg,d]
+    ypad = jnp.concatenate(
+        [ye.reshape(g, e * cap, d),
+         jnp.zeros((g, 1, d), ct)], axis=1)
+    y_tok = jnp.take_along_axis(ypad, dst[..., None], axis=1)
+    y_tok = y_tok.reshape(g, tg, kk, d)
+    w = jnp.where(keep.reshape(g, tg, kk), gate_w, 0.0).astype(ct)
+    out = jnp.einsum("gtkd,gtk->gtd", y_tok, w).reshape(b, n, d)
+
+    if cfg.n_shared_experts:
+        out = out + nn.swiglu_apply(params["shared"], x, cfg)
+
+    # switch-style load-balance aux loss
+    frac = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32),
+                    axis=(0, 1))
+    imp = jnp.mean(gates, axis=(0, 1))
+    aux = e * jnp.sum(frac * imp)
+    return out, aux

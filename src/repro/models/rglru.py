@@ -1,0 +1,210 @@
+"""RecurrentGemma-style hybrid model (Griffin): RG-LRU recurrent blocks
+interleaved 2:1 with (MiTA/local) attention blocks.
+
+Per DESIGN.md §Arch-applicability: the paper's MiTA replaces the *local
+attention* layers only; RG-LRU layers are attention-free — in the paper's
+taxonomy they are already "scaling by compression" (a recurrent shared
+expert), so MiTA is inapplicable there by construction.
+
+The RG-LRU recurrence  h_t = a_t ⊙ h_{t-1} + sqrt(1-a_t²) ⊙ (i_t ⊙ x_t)
+is evaluated with `jax.lax.associative_scan` (O(log N) depth) at training
+time and a single-step update at decode time.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mita_decode as mdec
+from repro.models import modules as nn
+from repro.models import transformer as tfm
+
+Params = dict[str, Any]
+
+_C = 8.0            # RG-LRU decay sharpness constant
+_CONV_K = 4         # temporal conv width
+
+
+# ----------------------------------------------------------------- RG-LRU ---
+
+def rglru_block_init(rng, cfg: nn.ModelConfig) -> Params:
+    d = cfg.d_model
+    dr = d   # recurrent width == d_model (RecurrentGemma convention)
+    ks = jax.random.split(rng, 7)
+    return {
+        "ln": jnp.zeros((d,), cfg.param_dtype),
+        "w_in": nn.dense_init(ks[0], d, dr, cfg.param_dtype),
+        "w_gate": nn.dense_init(ks[1], d, dr, cfg.param_dtype),
+        "conv": (jax.random.normal(ks[2], (_CONV_K, dr)) * 0.1).astype(cfg.param_dtype),
+        "w_a": nn.dense_init(ks[3], dr, dr, cfg.param_dtype),
+        "b_a": jnp.zeros((dr,), cfg.param_dtype),
+        "w_x": nn.dense_init(ks[4], dr, dr, cfg.param_dtype),
+        "b_x": jnp.zeros((dr,), cfg.param_dtype),
+        "lam": jnp.full((dr,), 0.5, cfg.param_dtype),   # Λ (softplus'd)
+        "w_out": nn.dense_init(ks[5], dr, d, cfg.param_dtype),
+    }
+
+
+def _rglru_gates(p: Params, xc: jax.Array, ct):
+    """a_t (log-space) and gated input for the recurrence."""
+    r = jax.nn.sigmoid(xc @ p["w_a"].astype(ct) + p["b_a"].astype(ct))
+    i = jax.nn.sigmoid(xc @ p["w_x"].astype(ct) + p["b_x"].astype(ct))
+    log_a = (-_C * jax.nn.softplus(p["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i.astype(jnp.float32) * xc.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_block_apply(p: Params, x: jax.Array, cfg: nn.ModelConfig):
+    """x: [B, N, D] -> [B, N, D]."""
+    ct = cfg.compute_dtype
+    xn = nn.rms_norm(x, p["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(xn @ p["w_gate"].astype(ct))
+    xi = xn @ p["w_in"].astype(ct)
+
+    # causal depthwise temporal conv (width 4)
+    xpad = jnp.pad(xi, ((0, 0), (_CONV_K - 1, 0), (0, 0)))
+    xc = sum(xpad[:, j: j + xi.shape[1]] * p["conv"][j].astype(ct)
+             for j in range(_CONV_K))
+
+    a, gated = _rglru_gates(p, xc, ct)
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(op, (a, gated), axis=1)
+    y = (h.astype(ct) * gate) @ p["w_out"].astype(ct)
+    return x + y
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array        # [B, Dr] recurrent state (f32)
+    conv: jax.Array     # [B, _CONV_K-1, Dr] trailing conv inputs
+
+
+def rglru_init_state(batch: int, dr: int) -> RGLRUState:
+    return RGLRUState(h=jnp.zeros((batch, dr), jnp.float32),
+                      conv=jnp.zeros((batch, _CONV_K - 1, dr), jnp.float32))
+
+
+def rglru_block_decode(p: Params, x: jax.Array, st: RGLRUState,
+                       cfg: nn.ModelConfig):
+    """x: [B, D] single step."""
+    ct = cfg.compute_dtype
+    xn = nn.rms_norm(x, p["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(xn @ p["w_gate"].astype(ct))
+    xi = xn @ p["w_in"].astype(ct)
+
+    hist = jnp.concatenate([st.conv, xi[:, None, :].astype(jnp.float32)], axis=1)
+    xc = sum(hist[:, j] * p["conv"][j].astype(jnp.float32)
+             for j in range(_CONV_K)).astype(ct)
+
+    a, gated = _rglru_gates(p, xc, ct)
+    h = a * st.h + gated
+    y = (h.astype(ct) * gate) @ p["w_out"].astype(ct)
+    return x + y, RGLRUState(h=h, conv=hist[:, 1:])
+
+
+# ------------------------------------------------------------- super-block --
+
+def super_block_init(rng, cfg: nn.ModelConfig) -> Params:
+    """(RG-LRU, RG-LRU, attention+FFN) — the Griffin 2:1 pattern."""
+    ks = jax.random.split(rng, 4)
+    return {
+        "rec1": rglru_block_init(ks[0], cfg),
+        "rec2": rglru_block_init(ks[1], cfg),
+        "attn_blk": tfm.block_init(ks[2], cfg),
+        "ffn1": nn.swiglu_init(ks[3], cfg),
+        "ln_f1": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def super_block_apply(p: Params, x: jax.Array, cfg: nn.ModelConfig,
+                      positions: jax.Array):
+    x = rglru_block_apply(p["rec1"], x, cfg)
+    x = x + nn.swiglu_apply(p["ffn1"], nn.rms_norm(x, p["ln_f1"]), cfg)
+    x = rglru_block_apply(p["rec2"], x, cfg)
+    x, _ = tfm.block_apply(p["attn_blk"], x, cfg, positions)
+    return x
+
+
+# ------------------------------------------------------------------ model ---
+
+def rg_init(rng, cfg: nn.ModelConfig) -> Params:
+    n_super = max(1, cfg.n_layers // 3)
+    k_emb, k_blocks, _ = jax.random.split(rng, 3)
+    keys = jax.random.split(k_blocks, n_super)
+    return {
+        "emb": nn.embedding_init(k_emb, cfg),
+        "supers": jax.vmap(lambda k: super_block_init(k, cfg))(keys),
+        "ln_f": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def rg_forward(params: Params, tokens: jax.Array, cfg: nn.ModelConfig):
+    x = nn.embed(params["emb"], tokens, cfg)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(h, sp):
+        return super_block_apply(sp, h, cfg, positions), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["supers"], unroll=cfg.scan_unroll)
+    x = nn.rms_norm(x, params["ln_f"])
+    return nn.unembed(params["emb"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def rg_loss(params, batch, cfg: nn.ModelConfig):
+    logits, _ = rg_forward(params, batch["tokens"], cfg)
+    return nn.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+
+
+class RGSuperState(NamedTuple):
+    rec1: RGLRUState
+    rec2: RGLRUState
+    attn: Any
+
+
+def rg_init_decode_states(cfg: nn.ModelConfig, batch: int, capacity: int):
+    n_super = max(1, cfg.n_layers // 3)
+    dr = cfg.d_model
+    if cfg.attn.backend in ("mita", "mita_ref"):
+        attn_state = mdec.init_decode_state(
+            batch, cfg.n_kv, cfg.dh, capacity,
+            mdec.DecodeConfig(window=cfg.attn.window, k=cfg.attn.k, s=cfg.attn.s),
+            dtype=cfg.compute_dtype)
+    else:
+        # local attention decode only needs a sliding window of cache
+        attn_state = mdec.init_full_state(
+            batch, cfg.n_kv, cfg.dh, min(capacity, cfg.attn.local_window),
+            dtype=cfg.compute_dtype)
+    one = RGSuperState(rec1=rglru_init_state(batch, dr),
+                       rec2=rglru_init_state(batch, dr),
+                       attn=attn_state)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_super,) + a.shape), one)
+
+
+def rg_decode_step(params: Params, states, token: jax.Array, pos: jax.Array,
+                   cfg: nn.ModelConfig):
+    x = nn.embed(params["emb"], token, cfg)
+
+    def body(h, layer):
+        sp, st = layer
+        h, r1 = rglru_block_decode(sp["rec1"], h, st.rec1, cfg)
+        h = h + nn.swiglu_apply(sp["ffn1"], nn.rms_norm(h, sp["ln_f1"]), cfg)
+        h, r2 = rglru_block_decode(sp["rec2"], h, st.rec2, cfg)
+        h, a = tfm.block_decode(sp["attn_blk"], h, st.attn, cfg, pos)
+        return h, RGSuperState(rec1=r1, rec2=r2, attn=a)
+
+    x, new_states = jax.lax.scan(body, x, (params["supers"], states),
+                                 unroll=cfg.scan_unroll)
+    logits = nn.unembed(params["emb"], nn.rms_norm(x, params["ln_f"]), cfg)
+    return logits, new_states

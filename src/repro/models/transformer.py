@@ -1,0 +1,222 @@
+"""Decoder-only transformer LM (dense or MoE FFN) with MiTA attention.
+
+Covers tinyllama, qwen3-*, stablelm (dense), deepseek-moe, dbrx (MoE) and the
+LM backbone of internvl2.  Scan-over-layers keeps HLO size and compile time
+independent of depth; per-layer params are stacked on axis 0.
+
+Three entry points:
+  * ``lm_loss``         — training objective (next-token CE + MoE aux).
+  * ``lm_prefill``      — full forward that also builds per-layer decode
+                          states (KV cache + MiTA landmark/expert caches).
+  * ``lm_decode_step``  — one token for the whole batch, O(m + s·k + w)
+                          attention per layer (`core.mita_decode`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mita_decode as mdec
+from repro.models import modules as nn
+from repro.models.moe import moe_apply, moe_init
+
+Params = dict[str, Any]
+
+
+# ------------------------------------------------------------------ block ---
+
+def block_init(rng, cfg: nn.ModelConfig) -> Params:
+    ks = jax.random.split(rng, 3)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "attn": nn.attention_init(ks[0], cfg),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_init(ks[1], cfg)
+    else:
+        p["ffn"] = nn.swiglu_init(ks[1], cfg)
+    return p
+
+
+def block_apply(params: Params, x: jax.Array, cfg: nn.ModelConfig,
+                positions: jax.Array, bidir: bool = False):
+    h = nn.attention_apply(params["attn"], nn.rms_norm(x, params["ln1"]),
+                           cfg, positions, bidir=bidir)
+    x = x + h
+    if cfg.n_experts:
+        f, aux = moe_apply(params["moe"], nn.rms_norm(x, params["ln2"]), cfg)
+    else:
+        f, aux = nn.swiglu_apply(params["ffn"],
+                                 nn.rms_norm(x, params["ln2"]), cfg), 0.0
+    return x + f, jnp.asarray(aux, jnp.float32)
+
+
+# ------------------------------------------------------------------ model ---
+
+def lm_init(rng, cfg: nn.ModelConfig) -> Params:
+    k_emb, k_blocks, k_ln = jax.random.split(rng, 3)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda k: block_init(k, cfg))(block_keys)
+    return {
+        "emb": nn.embedding_init(k_emb, cfg),
+        "blocks": blocks,
+        "ln_f": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def lm_backbone(params: Params, x: jax.Array, cfg: nn.ModelConfig,
+                positions: Optional[jax.Array] = None, bidir: bool = False):
+    """Run the layer stack on embeddings x: [B, N, D] -> (x, aux_loss)."""
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+
+    def body(carry, layer_params):
+        h, aux = carry
+        h, a = block_apply(layer_params, h, cfg, positions, bidir=bidir)
+        return (h, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"], unroll=cfg.scan_unroll)
+    return nn.rms_norm(x, params["ln_f"]), aux
+
+
+def lm_forward(params: Params, tokens: jax.Array, cfg: nn.ModelConfig,
+               extra_embeds: Optional[jax.Array] = None):
+    """tokens: [B, N] -> (logits [B, N, V], aux).  ``extra_embeds`` (VLM):
+    [B, P, D] multimodal embeddings overwriting the first P positions."""
+    x = nn.embed(params["emb"], tokens, cfg)
+    if extra_embeds is not None:
+        p = extra_embeds.shape[1]
+        x = jnp.concatenate(
+            [extra_embeds.astype(x.dtype), x[:, p:]], axis=1)
+    x, aux = lm_backbone(params, x, cfg)
+    return nn.unembed(params["emb"], x, cfg), aux
+
+
+def lm_loss(params: Params, batch: dict[str, jax.Array], cfg: nn.ModelConfig,
+            aux_weight: float = 0.01) -> jax.Array:
+    logits, aux = lm_forward(params, batch["tokens"], cfg,
+                             extra_embeds=batch.get("image_embeds"))
+    loss = nn.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return loss + aux_weight * aux / cfg.n_layers
+
+
+# ----------------------------------------------------------------- decode ---
+
+def _decode_cfg(cfg: nn.ModelConfig) -> mdec.DecodeConfig:
+    return mdec.DecodeConfig(window=cfg.attn.window, k=cfg.attn.k,
+                             s=cfg.attn.s,
+                             external_finalize=cfg.attn.external_finalize)
+
+
+def lm_finalize_states(states, cfg: nn.ModelConfig):
+    """Serving-loop landmark finalize for all layers (external mode) —
+    call every ``cfg.attn.window`` decoded tokens."""
+    dcfg = _decode_cfg(cfg)
+    return jax.lax.map(lambda st: mdec.mita_finalize_if_due(st, dcfg), states)
+
+
+def init_decode_states(cfg: nn.ModelConfig, batch: int, capacity: int):
+    """Stacked per-layer decode states (scan axis 0)."""
+    if cfg.attn.backend in ("mita", "mita_ref"):
+        one = mdec.init_decode_state(batch, cfg.n_kv, cfg.dh, capacity,
+                                     _decode_cfg(cfg), dtype=cfg.compute_dtype)
+    else:
+        one = mdec.init_full_state(batch, cfg.n_kv, cfg.dh, capacity,
+                                   dtype=cfg.compute_dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)
+
+
+def attention_decode(params: Params, x: jax.Array, state, cfg: nn.ModelConfig,
+                     pos: jax.Array):
+    """One-token attention. x: [B, D]; pos: scalar position."""
+    b, _ = x.shape
+    kv, g, dh = cfg.n_kv, cfg.group, cfg.dh
+    ct = cfg.compute_dtype
+    q = (x @ params["wq"].astype(ct)).reshape(b, kv, g, dh)
+    k = (x @ params["wk"].astype(ct)).reshape(b, kv, dh)
+    v = (x @ params["wv"].astype(ct)).reshape(b, kv, dh)
+    if cfg.qk_norm:
+        q = nn.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = nn.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    posv = pos[None] if pos.ndim == 0 else pos
+    q = nn.rope(q[..., None, :], posv, cfg.rope_theta)[..., 0, :]
+    k = nn.rope(k[..., None, :], posv, cfg.rope_theta)[..., 0, :]
+
+    if cfg.attn.backend in ("mita", "mita_ref"):
+        o, state = mdec.mita_decode_step(state, q, k, v, _decode_cfg(cfg))
+    else:
+        o, state = mdec.full_decode_step(state, q, k, v)
+    o = o.reshape(b, cfg.n_heads * dh)
+    return o @ params["wo"].astype(ct), state
+
+
+def block_decode(params: Params, x: jax.Array, state, cfg: nn.ModelConfig,
+                 pos: jax.Array):
+    h, state = attention_decode(params["attn"], nn.rms_norm(x, params["ln1"]),
+                                state, cfg, pos)
+    x = x + h
+    xn = nn.rms_norm(x, params["ln2"])
+    if cfg.n_experts:
+        f, _ = moe_apply(params["moe"], xn[:, None, :], cfg)
+        f = f[:, 0]
+    else:
+        f = nn.swiglu_apply(params["ffn"], xn, cfg)
+    return x + f, state
+
+
+def lm_decode_step(params: Params, states, token: jax.Array,
+                   pos: jax.Array, cfg: nn.ModelConfig):
+    """token: [B] int32; pos: scalar. Returns (logits [B, V], states)."""
+    x = nn.embed(params["emb"], token, cfg)
+
+    def body(h, layer):
+        lp, st = layer
+        h, st = block_decode(lp, h, st, cfg, pos)
+        return h, st
+
+    x, new_states = jax.lax.scan(body, x, (params["blocks"], states),
+                                 unroll=cfg.scan_unroll)
+    logits = nn.unembed(params["emb"], nn.rms_norm(x, params["ln_f"]), cfg)
+    return logits, new_states
+
+
+def lm_prefill(params: Params, tokens: jax.Array, cfg: nn.ModelConfig,
+               capacity: int,
+               extra_embeds: Optional[jax.Array] = None):
+    """Forward over the prompt, building per-layer decode states.
+
+    Returns (last_logits [B, V], states).
+    """
+    b, n = tokens.shape
+    positions = jnp.arange(n)
+    x = nn.embed(params["emb"], tokens, cfg)
+    if extra_embeds is not None:
+        p = extra_embeds.shape[1]
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x[:, p:]], axis=1)
+
+    def body(h, layer_params):
+        xin = nn.rms_norm(h, layer_params["ln1"])
+        # recompute q/k/v to build the cache (cheap relative to attention)
+        q, k, v = nn._qkv(layer_params["attn"], xin, cfg, positions)
+        if cfg.attn.backend in ("mita", "mita_ref"):
+            st = mdec.mita_prefill_state(q, k, v, _decode_cfg(cfg), capacity)
+        else:
+            st = mdec.full_prefill_state(k, v, capacity)
+        h, _ = block_apply(layer_params, h, cfg, positions)
+        return h, st
+
+    x, states = jax.lax.scan(body, x, params["blocks"],
+                             unroll=cfg.scan_unroll)
+    x = nn.rms_norm(x, params["ln_f"])
+    logits = nn.unembed(params["emb"], x[:, -1], cfg)
+    return logits, states

@@ -1,0 +1,193 @@
+"""Whisper-style encoder-decoder (audio backbone only; conv frontend stub).
+
+The modality frontend is a STUB per the brief: ``input_specs`` supplies
+precomputed frame embeddings [B, T_enc, D] (what the two conv layers would
+produce).  MiTA applies to the *encoder* self-attention in its native
+bidirectional form and to the decoder self-attention causally; cross-
+attention stays full (T_enc = 1500 is small) — DESIGN.md §Arch-applicability.
+
+Decode: decoder self-attention cache + cross-attention K/V precomputed once
+from the encoder output.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mita_decode as mdec
+from repro.core.baselines import full_attention
+from repro.models import modules as nn
+from repro.models import transformer as tfm
+
+Params = dict[str, Any]
+
+
+def _xattn_init(rng, cfg: nn.ModelConfig) -> Params:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.dh
+    ks = jax.random.split(rng, 4)
+    return {"wq": nn.dense_init(ks[0], d, h * dh, cfg.param_dtype),
+            "wk": nn.dense_init(ks[1], d, h * dh, cfg.param_dtype),
+            "wv": nn.dense_init(ks[2], d, h * dh, cfg.param_dtype),
+            "wo": nn.dense_init(ks[3], h * dh, d, cfg.param_dtype)}
+
+
+def _xattn_kv(p: Params, enc: jax.Array, cfg: nn.ModelConfig):
+    b, t, _ = enc.shape
+    h, dh = cfg.n_heads, cfg.dh
+    ct = cfg.compute_dtype
+    k = (enc @ p["wk"].astype(ct)).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = (enc @ p["wv"].astype(ct)).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def _xattn_apply(p: Params, x: jax.Array, k: jax.Array, v: jax.Array,
+                 cfg: nn.ModelConfig) -> jax.Array:
+    """x: [B, N, D] queries; k/v: [B, H, T, dh] from the encoder."""
+    b, n, _ = x.shape
+    h, dh = cfg.n_heads, cfg.dh
+    ct = cfg.compute_dtype
+    q = (x @ p["wq"].astype(ct)).reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+    o = full_attention(q, k, v, causal=False)
+    o = o.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+    return o @ p["wo"].astype(ct)
+
+
+def enc_block_init(rng, cfg: nn.ModelConfig) -> Params:
+    ks = jax.random.split(rng, 2)
+    return {"ln1": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+            "ln2": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+            "attn": nn.attention_init(ks[0], cfg),
+            "mlp": nn.gelu_mlp_init(ks[1], cfg)}
+
+
+def dec_block_init(rng, cfg: nn.ModelConfig) -> Params:
+    ks = jax.random.split(rng, 3)
+    return {"ln1": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+            "ln2": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+            "ln3": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+            "attn": nn.attention_init(ks[0], cfg),
+            "xattn": _xattn_init(ks[1], cfg),
+            "mlp": nn.gelu_mlp_init(ks[2], cfg)}
+
+
+def whisper_init(rng, cfg: nn.ModelConfig, t_enc: int = 1500) -> Params:
+    ks = jax.random.split(rng, 5)
+    enc_keys = jax.random.split(ks[0], cfg.n_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "enc_pos": (jax.random.normal(ks[2], (t_enc, cfg.d_model)) * 0.01
+                    ).astype(cfg.param_dtype),
+        "enc": jax.vmap(lambda k: enc_block_init(k, cfg))(enc_keys),
+        "enc_ln": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "dec": jax.vmap(lambda k: dec_block_init(k, cfg))(dec_keys),
+        "dec_ln": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "emb": nn.embedding_init(ks[3], cfg),
+    }
+
+
+def whisper_encode(params: Params, audio_embeds: jax.Array,
+                   cfg: nn.ModelConfig) -> jax.Array:
+    """audio_embeds: [B, T_enc, D] (conv-frontend stub output)."""
+    import dataclasses
+    if cfg.attn.enc_window:
+        cfg = dataclasses.replace(
+            cfg, attn=dataclasses.replace(cfg.attn,
+                                          window=cfg.attn.enc_window))
+    t = audio_embeds.shape[1]
+    x = audio_embeds.astype(cfg.compute_dtype) \
+        + params["enc_pos"][:t].astype(cfg.compute_dtype)
+    positions = jnp.arange(t)
+
+    def body(h, bp):
+        a = nn.attention_apply(bp["attn"], nn.rms_norm(h, bp["ln1"]), cfg,
+                               positions, bidir=True)
+        h = h + a
+        h = h + nn.gelu_mlp_apply(bp["mlp"], nn.rms_norm(h, bp["ln2"]), cfg)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"], unroll=cfg.scan_unroll)
+    return nn.rms_norm(x, params["enc_ln"])
+
+
+def whisper_decode_train(params: Params, enc_out: jax.Array,
+                         tokens: jax.Array, cfg: nn.ModelConfig):
+    x = nn.embed(params["emb"], tokens, cfg)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(h, bp):
+        a = nn.attention_apply(bp["attn"], nn.rms_norm(h, bp["ln1"]), cfg,
+                               positions)
+        h = h + a
+        k, v = _xattn_kv(bp["xattn"], enc_out, cfg)
+        h = h + _xattn_apply(bp["xattn"], nn.rms_norm(h, bp["ln2"]), k, v, cfg)
+        h = h + nn.gelu_mlp_apply(bp["mlp"], nn.rms_norm(h, bp["ln3"]), cfg)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["dec"], unroll=cfg.scan_unroll)
+    x = nn.rms_norm(x, params["dec_ln"])
+    return nn.unembed(params["emb"], x, cfg)
+
+
+def whisper_loss(params: Params, batch: dict, cfg: nn.ModelConfig):
+    enc = whisper_encode(params, batch["audio_embeds"], cfg)
+    logits = whisper_decode_train(params, enc, batch["tokens"], cfg)
+    return nn.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+
+
+# ----------------------------------------------------------------- serving --
+
+class WhisperDecState(NamedTuple):
+    self_state: Any      # per-layer self-attention cache
+    xk: jax.Array        # [B, H, T_enc, dh] cross K (precomputed)
+    xv: jax.Array
+
+
+def whisper_init_serve(params: Params, audio_embeds: jax.Array,
+                       cfg: nn.ModelConfig, capacity: int):
+    """Encode audio once; build stacked decoder states."""
+    enc = whisper_encode(params, audio_embeds, cfg)
+    b = enc.shape[0]
+
+    def per_layer(bp):
+        k, v = _xattn_kv(bp["xattn"], enc, cfg)
+        return k, v
+
+    xk, xv = jax.lax.scan(lambda _, bp: (0, per_layer(bp)), 0,
+                          params["dec"], unroll=cfg.scan_unroll)[1]
+    if cfg.attn.backend in ("mita", "mita_ref"):
+        one = mdec.init_decode_state(
+            b, cfg.n_kv, cfg.dh, capacity,
+            mdec.DecodeConfig(window=cfg.attn.window, k=cfg.attn.k,
+                              s=cfg.attn.s), dtype=cfg.compute_dtype)
+    else:
+        one = mdec.init_full_state(b, cfg.n_kv, cfg.dh, capacity,
+                                   dtype=cfg.compute_dtype)
+    self_states = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)
+    return WhisperDecState(self_state=self_states, xk=xk, xv=xv)
+
+
+def whisper_decode_step(params: Params, state: WhisperDecState,
+                        token: jax.Array, pos: jax.Array, cfg: nn.ModelConfig):
+    x = nn.embed(params["emb"], token, cfg)
+
+    def body(h, layer):
+        bp, st, xk, xv = layer
+        a, st = tfm.attention_decode(bp["attn"], nn.rms_norm(h, bp["ln1"]),
+                                     st, cfg, pos)
+        h = h + a
+        h = h + _xattn_apply(bp["xattn"],
+                             nn.rms_norm(h, bp["ln2"])[:, None, :],
+                             xk, xv, cfg)[:, 0]
+        h = h + nn.gelu_mlp_apply(bp["mlp"], nn.rms_norm(h, bp["ln3"]), cfg)
+        return h, st
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec"], state.self_state, state.xk, state.xv),
+        unroll=cfg.scan_unroll)
+    logits = nn.unembed(params["emb"], nn.rms_norm(x, params["dec_ln"]), cfg)
+    return logits, state._replace(self_state=new_self)

@@ -1,0 +1,121 @@
+"""Compressed data-parallel gradient reduction (beyond-paper distributed
+optimization trick; see the brief's 1000+-node requirements).
+
+A GSPMD train step reduces gradients with implicit f32/bf16 all-reduces.
+For pure-DP segments (the cross-pod axis at scale) this module provides an
+explicit shard_map-based reduction that moves **int8** on the wire:
+
+  1. per-tensor absmax-quantize the local gradient to int8 (+f32 scale);
+  2. reduce-scatter via `all_to_all` (each device receives the int8 chunks
+     of its segment from every peer — 1 byte/element on the wire);
+  3. dequantize + sum locally in f32, re-quantize the reduced segment;
+  4. `all_gather` the int8 segments (1 byte/element again).
+
+Wire bytes: 2·(n−1)/n·size·1B vs 2·(n−1)/n·size·4B for an f32 ring
+all-reduce — a 4× reduction, verified by HLO collective-byte counting in
+tests/test_compression.py.
+
+Quantization error is handled with standard **error feedback** (Seide et
+al., 1-bit SGD): the residual (g − Q(g)) is carried in the optimizer state
+and added to the next step's gradient, making the scheme unbiased over
+time.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_int8(g: jax.Array):
+    """Per-tensor symmetric absmax quantization. Returns (q int8, scale)."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _compressed_allreduce_leaf(g: jax.Array, axis_name: str, n: int):
+    """Mean-all-reduce one tensor with int8 wire traffic (inside shard_map)."""
+    flat = g.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    flat = jnp.pad(flat, (0, pad))
+    q, scale = quantize_int8(flat)
+
+    # reduce-scatter: all_to_all the n chunks; receive peers' copies of OUR
+    # segment
+    chunks = q.reshape(n, -1)
+    recv = jax.lax.all_to_all(chunks, axis_name, split_axis=0,
+                              concat_axis=0, tiled=True)       # [n, seg]
+    scales = jax.lax.all_gather(scale, axis_name)              # [n]
+    seg = jnp.sum(recv.astype(jnp.float32).reshape(n, -1)
+                  * scales[:, None], axis=0) / n               # mean
+
+    q2, s2 = quantize_int8(seg)
+    segs = jax.lax.all_gather(q2, axis_name)                   # [n, seg] int8
+    s2s = jax.lax.all_gather(s2, axis_name)                    # [n]
+    full = (segs.astype(jnp.float32) * s2s[:, None]).reshape(-1)
+    if pad:
+        full = full[:-pad]
+    return full.reshape(g.shape)
+
+
+def compressed_grad_mean(grads: Any, axis_name: str, n: int,
+                         err: Any = None):
+    """Mean-reduce a gradient pytree across ``axis_name`` with int8 wire
+    traffic and error feedback.  Returns (reduced_grads, new_err)."""
+    if err is None:
+        err = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def leaf(g, e):
+        g_fb = g.astype(jnp.float32) + e
+        reduced = _compressed_allreduce_leaf(g_fb, axis_name, n)
+        # residual of the *local* quantization (the part not transmitted)
+        q, s = quantize_int8(g_fb)
+        new_e = g_fb - dequantize_int8(q, s)
+        return reduced, new_e
+
+    out = jax.tree.map(leaf, grads, err)
+    reduced = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return reduced, new_err
+
+
+def dp_compressed_train_step(loss_fn, opt_update, mesh, axis: str = "data"):
+    """Build a pure-DP train step with compressed gradient reduction.
+
+    ``loss_fn(params, batch) -> loss``;
+    ``opt_update(grads, opt_state, params) -> (params, opt_state, metrics)``.
+    Params replicated; batch sharded over ``axis``.  The returned step has
+    signature (params, opt_state, err, batch) -> (params, opt, err, metrics).
+    """
+    from jax.experimental.shard_map import shard_map
+    n = mesh.shape[axis]
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(), P(), P(), P(axis)),
+        out_specs=(P(), P(), P(), P()),
+        check_rep=False)
+    def step(params, opt_state, err, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, err = compressed_grad_mean(grads, axis, n, err)
+        params, opt_state, metrics = opt_update(grads, opt_state, params)
+        metrics["loss"] = jax.lax.pmean(loss, axis)
+        return params, opt_state, err, metrics
+
+    return step
+
+
+def init_error_feedback(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,112 @@
+"""Compressed DP gradient reduction: correctness + wire-byte verification
+(runs in a subprocess with 8 fake devices, like test_distributed)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.compression import dequantize_int8, quantize_int8
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(1e-3, 1e3))
+def test_quantize_roundtrip_bound(seed, scale):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
+    q, s = quantize_int8(g)
+    err = np.max(np.abs(np.asarray(dequantize_int8(q, s) - g)))
+    assert err <= float(s) * 0.5 + 1e-9   # half-ulp of the quant grid
+
+
+def _run_sub(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_compressed_allreduce_matches_psum_and_compresses_wire():
+    print(_run_sub("""
+        import jax, jax.numpy as jnp, numpy as np, functools
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.optim.compression import compressed_grad_mean
+        from repro.analysis.roofline import collective_bytes
+
+        mesh = jax.make_mesh((8,), ("data",))
+        g = {"w": jax.random.normal(jax.random.PRNGKey(0), (1024, 64)),
+             "b": jax.random.normal(jax.random.PRNGKey(1), (259,))}
+
+        @functools.partial(shard_map, mesh=mesh, in_specs=(P(),),
+                           out_specs=P(), check_rep=False)
+        def comp(gg):
+            out, _ = compressed_grad_mean(gg, "data", 8)
+            return out
+
+        @functools.partial(shard_map, mesh=mesh, in_specs=(P(),),
+                           out_specs=P(), check_rep=False)
+        def exact(gg):
+            return jax.tree.map(lambda x: jax.lax.pmean(x, "data"), gg)
+
+        with mesh:
+            r_comp = jax.jit(comp)(g)
+            r_exact = jax.jit(exact)(g)
+            # identical inputs on every shard -> mean == input; quantization
+            # error bounded by one grid step
+            for k in g:
+                q_err = np.max(np.abs(np.asarray(r_comp[k] - r_exact[k])))
+                tol = 2.5 * float(jnp.max(jnp.abs(g[k]))) / 127.0
+                assert q_err < tol, (k, q_err, tol)
+
+            cb_comp = collective_bytes(jax.jit(comp).lower(g).compile().as_text())
+            cb_exact = collective_bytes(jax.jit(exact).lower(g).compile().as_text())
+            wire_comp = sum(cb_comp.values())
+            wire_exact = sum(cb_exact.values())
+            print("wire bytes: compressed", wire_comp, "exact", wire_exact)
+            assert wire_comp < wire_exact / 2.5, (wire_comp, wire_exact)
+        print("OK")
+    """))
+
+
+def test_dp_compressed_training_converges():
+    print(_run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.optim import OptConfig, adamw_init, adamw_update
+        from repro.optim.compression import (dp_compressed_train_step,
+                                             init_error_feedback)
+        from repro.models.modules import ModelConfig, AttnConfig
+        from repro.models.transformer import lm_init, lm_loss
+        from repro.data import DataConfig, synthetic_batch
+
+        mesh = jax.make_mesh((8,), ("data",))
+        cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv=2,
+                          d_ff=128, vocab=128,
+                          attn=AttnConfig(window=16, k=16))
+        ocfg = OptConfig(lr=1e-3, warmup_steps=2, total_steps=30)
+        params = lm_init(jax.random.PRNGKey(0), cfg)
+        opt = adamw_init(params)
+        err = init_error_feedback(params)
+        step = jax.jit(dp_compressed_train_step(
+            lambda p, b: lm_loss(p, b, cfg),
+            lambda g, o, p: adamw_update(g, o, p, ocfg), mesh))
+        data = DataConfig(vocab=128, seq_len=64, global_batch=8)
+        with mesh:
+            losses = []
+            for i in range(25):
+                params, opt, err, m = step(params, opt, err,
+                                           synthetic_batch(data, i))
+                losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.3, losses[::6]
+        print("loss", losses[0], "->", losses[-1], "OK")
+    """))

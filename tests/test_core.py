@@ -1,0 +1,179 @@
+"""Core MiTA semantics: oracle equivalences + hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import (full_attention, linear_attention,
+                                  local_attention, moba_attention)
+from repro.core.combine import (Partial, combine, partial_from_logits,
+                                partial_from_scores)
+from repro.core.mita import MiTAConfig, mita_attention
+from repro.core.mita_sparse import aux_load_balance, mita_attention_sparse
+
+RNG = jax.random.PRNGKey(0)
+
+
+def qkv(b=2, h=2, n=64, d=16, key=RNG):
+    return tuple(jax.random.normal(k, (b, h, n, d))
+                 for k in jax.random.split(key, 3))
+
+
+# ----------------------------------------------------------- combine math ---
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 5), st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_combine_equals_concat_softmax(n1, n2, seed):
+    """Branch-wise online-softmax combine == one softmax over the concat."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = 4
+    l1 = jax.random.normal(k1, (3, n1)) * 3
+    v1 = jax.random.normal(k2, (3, n1, d))
+    l2 = jax.random.normal(k3, (3, n2)) * 3
+    v2 = jax.random.normal(k4, (3, n2, d))
+    out = combine([partial_from_logits(l1, v1), partial_from_logits(l2, v2)])
+    cat_l = jnp.concatenate([l1, l2], axis=-1)
+    cat_v = jnp.concatenate([v1, v2], axis=-2)
+    p = jax.nn.softmax(cat_l, axis=-1)
+    ref = jnp.einsum("bn,bnd->bd", p, cat_v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_combine_fully_masked_is_zero():
+    l = jnp.full((2, 4), -jnp.inf)
+    v = jnp.ones((2, 4, 3))
+    out = combine([partial_from_logits(l, v, mask=jnp.zeros((2, 4), bool))])
+    assert np.all(np.asarray(out) == 0.0)
+
+
+# -------------------------------------------------------- MiTA invariants ---
+
+def test_route_only_full_k_equals_full_attention():
+    q, k, v = qkv()
+    cfg = MiTAConfig(m=4, k=64, route_only=True)
+    out = mita_attention(q, k, v, cfg)
+    ref = full_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8]),
+       st.sampled_from([8, 16]), st.integers(1, 2))
+def test_causal_no_future_leak(seed, m, k_width, s):
+    """Property: causal MiTA output at position t is independent of all
+    inputs at positions > t."""
+    key = jax.random.PRNGKey(seed)
+    b, h, n, d = 1, 2, 64, 8
+    q, k, v = (jax.random.normal(kk, (b, h, n, d))
+               for kk in jax.random.split(key, 3))
+    cfg = MiTAConfig(m=m, k=k_width, s=s, causal=True)
+    out1 = mita_attention(q, k, v, cfg)
+    cut = 40
+    k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed + 1), 3)
+    q2 = q.at[..., cut:, :].set(jax.random.normal(k2, (b, h, n - cut, d)))
+    kk2 = k.at[..., cut:, :].set(jax.random.normal(k3, (b, h, n - cut, d)))
+    v2 = v.at[..., cut:, :].set(jax.random.normal(k4, (b, h, n - cut, d)))
+    out2 = mita_attention(q2, kk2, v2, cfg)
+    # positions strictly before the first window containing `cut`
+    w = n // m
+    safe = (cut // w) * w
+    np.testing.assert_allclose(np.asarray(out1[..., :safe, :]),
+                               np.asarray(out2[..., :safe, :]), atol=1e-6)
+
+
+@pytest.mark.parametrize("impl", ["sorted", "capacity", "pallas"])
+@pytest.mark.parametrize("causal,s", [(False, 1), (True, 1), (True, 2)])
+def test_sparse_matches_reference(impl, causal, s):
+    q, k, v = qkv(n=128)
+    cfg = MiTAConfig(m=8, k=16, s=s, causal=causal)
+    ref = mita_attention(q, k, v, cfg)
+    out = mita_attention_sparse(q, k, v, cfg, impl=impl, block_q=32,
+                                expert_span=8, capacity_factor=8.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_sparse_gqa_group_landmarks():
+    b, hkv, g, n, d = 2, 2, 3, 64, 8
+    key = RNG
+    q = jax.random.normal(key, (b, hkv, g, n, d))
+    k, v = (jax.random.normal(kk, (b, hkv, 1, n, d))
+            for kk in jax.random.split(key, 2))
+    q_lm = jnp.mean(q, axis=2, keepdims=True)
+    cfg = MiTAConfig(m=8, k=8, causal=True)
+    ref = mita_attention(q, k, v, cfg, q_landmarks=q_lm)
+    for impl in ("sorted", "capacity", "pallas"):
+        out = mita_attention_sparse(q, k, v, cfg, impl=impl, block_q=32,
+                                    expert_span=8, capacity_factor=8.0,
+                                    q_landmarks=q_lm)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5, err_msg=impl)
+
+
+def test_ablation_variants_finite():
+    q, k, v = qkv()
+    for cfg in [MiTAConfig(m=8, k=8, compress_only=True),
+                MiTAConfig(m=8, k=8, route_only=True),
+                MiTAConfig(m=8, k=8, causal=True, include_local=False),
+                MiTAConfig(m=8, k=8, landmark="random")]:
+        out = mita_attention(q, k, v, cfg)
+        assert np.isfinite(np.asarray(out)).all(), cfg
+
+
+def test_aux_load_balance_uniform_is_one():
+    # perfectly uniform assignment -> loss ~ 1, skewed -> > 1
+    n, m = 512, 8
+    r_uniform = jnp.tile(jnp.eye(m), (n // m, 1)) * 10.0
+    cfg = MiTAConfig(m=m, k=4)
+    v = float(aux_load_balance(r_uniform[None], cfg))
+    assert abs(v - 1.0) < 0.05
+    r_skew = jnp.zeros((n, m)).at[:, 0].set(10.0)
+    v2 = float(aux_load_balance(r_skew[None], cfg))
+    assert v2 > 2.0
+
+
+# -------------------------------------------------------------- baselines ---
+
+def test_moba_all_blocks_equals_full_causal():
+    q, k, v = qkv()
+    ref = full_attention(q, k, v, causal=True)
+    out = moba_attention(q, k, v, block_size=8, top_blocks=7)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_local_attention_first_block_matches_full():
+    q, k, v = qkv()
+    ref = full_attention(q, k, v, causal=True)
+    out = local_attention(q, k, v, window=16, causal=True)
+    np.testing.assert_allclose(np.asarray(out[..., :16, :]),
+                               np.asarray(ref[..., :16, :]), atol=2e-5)
+
+
+def test_linear_attention_causal_matches_bidir_prefix():
+    """Causal linear attention at the last position == bidirectional over
+    the full sequence (the cumulative state covers everything)."""
+    q, k, v = qkv(n=32)
+    c = linear_attention(q, k, v, causal=True)
+    b = linear_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(c[..., -1, :]),
+                               np.asarray(b[..., -1, :]), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_agent_equals_compress_only():
+    """Agent Attention is MiTA's compress-only degenerate case (paper §4)."""
+    q, k, v = qkv()
+    cfg = MiTAConfig(m=8, k=8, compress_only=True)
+    out = mita_attention(q, k, v, cfg)
+    # manual agent attention: agents = pooled queries
+    from repro.core.landmarks import pool1d
+    import math
+    d = q.shape[-1]
+    agents = pool1d(q, 8)
+    agent_v = full_attention(agents, k, v)
+    out_ref = full_attention(q, agents, agent_v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               atol=2e-5)

@@ -1,0 +1,145 @@
+"""Distributed tests — spawn subprocesses with 8 fake host devices so the
+main test process keeps its single-device view (per the brief, the forced
+device count must never leak into smoke tests/benches)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_sharded_train_step_compiles_and_runs():
+    print(run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.registry import get_arch, ShapeSpec
+        from repro.launch.steps import build_cell, family_fns
+        from repro.optim import adamw_init
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        arch = get_arch("qwen3-0.6b", smoke=True)
+        import dataclasses
+        # widen smoke so dims divide the 4-way model axis
+        arch = dataclasses.replace(arch, model=dataclasses.replace(
+            arch.model, d_model=128, n_heads=4, n_kv=2, head_dim=32,
+            d_ff=256, vocab=256))
+        cell = build_cell(arch, ShapeSpec("t", "train", 64, 4), mesh)
+        fns = family_fns(arch)
+        with mesh:
+            params = jax.jit(fns["init"],
+                             out_shardings=cell.in_shardings[0])(
+                jax.random.PRNGKey(0))
+            opt = jax.jit(adamw_init,
+                          out_shardings=cell.in_shardings[1])(params)
+            step = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                           out_shardings=cell.out_shardings)
+            from repro.data import DataConfig, synthetic_batch
+            b = synthetic_batch(DataConfig(vocab=256, seq_len=64,
+                                           global_batch=4), 0)
+            p2, o2, m = step(params, opt, b)
+            assert np.isfinite(float(m["loss"]))
+            # TP actually sharded something across the model axis
+            wq = p2["blocks"]["attn"]["wq"]
+            assert len(wq.sharding.device_set) == 8 or \
+                   "model" in str(wq.sharding.spec)
+            print("loss", float(m["loss"]))
+        print("OK")
+    """))
+
+
+def test_sharded_result_matches_single_device():
+    """The same train step on a (2,4) mesh and on 1 device gives the same
+    loss — GSPMD partitioning must not change semantics."""
+    code = """
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from repro.configs.registry import get_arch, ShapeSpec
+        from repro.launch.steps import build_cell, family_fns
+        from repro.optim import adamw_init
+        from repro.data import DataConfig, synthetic_batch
+        arch = get_arch("tinyllama-1.1b", smoke=True)
+        arch = dataclasses.replace(arch, model=dataclasses.replace(
+            arch.model, d_model=128, n_heads=4, n_kv=2, head_dim=32,
+            d_ff=256, vocab=256))
+        fns = family_fns(arch)
+        b = synthetic_batch(DataConfig(vocab=256, seq_len=64,
+                                       global_batch=4), 0)
+        mesh = jax.make_mesh(MESH_SHAPE, ("data", "model"))
+        cell = build_cell(arch, ShapeSpec("t", "train", 64, 4), mesh)
+        with mesh:
+            params = jax.jit(fns["init"],
+                             out_shardings=cell.in_shardings[0])(
+                jax.random.PRNGKey(0))
+            opt = jax.jit(adamw_init,
+                          out_shardings=cell.in_shardings[1])(params)
+            step = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                           out_shardings=cell.out_shardings)
+            _, _, m = step(params, opt, b)
+            print("LOSS=%.6f" % float(m["loss"]))
+    """
+    out1 = run_sub(code.replace("MESH_SHAPE", "(1, 1)"), devices=1)
+    out8 = run_sub(code.replace("MESH_SHAPE", "(2, 4)"), devices=8)
+    l1 = float(out1.split("LOSS=")[1].split()[0])
+    l8 = float(out8.split("LOSS=")[1].split()[0])
+    assert abs(l1 - l8) < 5e-3, (l1, l8)
+
+
+def test_elastic_retarget_between_meshes():
+    print(run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.fault_tolerance import elastic_retarget
+        from repro.models.modules import ModelConfig, AttnConfig
+        from repro.models.transformer import lm_init
+        cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv=2,
+                          d_ff=128, vocab=128,
+                          attn=AttnConfig(window=16, k=16))
+        params = lm_init(jax.random.PRNGKey(0), cfg)
+        m1 = jax.make_mesh((2, 4), ("data", "model"))
+        p1 = elastic_retarget(params, m1)
+        # "node failure": retarget onto a smaller mesh
+        m2 = jax.make_mesh((1, 2), ("data", "model"))
+        p2 = elastic_retarget(jax.device_get(p1), m2)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("OK")
+    """))
+
+
+def test_dryrun_cell_on_test_mesh():
+    """The dry-run machinery itself (lower+compile+roofline) on 8 devices."""
+    print(run_sub("""
+        import jax
+        from repro.configs.registry import get_arch, SHAPES, ShapeSpec
+        import dataclasses
+        from repro.launch.steps import build_cell
+        from repro.analysis import roofline as rl
+        arch = get_arch("qwen3-0.6b", smoke=True)
+        arch = dataclasses.replace(arch, model=dataclasses.replace(
+            arch.model, d_model=128, n_heads=4, n_kv=2, head_dim=32,
+            d_ff=256, vocab=256))
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cell = build_cell(arch, ShapeSpec("t", "train", 64, 8), mesh)
+        with mesh:
+            lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                              out_shardings=cell.out_shardings).lower(*cell.args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        assert mem.temp_size_in_bytes >= 0
+        roof = rl.from_compiled("t", "2x4", 8, compiled, model_flops=1e9)
+        assert roof.flops_per_chip > 0
+        assert roof.t_compute > 0 and roof.t_memory > 0
+        print("bottleneck:", roof.bottleneck, "coll:", roof.coll_breakdown)
+        print("OK")
+    """))

@@ -1,0 +1,94 @@
+"""Per-kernel allclose vs ref.py oracles: shape/dtype sweeps, interpret=True."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn import flash_attention
+from repro.kernels.mita_expert_attn import mita_expert_attention
+from repro.kernels.ops import routed_expert_partial
+from repro.kernels.ref import flash_attention_ref, mita_expert_attention_ref
+
+RNG = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("b,h,n,d", [(2, 3, 256, 64), (1, 2, 128, 128),
+                                     (1, 1, 512, 32), (2, 1, 64, 16)])
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, h, n, d, causal, dtype):
+    ks = jax.random.split(jax.random.fold_in(RNG, n * d + causal), 3)
+    q, k, v = (jax.random.normal(kk, (b, h, n, d), dtype) for kk in ks)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    ref = flash_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), causal=causal)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               atol=atol, rtol=atol)
+
+
+def test_flash_attention_cross_lengths():
+    """n_q != n_kv (cross-attention shape)."""
+    q = jax.random.normal(RNG, (1, 2, 128, 32))
+    k = jax.random.normal(jax.random.fold_in(RNG, 1), (1, 2, 256, 32))
+    v = jax.random.normal(jax.random.fold_in(RNG, 2), (1, 2, 256, 32))
+    out = flash_attention(q, k, v, interpret=True, block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("b,h,ns,d,m,kw,bq", [
+    (2, 2, 128, 32, 8, 16, 32),
+    (1, 3, 256, 64, 16, 32, 64),
+    (1, 1, 64, 16, 4, 8, 64),
+    (1, 1, 128, 128, 2, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mita_expert_kernel_sweep(b, h, ns, d, m, kw, bq, dtype):
+    ks = jax.random.split(jax.random.fold_in(RNG, ns * m), 5)
+    q = jax.random.normal(ks[0], (b, h, ns, d), dtype)
+    assign = jnp.sort(jax.random.randint(ks[1], (b, h, ns), 0, m + 1), -1)
+    ke = jax.random.normal(ks[2], (b, h, m, kw, d), dtype)
+    ve = jax.random.normal(ks[3], (b, h, m, kw, d), dtype)
+    valid = jax.random.bernoulli(ks[4], 0.9, (b, h, m, kw))
+    o, ms, l = mita_expert_attention(q, assign, ke, ve, valid,
+                                     block_q=bq, interpret=True)
+    oref, msref, lref = mita_expert_attention_ref(
+        q.astype(jnp.float32), assign, ke.astype(jnp.float32),
+        ve.astype(jnp.float32), valid)
+    act = np.asarray(l) > 0
+    assert np.allclose(act, np.asarray(lref) > 0)
+    on = np.asarray(o, np.float32) / np.maximum(np.asarray(l)[..., None], 1e-30)
+    orn = np.asarray(oref) / np.maximum(np.asarray(lref)[..., None], 1e-30)
+    atol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(on * act[..., None], orn * act[..., None],
+                               atol=atol, rtol=atol)
+    np.testing.assert_allclose(np.asarray(ms) * act, np.asarray(msref) * act,
+                               atol=atol, rtol=atol)
+
+
+def test_ops_wrapper_broadcast_leads():
+    """routed_expert_partial accepts GQA-style broadcast kv leads."""
+    b, hkv, g, ns, d, m, kw = 1, 2, 3, 64, 16, 4, 8
+    ks = jax.random.split(RNG, 5)
+    q = jax.random.normal(ks[0], (b, hkv, g, ns, d))
+    a = jnp.sort(jax.random.randint(ks[1], (b, hkv, g, ns), 0, m), -1)
+    ke = jax.random.normal(ks[2], (b, hkv, 1, m, kw, d))
+    ve = jax.random.normal(ks[3], (b, hkv, 1, m, kw, d))
+    valid = jnp.ones((b, hkv, 1, m, kw), bool)
+    o, ms, l = routed_expert_partial(q, a, ke, ve, valid, block_q=32,
+                                     interpret=True)
+    assert o.shape == (b, hkv, g, ns, d)
+    keb = jnp.broadcast_to(ke, (b, hkv, g, m, kw, d)).reshape(
+        b, hkv * g, m, kw, d)
+    veb = jnp.broadcast_to(ve, (b, hkv, g, m, kw, d)).reshape(
+        b, hkv * g, m, kw, d)
+    vab = jnp.broadcast_to(valid, (b, hkv, g, m, kw)).reshape(
+        b, hkv * g, m, kw)
+    oref, msref, lref = mita_expert_attention_ref(
+        q.reshape(b, hkv * g, ns, d), a.reshape(b, hkv * g, ns),
+        keb, veb, vab)
+    np.testing.assert_allclose(np.asarray(o).reshape(b, hkv * g, ns, d),
+                               np.asarray(oref), atol=3e-5)

@@ -1,0 +1,153 @@
+"""Optimizer / data pipeline / checkpoint / fault-tolerance unit tests."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, restore_checkpoint, save_checkpoint
+from repro.data import DataConfig, SyntheticLMStream, synthetic_batch
+from repro.distributed.fault_tolerance import StepTimer, run_with_restarts
+from repro.optim import (OptConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, cosine_schedule)
+
+
+# ---------------------------------------------------------------- optimizer
+
+def test_adamw_matches_numpy_reference():
+    cfg = OptConfig(lr=1e-2, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.1,
+                    clip_norm=1e9, warmup_steps=0, total_steps=10,
+                    min_lr_ratio=1.0)
+    p = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]])}
+    g = {"w": jnp.asarray([[0.1, 0.2], [-0.3, 0.4]])}
+    state = adamw_init(p)
+    new_p, state, metrics = adamw_update(g, state, p, cfg)
+
+    w, gr = np.array(p["w"]), np.array(g["w"])
+    mu = 0.1 * gr
+    nu = 0.01 * gr * gr
+    mhat = mu / (1 - 0.9)
+    nhat = nu / (1 - 0.99)
+    ref = w - 1e-2 * (mhat / (np.sqrt(nhat) + 1e-8) + 0.1 * w)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), ref, rtol=1e-6)
+
+
+def test_cosine_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                    min_lr_ratio=0.1)
+    s = [float(cosine_schedule(jnp.asarray(t), cfg)) for t in
+         [0, 5, 10, 60, 110]]
+    assert s[0] == 0.0 and abs(s[1] - 0.5) < 1e-6 and abs(s[2] - 1.0) < 1e-6
+    assert s[2] > s[3] > s[4] >= 0.1 - 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(0.1, 10.0), st.integers(0, 2**31 - 1))
+def test_clip_by_global_norm_property(max_norm, seed):
+    g = {"a": jax.random.normal(jax.random.PRNGKey(seed), (7,)) * 5}
+    clipped, gn = clip_by_global_norm(g, max_norm)
+    cn = float(jnp.linalg.norm(clipped["a"]))
+    assert cn <= max_norm * (1 + 1e-5) or cn <= float(gn) + 1e-5
+
+
+# --------------------------------------------------------------------- data
+
+def test_data_deterministic_and_elastic_invariant():
+    """Same (seed, step) -> same global batch, regardless of host count."""
+    cfg1 = DataConfig(vocab=101, seq_len=32, global_batch=8, host_count=1)
+    full = synthetic_batch(cfg1, step=5)["tokens"]
+    parts = []
+    for hi in range(4):
+        cfg4 = DataConfig(vocab=101, seq_len=32, global_batch=8,
+                          host_index=hi, host_count=4)
+        parts.append(synthetic_batch(cfg4, step=5)["tokens"])
+    np.testing.assert_array_equal(full, np.concatenate(parts, axis=0))
+    # different steps differ
+    assert not np.array_equal(full, synthetic_batch(cfg1, step=6)["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab=101, seq_len=32, global_batch=2)
+    b = synthetic_batch(cfg, 0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_stream_prefetch_and_resume():
+    cfg = DataConfig(vocab=101, seq_len=16, global_batch=2)
+    s = SyntheticLMStream(cfg, start_step=3)
+    step, batch = next(s)
+    assert step == 3
+    np.testing.assert_array_equal(batch["tokens"],
+                                  synthetic_batch(cfg, 3)["tokens"])
+    s.close()
+
+
+# --------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "t": (jnp.zeros((2,)), jnp.asarray(3))}
+    save_checkpoint(str(tmp_path), 7, tree)
+    step, restored = restore_checkpoint(str(tmp_path), tree)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_manager_prunes_and_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.ones((3,))}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    mgr.wait()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.ones((3,))})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_checkpoint(str(tmp_path), {"w": jnp.ones((4,))})
+
+
+# ---------------------------------------------------------- fault tolerance
+
+def test_step_timer_straggler_detection():
+    t = StepTimer(alpha=0.5, threshold=2.0)
+    for _ in range(5):
+        t.observe(0.1)
+    assert not t.is_straggling
+    t.observe(1.0)
+    assert t.is_straggling
+
+
+def test_run_with_restarts_recovers(tmp_path):
+    """A step that fails once is replayed identically after restore."""
+    mgr = CheckpointManager(str(tmp_path))
+    failures = {"armed": True}
+
+    def step_fn(step, state):
+        if step == 7 and failures["armed"]:
+            failures["armed"] = False
+            raise RuntimeError("simulated preemption")
+        return {"acc": state["acc"] + step}
+
+    out = run_with_restarts(step_fn, {"acc": jnp.asarray(0)}, mgr,
+                            n_steps=10, ckpt_every=2)
+    assert int(out["acc"]) == sum(range(10))
+
+
+def test_run_with_restarts_gives_up(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+
+    def bad_step(step, state):
+        raise RuntimeError("hard failure")
+
+    with pytest.raises(RuntimeError, match="hard failure"):
+        run_with_restarts(bad_step, {}, mgr, n_steps=3, max_restarts=2)
