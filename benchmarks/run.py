@@ -6,7 +6,7 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [tab2 tab5 ...]
 
 import sys
 
-from benchmarks import tables
+from benchmarks import serve_bench, tables
 
 
 ALL = [
@@ -16,6 +16,7 @@ ALL = [
     ("tab6", tables.tab6_ablations),
     ("tab7", tables.tab7_algorithmic_generalization),
     ("fig5", tables.fig5_inference_throughput),
+    ("serve", serve_bench.serve_poisson),
 ]
 
 

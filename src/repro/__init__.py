@@ -1,0 +1,19 @@
+"""MiTA reproduction package.
+
+Global numerical policy set at import so it is independent of which
+subpackage is imported first:
+
+Partitionable threefry — random bits are a pure function of (key,
+position), independent of how GSPMD partitions the generating
+computation.  With the legacy implementation, `jax.random.normal` inside
+a jit whose out_shardings shard the result produces DIFFERENT values on
+different meshes — observed as wq/wo/tok init leaves drifting between a
+1-device and a (2,4) mesh, making the same train step report loss 5.8555
+vs 6.0465 (test_sharded_result_matches_single_device).  Flipping it here
+(not in a leaf module) keeps RNG streams identical across entry points
+regardless of import order.
+"""
+
+import jax
+
+jax.config.update("jax_threefry_partitionable", True)

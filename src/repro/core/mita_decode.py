@@ -72,6 +72,13 @@ class DecodeConfig:
     external_finalize: bool = False
 
 
+def window_aligned(n: int, window: int) -> int:
+    """Round a token count up to a whole number of landmark windows — the
+    alignment every cache capacity and page boundary in this module (and
+    the serving engine on top of it) must share."""
+    return ((n + window - 1) // window) * window
+
+
 def init_decode_state(batch: int, n_kv: int, head_dim: int, capacity: int,
                       cfg: DecodeConfig, dtype=jnp.bfloat16) -> MiTADecodeState:
     m_max = capacity // cfg.window
@@ -284,3 +291,245 @@ def mita_decode_step(state: MiTADecodeState, q: jax.Array, k_new: jax.Array,
 
     out = combine(parts)
     return out, state._replace(t=t_new)
+
+
+# ----------------------------------------------------------- paged decode --
+#
+# Serving-engine form of the same cache: instead of one monolithic
+# [B, Hkv, C, d] cache per request batch, a single KV pool per layer is
+# shared by every request.  A request owns window-aligned *pages* (page size
+# == cfg.window, so one landmark per completed page); which rows a slot sees
+# is entirely decided by its page table, and slots advance independently
+# (per-slot t) — the continuous-batching engine (repro.serve) keeps the slot
+# batch full regardless of per-request progress.
+#
+# Layout choices:
+#   * pool rows lead ([R+1, Hkv, d]): append is a 1-row scatter at
+#     rows_new[slot], gathers are plain row indexing.  Row R is a write
+#     scratch for inactive slots so the step has no host-side branching.
+#   * expert_idx stores GLOBAL pool rows (page_id * w + offset), assigned at
+#     finalize/pack time — the decode-step gather needs no page-table lookup.
+
+
+class PagedMiTAState(NamedTuple):
+    """Paged decode cache for one layer, shared across S request slots.
+
+    Shapes (R = n_pages * window pool rows + 1 scratch row, S slots,
+    M = pages_per_slot = landmark capacity per slot, K expert width):
+      k_pool, v_pool:   [R + 1, Hkv, d]
+      lm_q, lm_v:       [S, Hkv, M, d]   finalized landmark queries/values
+      expert_idx:       [S, Hkv, M, K]   global pool rows per expert
+      expert_valid:     [S, Hkv, M, K]
+      q_sum:            [S, Hkv, d]      running query sum, current window
+    Per-slot progress (t), page tables, and activity live on the host and
+    are passed into each step — the scheduler owns them.
+    """
+
+    k_pool: jax.Array
+    v_pool: jax.Array
+    lm_q: jax.Array
+    lm_v: jax.Array
+    expert_idx: jax.Array
+    expert_valid: jax.Array
+    q_sum: jax.Array
+
+
+def init_paged_state(n_kv: int, head_dim: int, n_pages: int, n_slots: int,
+                     pages_per_slot: int, cfg: DecodeConfig,
+                     dtype=jnp.bfloat16) -> PagedMiTAState:
+    rows = n_pages * cfg.window + 1
+    return PagedMiTAState(
+        k_pool=jnp.zeros((rows, n_kv, head_dim), dtype),
+        v_pool=jnp.zeros((rows, n_kv, head_dim), dtype),
+        lm_q=jnp.zeros((n_slots, n_kv, pages_per_slot, head_dim), dtype),
+        lm_v=jnp.zeros((n_slots, n_kv, pages_per_slot, head_dim), dtype),
+        expert_idx=jnp.zeros((n_slots, n_kv, pages_per_slot, cfg.k),
+                             jnp.int32),
+        expert_valid=jnp.zeros((n_slots, n_kv, pages_per_slot, cfg.k), bool),
+        q_sum=jnp.zeros((n_slots, n_kv, head_dim), jnp.float32),
+    )
+
+
+def _paged_finalize(state: PagedMiTAState, page_table: jax.Array,
+                    t_new: jax.Array, due: jax.Array,
+                    cfg: DecodeConfig) -> PagedMiTAState:
+    """Finalize landmark i = t_new//w - 1 for every slot with due[s].
+
+    Computed for all slots, committed where ``due`` — identical per-slot
+    semantics to `_finalize_window` on a monolithic cache whose rows are the
+    slot's pages in table order.
+    """
+    from repro.kernels.ops import gather_pages
+
+    w = cfg.window
+    n_slots, _, m_max, _ = state.expert_idx.shape
+    d = state.k_pool.shape[-1]
+    ctx = m_max * w
+
+    k_ctx = gather_pages(state.k_pool, page_table, w)   # [S, C, Hkv, d]
+    v_ctx = gather_pages(state.v_pool, page_table, w)
+    q_lm = (state.q_sum / w).astype(state.k_pool.dtype)  # [S, Hkv, d]
+
+    scores = jnp.einsum("schd,shd->shc", k_ctx, q_lm) / math.sqrt(d)
+    visible = jnp.arange(ctx)[None, None, :] < t_new[:, None, None]
+    scores = jnp.where(visible, scores.astype(jnp.float32), NEG_INF)
+    top_vals, top_loc = jax.lax.top_k(scores, cfg.k)     # [S, Hkv, K] ctx idx
+    valid = top_vals > NEG_INF / 2
+    # ctx position -> global pool row via the page table
+    ctx_rows = (page_table[:, :, None] * w
+                + jnp.arange(w)[None, None, :]).reshape(n_slots, ctx)
+    rows = jnp.take_along_axis(
+        jnp.broadcast_to(ctx_rows[:, None, :], top_loc.shape[:-1] + (ctx,)),
+        top_loc, axis=-1)
+    p = jax.nn.softmax(scores, axis=-1)
+    v_lm = jnp.einsum("shc,schd->shd", p.astype(state.v_pool.dtype), v_ctx)
+
+    i = t_new // w - 1                                   # [S]
+    sel = due[:, None] & (jnp.arange(m_max)[None, :] == i[:, None])  # [S, M]
+    sel4 = sel[:, None, :, None]
+    return state._replace(
+        lm_q=jnp.where(sel4, q_lm[:, :, None, :], state.lm_q),
+        lm_v=jnp.where(sel4, v_lm[:, :, None, :], state.lm_v),
+        expert_idx=jnp.where(sel4, rows[:, :, None, :], state.expert_idx),
+        expert_valid=jnp.where(sel4, valid[:, :, None, :], state.expert_valid),
+        q_sum=jnp.where(due[:, None, None], 0.0, state.q_sum),
+    )
+
+
+def mita_paged_finalize(state: PagedMiTAState, page_table: jax.Array,
+                        t: jax.Array, due: jax.Array,
+                        cfg: DecodeConfig) -> PagedMiTAState:
+    """External-finalize entry point for the serving loop (its own jitted
+    program).  ``due`` comes from the scheduler: active slots whose last
+    completed window has not been finalized yet (t % w == 0 and the window
+    count exceeds the finalized count — the scheduler tracks the latter, so
+    a freshly prefilled boundary-aligned slot is never re-finalized from a
+    zero q_sum)."""
+    return _paged_finalize(state, page_table, t, due, cfg)
+
+
+def mita_paged_decode_step(state: PagedMiTAState, q: jax.Array,
+                           k_new: jax.Array, v_new: jax.Array,
+                           page_table: jax.Array, t: jax.Array,
+                           active: jax.Array,
+                           cfg: DecodeConfig) -> tuple[jax.Array, PagedMiTAState]:
+    """One fused decode step for the whole slot batch.
+
+    Args:
+      q:          [S, Hkv, G, d] new queries.
+      k_new:      [S, Hkv, d]; v_new: [S, Hkv, d].
+      page_table: [S, M] int32 page ids owned by each slot (unused entries
+                  must hold any in-bounds page id; they are masked).
+      t:          [S] int32 tokens already in each slot's cache.
+      active:     [S] bool — inactive slots write to the scratch row and
+                  return zeros.
+    Returns: (output [S, Hkv, G, d], updated state).  The caller advances
+    ``t`` for active slots.
+    """
+    from repro.kernels.ops import (gather_pages, gather_pool_rows,
+                                   scatter_pool_rows)
+
+    n_slots, hkv, g, d = q.shape
+    w = cfg.window
+    m_max = state.lm_q.shape[-2]
+    scratch = state.k_pool.shape[0] - 1
+
+    # 1. append to the slot's current page, accumulate window query sum
+    cur_page = jnp.take_along_axis(page_table, (t // w)[:, None], axis=1)[:, 0]
+    rows_new = jnp.where(active, cur_page * w + t % w, scratch)
+    state = state._replace(
+        k_pool=scatter_pool_rows(state.k_pool, rows_new, k_new),
+        v_pool=scatter_pool_rows(state.v_pool, rows_new, v_new),
+        q_sum=state.q_sum + jnp.where(
+            active[:, None, None], jnp.mean(q, axis=2).astype(jnp.float32), 0.0),
+    )
+    t_new = t + 1
+
+    # 2. finalize slots whose window just completed (masked, all-slot
+    # compute).  External mode defers this to `mita_paged_finalize`, called
+    # by the scheduler only on steps where some slot is actually due — the
+    # hot step then stays O(m + s·k + w) per token.
+    if not cfg.external_finalize:
+        due = active & (t_new % w == 0)
+        state = _paged_finalize(state, page_table, t_new, due, cfg)
+        m_cnt = t_new // w
+    else:
+        m_cnt = t // w
+
+    # 3. attend: shared + routed + local window (same branch math as
+    # `mita_decode_step`, with every cache access routed through the pool)
+    lm_mask = jnp.arange(m_max)[None, None, None, :] < m_cnt[:, None, None, None]
+    r = jnp.einsum("shgd,shmd->shgm", q, state.lm_q) / math.sqrt(d)
+    r = jnp.where(lm_mask, r.astype(jnp.float32), NEG_INF)
+    parts: list[Partial] = [partial_from_scores(r, state.lm_v)]
+
+    s_ = min(cfg.s, m_max)
+    _, e_idx = jax.lax.top_k(r, s_)                     # [S, Hkv, G, s]
+    e_ok = jnp.take_along_axis(r, e_idx, axis=-1) > NEG_INF / 2
+    flat_e = e_idx.reshape(n_slots, hkv, g * s_)
+    rows = jnp.take_along_axis(state.expert_idx, flat_e[..., None], axis=2)
+    rows_valid = jnp.take_along_axis(state.expert_valid, flat_e[..., None],
+                                     axis=2)
+    rows = rows.reshape(n_slots, hkv, g * s_ * cfg.k)
+    k_sel = gather_pool_rows(state.k_pool, rows).reshape(
+        n_slots, hkv, g, s_ * cfg.k, d)
+    v_sel = gather_pool_rows(state.v_pool, rows).reshape(
+        n_slots, hkv, g, s_ * cfg.k, d)
+    logits = jnp.einsum("shgd,shgkd->shgk", q, k_sel) / math.sqrt(d)
+    mask = (rows_valid.reshape(n_slots, hkv, g, s_, cfg.k)
+            & e_ok[..., None]).reshape(n_slots, hkv, g, s_ * cfg.k)
+    parts.append(partial_from_logits(logits, v_sel, mask=mask))
+
+    # local: the slot's own (current) page
+    k_loc = jnp.swapaxes(
+        gather_pages(state.k_pool, cur_page[:, None], w), 1, 2)  # [S,Hkv,w,d]
+    v_loc = jnp.swapaxes(
+        gather_pages(state.v_pool, cur_page[:, None], w), 1, 2)
+    loc_logits = jnp.einsum("shgd,shwd->shgw", q, k_loc) / math.sqrt(d)
+    start = (t // w) * w
+    loc_mask = (jnp.arange(w)[None, :] + start[:, None]
+                < t_new[:, None])[:, None, None, :]
+    parts.append(partial_from_scores(loc_logits, v_loc, mask=loc_mask))
+
+    out = combine(parts)
+    return jnp.where(active[:, None, None, None], out, 0.0), state
+
+
+def pack_prefill_into_pages(state: PagedMiTAState, pre: MiTADecodeState,
+                            slot: jax.Array, pages: jax.Array,
+                            cfg: DecodeConfig) -> PagedMiTAState:
+    """Copy a single-request prefill state (B == 1, window-aligned capacity
+    C = P_used * w) into ``slot``, writing its KV rows into ``pages``
+    (``[P_used]`` page ids, table order == token order) and rebasing expert
+    indices from cache-local rows to global pool rows."""
+    w = cfg.window
+    c_pre = pre.k_cache.shape[-2]
+    if c_pre % w:
+        raise ValueError(f"prefill capacity {c_pre} not window-aligned")
+    p_used = c_pre // w
+    m_max = state.lm_q.shape[-2]
+    m_pre = pre.lm_q.shape[-2]
+    if p_used > m_max or m_pre > m_max:
+        raise ValueError("request needs more pages than a slot owns")
+
+    dst_rows = (pages[:, None] * w + jnp.arange(w)).reshape(-1)   # [C]
+    k_rows = jnp.swapaxes(pre.k_cache[0], 0, 1)                   # [C, Hkv, d]
+    v_rows = jnp.swapaxes(pre.v_cache[0], 0, 1)
+
+    # cache-local expert rows -> global pool rows
+    loc = pre.expert_idx[0]                                       # [Hkv, M', K]
+    grows = pages[loc // w] * w + loc % w
+
+    pad_m = ((0, 0), (0, m_max - m_pre), (0, 0))
+    return state._replace(
+        k_pool=state.k_pool.at[dst_rows].set(k_rows.astype(state.k_pool.dtype)),
+        v_pool=state.v_pool.at[dst_rows].set(v_rows.astype(state.v_pool.dtype)),
+        lm_q=state.lm_q.at[slot].set(
+            jnp.pad(pre.lm_q[0], pad_m).astype(state.lm_q.dtype)),
+        lm_v=state.lm_v.at[slot].set(
+            jnp.pad(pre.lm_v[0], pad_m).astype(state.lm_v.dtype)),
+        expert_idx=state.expert_idx.at[slot].set(jnp.pad(grows, pad_m)),
+        expert_valid=state.expert_valid.at[slot].set(
+            jnp.pad(pre.expert_valid[0], pad_m)),
+        q_sum=state.q_sum.at[slot].set(pre.q_sum[0]),
+    )

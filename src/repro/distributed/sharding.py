@@ -24,6 +24,10 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+# NOTE: mesh-invariant init depends on jax_threefry_partitionable=True,
+# set in repro/__init__.py (package import, so entry-point order can't
+# produce divergent RNG streams).
+
 # (path regex, spec WITHOUT the stacked layer dim)
 PARAM_RULES: list[tuple[str, P]] = [
     # attention projections (also whisper xattn; rglru/mamba in/out)

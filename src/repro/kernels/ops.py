@@ -38,6 +38,47 @@ def expert_bank_fits(m: int, k: int, d: int, bytes_per_el: int = 2) -> bool:
     return 2 * m * k * d * bytes_per_el <= VMEM_BUDGET_BYTES
 
 
+# -------------------------------------------------- paged-cache indirection --
+#
+# The serving engine (repro.serve) keeps one KV pool per layer shared by all
+# requests; a request owns a set of fixed-size, window-aligned pages named by
+# a page table.  Every decode-time gather then goes through row indirection
+# instead of slicing a per-request [B, Hkv, C, d] cache.  These wrappers are
+# the dispatch point: XLA gathers everywhere today; a TPU Pallas paged-gather
+# kernel (vLLM-style) slots in here without touching `core.mita_decode`.
+
+def gather_pool_rows(pool: jax.Array, rows: jax.Array) -> jax.Array:
+    """Gather per-(slot, kv-head) rows from a shared KV pool.
+
+    pool: [R, Hkv, d] — flattened page pool (row = page_id * page_size + off).
+    rows: [S, Hkv, n] int32 global row ids (may repeat; must be in-bounds).
+    Returns [S, Hkv, n, d].
+    """
+    pool_t = jnp.swapaxes(pool, 0, 1)                  # [Hkv, R, d]
+    return jnp.take_along_axis(pool_t[None], rows[..., None], axis=2)
+
+
+def gather_pages(pool: jax.Array, page_ids: jax.Array,
+                 page_size: int) -> jax.Array:
+    """Gather whole pages in page-table order (sequential token order).
+
+    pool: [R, Hkv, d]; page_ids: [S, P] int32.
+    Returns [S, P * page_size, Hkv, d].
+    """
+    rows = page_ids[..., None] * page_size + jnp.arange(page_size)
+    return pool[rows.reshape(rows.shape[:-2] + (-1,))]
+
+
+def scatter_pool_rows(pool: jax.Array, rows: jax.Array,
+                      new: jax.Array) -> jax.Array:
+    """Write one new row per slot into the pool.
+
+    pool: [R, Hkv, d]; rows: [S] int32 (scratch-row duplicates allowed for
+    inactive slots); new: [S, Hkv, d].  Returns the updated pool.
+    """
+    return pool.at[rows].set(new.astype(pool.dtype))
+
+
 def routed_expert_partial(q_sorted, assign, k_e, v_e, valid,
                           block_q: int = 128,
                           interpret: Optional[bool] = None):

@@ -1,18 +1,23 @@
-"""Serving driver: prefill a batch of prompts, then batched decode.
+"""Serving driver: static batch or the continuous-batching paged engine.
 
-Demonstrates the paper's technique where it matters most — O(m + s·k + w)
-per decoded token vs O(context) for full attention.  CPU-scale with smoke
-configs; the same step functions lower on the production mesh (the
-decode_32k / long_500k dry-run cells).
+Two paths over the same model/step functions:
+
+  * ``--engine static``      — prefill a fixed batch of equal-length prompts,
+    decode everyone for ``--gen`` steps (the PR-0 baseline; also the oracle
+    the engine's greedy outputs are pinned against).
+  * ``--engine continuous``  — `repro.serve.ServingEngine`: a paged
+    KV/landmark/expert pool, per-request page tables, and a scheduler that
+    admits/retires requests every step so the fused decode batch stays full.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-      --batch 4 --prompt-len 128 --gen 32
+      --batch 4 --prompt-len 128 --gen 32 [--engine continuous]
 """
 
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -21,18 +26,86 @@ import numpy as np
 
 from repro.configs.registry import get_arch
 from repro.data import DataConfig, synthetic_batch
-from repro.launch.mesh import make_host_mesh
+from repro.core import mita_decode as mdec
 from repro.models import transformer as tfm
+from repro.models.modules import ModelConfig
+
+
+@functools.lru_cache(maxsize=None)
+def _static_fns(cfg: ModelConfig, capacity: int):
+    """Jitted static-path step functions, cached so repeated
+    `static_generate` calls (per-batch in the benchmark) don't retrace."""
+    return (jax.jit(lambda p, t: tfm.lm_prefill(p, t, cfg, capacity)),
+            jax.jit(lambda p, st, tok, pos: tfm.lm_decode_step(
+                p, st, tok, pos, cfg)),
+            jax.jit(lambda st: tfm.lm_finalize_states(st, cfg)))
+
+
+def static_generate(params, cfg: ModelConfig, prompts: jnp.ndarray, gen: int,
+                    temperature: float = 0.0, capacity: int | None = None,
+                    sample_key: jax.Array | None = None):
+    """Fixed-batch prefill + decode.  prompts: [B, N] (equal length).
+
+    Returns (tokens [B, gen], timings dict).  With ``cfg.attn.
+    external_finalize`` the landmark finalize runs as its own program at
+    window boundaries (tracking the prefill-finalized count so a
+    boundary-aligned prompt is not re-finalized from an empty q_sum).
+    """
+    b, n = prompts.shape
+    w = cfg.attn.window
+    capacity = capacity or n + gen
+    capacity = mdec.window_aligned(capacity, w)
+    if sample_key is None:
+        sample_key = jax.random.PRNGKey(1000)
+    prefill, decode, finalize = _static_fns(cfg, capacity)
+
+    t0 = time.perf_counter()
+    logits, states = prefill(params, prompts)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    def sample(lg, i):
+        if temperature > 0:
+            key = jax.random.fold_in(sample_key, i)
+            return jax.random.categorical(
+                key, lg / temperature, axis=-1).astype(jnp.int32)
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    tok = sample(logits, 0)
+    out_tokens = [tok]
+    m_done = n // w
+    step_times = []
+    t0 = time.perf_counter()
+    for i in range(gen - 1):
+        pos = n + i
+        if cfg.attn.external_finalize and pos % w == 0 and pos // w > m_done:
+            states = finalize(states)
+            m_done = pos // w
+        ts = time.perf_counter()
+        logits, states = decode(params, states, tok, jnp.asarray(pos))
+        tok = sample(logits, i + 1)
+        tok.block_until_ready()
+        step_times.append(time.perf_counter() - ts)
+        out_tokens.append(tok)
+    t_decode = time.perf_counter() - t0
+
+    gen_np = np.stack([np.asarray(t) for t in out_tokens], axis=1)
+    return gen_np, {"prefill_s": t_prefill, "decode_s": t_decode,
+                    "step_times": step_times}
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", choices=("static", "continuous"),
+                    default="static")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=128)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="continuous: total requests (default 2x batch)")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch, smoke=args.smoke)
@@ -40,49 +113,45 @@ def main(argv=None):
         raise SystemExit("serve.py drives decoder LMs; use examples/ for "
                          "whisper/ssm serving")
     cfg = arch.model
-    capacity = args.prompt_len + args.gen
-    # MiTA decode capacity must be window-aligned
     w = cfg.attn.window
-    capacity = ((capacity + w - 1) // w) * w
 
     params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
     dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.prompt_len,
-                      global_batch=args.batch)
-    prompts = jnp.asarray(synthetic_batch(dcfg, 0)["tokens"])
+                      global_batch=max(args.batch, args.requests or 1))
+    prompts = np.asarray(synthetic_batch(dcfg, 0)["tokens"])
 
-    prefill = jax.jit(lambda p, t: tfm.lm_prefill(p, t, cfg, capacity))
-    decode = jax.jit(lambda p, st, tok, pos: tfm.lm_decode_step(
-        p, st, tok, pos, cfg))
-
-    t0 = time.time()
-    logits, states = prefill(params, prompts)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    out_tokens = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
-        logits, states = decode(params, states, tok, pos)
-        if args.temperature > 0:
-            key = jax.random.PRNGKey(1000 + i)
-            tok = jax.random.categorical(
-                key, logits / args.temperature, axis=-1).astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-
-    gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
-    tps = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
-    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill:.3f}s")
-    print(f"decode:  {args.gen-1} steps, {t_decode:.3f}s "
-          f"({tps:.1f} tok/s, batch={args.batch})")
+    if args.engine == "static":
+        gen, tm = static_generate(params, cfg,
+                                  jnp.asarray(prompts[: args.batch]),
+                                  args.gen, temperature=args.temperature)
+        tps = args.batch * (args.gen - 1) / max(tm["decode_s"], 1e-9)
+        print(f"prefill: {args.batch}x{args.prompt_len} in "
+              f"{tm['prefill_s']:.3f}s")
+        print(f"decode:  {args.gen - 1} steps, {tm['decode_s']:.3f}s "
+              f"({tps:.1f} tok/s, batch={args.batch})")
+        sample = gen
+    else:
+        from repro.serve import EngineConfig, Request, ServingEngine
+        n_req = args.requests or 2 * args.batch
+        pages = mdec.window_aligned(args.prompt_len + args.gen, w) // w
+        eng = ServingEngine(params, cfg, EngineConfig(
+            n_slots=args.batch, pages_per_slot=pages,
+            n_pages=2 * args.batch * pages))
+        reqs = [Request(rid=i, prompt=prompts[i % len(prompts)],
+                        max_new_tokens=args.gen,
+                        temperature=args.temperature)
+                for i in range(n_req)]
+        t0 = time.perf_counter()
+        done = eng.run(reqs)
+        dt = time.perf_counter() - t0
+        total = sum(len(f.tokens) for f in done)
+        print(f"continuous: {n_req} requests ({args.prompt_len}+{args.gen}) "
+              f"in {dt:.3f}s — {total / dt:.1f} tok/s, "
+              f"{eng.steps} fused steps, batch={args.batch}")
+        sample = np.stack([done[b].tokens for b in range(min(2, len(done)))])
     print("sample generations (token ids):")
-    for b in range(min(2, args.batch)):
-        print(f"  [{b}] {gen[b, :16].tolist()}")
+    for b in range(min(2, sample.shape[0])):
+        print(f"  [{b}] {sample[b, :16].tolist()}")
     return 0
 
 

@@ -190,6 +190,108 @@ def lm_decode_step(params: Params, states, token: jax.Array,
     return logits, new_states
 
 
+# ---------------------------------------------------------- paged decode ---
+#
+# Serving-engine entry points (repro.serve): one shared KV/landmark/expert
+# pool per layer, request slots advance independently (per-slot positions).
+# The fused step is jitted ONCE for the slot batch; which request occupies a
+# slot, how far it has decoded, and which pages it owns are all data.
+
+def init_paged_states(cfg: nn.ModelConfig, n_slots: int, n_pages: int,
+                      pages_per_slot: int):
+    """Stacked per-layer paged decode pools (scan axis 0)."""
+    if cfg.attn.backend not in ("mita", "mita_ref"):
+        raise ValueError("paged decode states require a MiTA attention "
+                         "backend (the pool layout is landmark/expert aware)")
+    one = mdec.init_paged_state(cfg.n_kv, cfg.dh, n_pages, n_slots,
+                                pages_per_slot, _decode_cfg(cfg),
+                                dtype=cfg.compute_dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)
+
+
+def attention_decode_paged(params: Params, x: jax.Array, state,
+                           cfg: nn.ModelConfig, pos: jax.Array,
+                           page_table: jax.Array, active: jax.Array):
+    """One-token attention over the paged pool. x: [S, D]; pos: [S]."""
+    b, _ = x.shape
+    kv, g, dh = cfg.n_kv, cfg.group, cfg.dh
+    ct = cfg.compute_dtype
+    q = (x @ params["wq"].astype(ct)).reshape(b, kv, g, dh)
+    k = (x @ params["wk"].astype(ct)).reshape(b, kv, dh)
+    v = (x @ params["wv"].astype(ct)).reshape(b, kv, dh)
+    if cfg.qk_norm:
+        q = nn.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = nn.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    # per-slot rotary positions
+    q = nn.rope(q[..., None, :], pos[:, None, None, None],
+                cfg.rope_theta)[..., 0, :]
+    k = nn.rope(k[..., None, :], pos[:, None, None],
+                cfg.rope_theta)[..., 0, :]
+    o, state = mdec.mita_paged_decode_step(state, q, k, v, page_table, pos,
+                                           active, _decode_cfg(cfg))
+    o = o.reshape(b, cfg.n_heads * dh)
+    return o @ params["wo"].astype(ct), state
+
+
+def block_decode_paged(params: Params, x: jax.Array, state,
+                       cfg: nn.ModelConfig, pos: jax.Array,
+                       page_table: jax.Array, active: jax.Array):
+    h, state = attention_decode_paged(
+        params["attn"], nn.rms_norm(x, params["ln1"]), state, cfg, pos,
+        page_table, active)
+    x = x + h
+    xn = nn.rms_norm(x, params["ln2"])
+    if cfg.n_experts:
+        f, _ = moe_apply(params["moe"], xn[:, None, :], cfg)
+        f = f[:, 0]
+    else:
+        f = nn.swiglu_apply(params["ffn"], xn, cfg)
+    return x + f, state
+
+
+def lm_paged_decode_step(params: Params, states, token: jax.Array,
+                         pos: jax.Array, page_table: jax.Array,
+                         active: jax.Array, cfg: nn.ModelConfig,
+                         due: Optional[jax.Array] = None):
+    """token: [S] int32; pos: [S] per-slot positions; page_table: [S, M];
+    active: [S] bool.  Returns (logits [S, V], states).
+
+    ``due`` (external-finalize mode): [S] bool — slots whose last completed
+    window still needs its landmark.  The finalize is fused into this
+    program behind a scalar `lax.cond`, so steps where no slot crossed a
+    window boundary pay one dispatch and no O(context) work."""
+    x = nn.embed(params["emb"], token, cfg)
+    dcfg = _decode_cfg(cfg)
+    any_due = jnp.any(due) if due is not None else None
+
+    def body(h, layer):
+        lp, st = layer
+        if due is not None:
+            st = jax.lax.cond(
+                any_due,
+                lambda s: mdec.mita_paged_finalize(s, page_table, pos, due,
+                                                   dcfg),
+                lambda s: s, st)
+        h, st = block_decode_paged(lp, h, st, cfg, pos, page_table, active)
+        return h, st
+
+    x, new_states = jax.lax.scan(body, x, (params["blocks"], states),
+                                 unroll=cfg.scan_unroll)
+    logits = nn.unembed(params["emb"], nn.rms_norm(x, params["ln_f"]), cfg)
+    return logits, new_states
+
+
+def pack_prefill_into_states(states, prefill_states, slot: jax.Array,
+                             pages: jax.Array, cfg: nn.ModelConfig):
+    """Copy per-layer single-request prefill states into a slot's pages."""
+    dcfg = _decode_cfg(cfg)
+    return jax.vmap(
+        lambda st, pre: mdec.pack_prefill_into_pages(st, pre, slot, pages,
+                                                     dcfg),
+        in_axes=(0, 0))(states, prefill_states)
+
+
 def lm_prefill(params: Params, tokens: jax.Array, cfg: nn.ModelConfig,
                capacity: int,
                extra_embeds: Optional[jax.Array] = None):

@@ -1,0 +1,12 @@
+"""Continuous-batching MiTA serving engine (paged decode cache).
+
+Public surface:
+  * `Request` / `FinishedRequest` — one generation job and its result.
+  * `EngineConfig` — slot/page budget and scheduling knobs.
+  * `ServingEngine` — admits requests into a paged, fused decode batch.
+"""
+
+from repro.serve.engine import (EngineConfig, FinishedRequest, Request,
+                                ServingEngine)
+
+__all__ = ["EngineConfig", "FinishedRequest", "Request", "ServingEngine"]

@@ -1,0 +1,399 @@
+"""Continuous-batching engine over the paged MiTA decode cache.
+
+The scheduler is plain host Python; everything device-side is one of two
+jitted programs (see README.md for the page layout and invariants):
+
+  * ``prefill+pack`` — `lm_prefill` over an admission group (same-length
+    waiting requests, power-of-two sizes) packed straight into the slots'
+    pages; compiled per (window-aligned prompt capacity, group size);
+  * ``decode``       — `lm_paged_decode_step`, ONE program for the whole
+    slot batch regardless of per-request progress (per-slot positions, page
+    tables, and activity are data, not shape).  The window-boundary
+    landmark finalize is fused behind a scalar `lax.cond`, and the per-slot
+    position/finalize counters advance on device so the hot loop uploads
+    only the sampled tokens.
+
+Greedy sampling is exact w.r.t. the static `launch.serve` path: a request
+decoded by the engine emits the same tokens it would emit in a fixed batch
+(`tests/test_serve.py` pins this).  Temperature sampling derives its key
+from (request id, token index) so results are batching-invariant too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mita_decode as mdec
+from repro.models import transformer as tfm
+from repro.models.modules import ModelConfig
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_fn(cfg: ModelConfig, fused_finalize: bool) -> Callable:
+    """Fused whole-batch decode step, cached at module level so every
+    engine instance with the same model config shares compiled code.
+
+    Scheduler tensors (t, m_done) advance ON DEVICE: the hot loop uploads
+    only the sampled tokens and downloads only the logits — page tables,
+    activity, and positions are re-uploaded solely when admission/retire
+    changes them."""
+    w = cfg.attn.window
+
+    def step(p, st, tok, t, m_done, pt, ac):
+        due = None
+        if fused_finalize:
+            due = ac & (t % w == 0) & (t // w > m_done)
+            m_done = jnp.where(due, t // w, m_done)
+        logits, st = tfm.lm_paged_decode_step(p, st, tok, t, pt, ac, cfg,
+                                              due=due)
+        return logits, st, t + ac.astype(t.dtype), m_done
+
+    return jax.jit(step, donate_argnums=(1, 3, 4))
+
+
+@functools.lru_cache(maxsize=None)
+def _prefill_pack_fn(cfg: ModelConfig, cap: int, k: int) -> Callable:
+    """Fused batched prefill + pack-into-slots: one dispatch admits ``k``
+    same-length requests (compiled per window-aligned capacity and group
+    size).  Prefill rows are independent, so batching admissions does not
+    change any request's tokens."""
+
+    def prefill_pack(p, st, toks, slots, pages):
+        logits, pre = tfm.lm_prefill(p, toks, cfg, cap)
+        for i in range(k):
+            pre_i = jax.tree.map(
+                lambda a: a[:, i:i + 1] if a.ndim >= 2 else a, pre)
+            st = tfm.pack_prefill_into_states(st, pre_i, slots[i], pages[i],
+                                              cfg)
+        return logits, st
+
+    return jax.jit(prefill_pack, donate_argnums=(1,))
+
+
+@dataclasses.dataclass(eq=False)
+class Request:
+    """One generation job.  ``max_new_tokens`` includes the first token
+    sampled from the prefill logits.  ``eq=False``: requests compare by
+    identity — the scheduler removes them from its queue by object, and a
+    generated __eq__ would compare the ndarray prompt."""
+    rid: int
+    prompt: np.ndarray              # [n] int32 token ids
+    max_new_tokens: int
+    temperature: float = 0.0
+    arrival: float = 0.0            # seconds since trace start
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    """``arrival`` is trace-relative (copied from the Request); all other
+    stamps are absolute `time.perf_counter` values."""
+    rid: int
+    tokens: np.ndarray              # [max_new_tokens] generated ids
+    arrival: float
+    admitted: float                 # when prefill ran
+    first_token: float              # TTFT reference point
+    finished: float
+    token_times: list[float] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 8                # decode batch width
+    n_pages: int = 64               # shared pool size (pages of `window`)
+    pages_per_slot: int = 8         # max context per request, in pages
+    finalize: str = "external"      # external | inline (see core.mita_decode)
+
+
+class _PageAllocator:
+    """Free-list over the shared pool.  A page belongs to ≤ 1 active slot."""
+
+    def __init__(self, n_pages: int):
+        self.free: list[int] = list(range(n_pages))
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self.free):
+            raise RuntimeError("page pool exhausted")
+        pages, self.free = self.free[:n], self.free[n:]
+        return pages
+
+    def release(self, pages: list[int]) -> None:
+        self.free.extend(pages)
+
+
+class ServingEngine:
+    """Admit/evict requests each step; keep the fused decode batch full."""
+
+    def __init__(self, params: Any, cfg: ModelConfig,
+                 ecfg: EngineConfig = EngineConfig(),
+                 sample_key: jax.Array | None = None):
+        if cfg.attn.backend not in ("mita", "mita_ref"):
+            raise ValueError("ServingEngine drives MiTA decode caches")
+        if ecfg.finalize not in ("external", "inline"):
+            raise ValueError(f"unknown finalize mode {ecfg.finalize!r}")
+        if ecfg.n_pages < ecfg.pages_per_slot:
+            raise ValueError("pool smaller than one slot's max context — "
+                             "admission could deadlock")
+        self.params = params
+        self.cfg = dataclasses.replace(
+            cfg, attn=dataclasses.replace(
+                cfg.attn, external_finalize=ecfg.finalize == "external"))
+        self.ecfg = ecfg
+        self.w = cfg.attn.window
+        self._key = (jax.random.PRNGKey(0) if sample_key is None
+                     else sample_key)
+
+        s, m = ecfg.n_slots, ecfg.pages_per_slot
+        self.states = tfm.init_paged_states(self.cfg, s, ecfg.n_pages, m)
+        self.alloc = _PageAllocator(ecfg.n_pages)
+
+        # host-owned scheduler state
+        self.page_table = np.zeros((s, m), np.int32)
+        self.t = np.zeros(s, np.int32)
+        self.active = np.zeros(s, bool)
+        self.tokens_in = np.zeros(s, np.int32)
+        self.m_done = np.zeros(s, np.int32)   # finalized landmarks per slot
+        self.free_slots: list[int] = list(range(s))
+        self.slot_req: dict[int, Request] = {}
+        self.slot_pages: dict[int, list[int]] = {}
+        self.slot_out: dict[int, list[int]] = {}
+        self.slot_times: dict[int, list[float]] = {}
+        self.slot_meta: dict[int, tuple[float, float]] = {}  # admitted, ttft
+        self.waiting: deque[Request] = deque()
+        self.finished: list[FinishedRequest] = []
+        self.steps = 0
+        self.step_times: list[float] = []
+
+        # window-boundary landmark finalize fused behind a lax.cond —
+        # off-boundary steps skip the O(context) work inside ONE program
+        self._decode = _decode_fn(self.cfg, ecfg.finalize == "external")
+        # device mirrors of the scheduler tensors (uploaded on change)
+        self._dirty = True
+        self._t_dev = self._md_dev = self._pt_dev = self._ac_dev = None
+        self._traceable: set[int] = set()   # validated prompt lengths
+        self._inflight: set[int] = set()    # rids waiting or active
+
+    # ------------------------------------------------------------ plumbing --
+
+    def _prefill_fn(self, n: int, k: int) -> Callable:
+        cap = mdec.window_aligned(n, self.w)
+        return _prefill_pack_fn(self.cfg, cap, k)
+
+    def _sample(self, logits: np.ndarray, req: Request, index: int) -> int:
+        if req.temperature <= 0.0:
+            return int(np.argmax(logits))
+        key = jax.random.fold_in(jax.random.fold_in(self._key, req.rid), index)
+        return int(jax.random.categorical(
+            key, jnp.asarray(logits) / req.temperature))
+
+    def pages_needed(self, req: Request) -> int:
+        cap = len(req.prompt) + req.max_new_tokens
+        return mdec.window_aligned(cap, self.w) // self.w
+
+    def _check_prefill_traceable(self, n: int) -> None:
+        """Reject prompt lengths the prefill path cannot lower (e.g. the
+        sorted-mita block_q divisibility constraint) at SUBMIT time, with
+        abstract tracing only — a length that failed inside `_admit` after
+        scheduler state was mutated would leak the slot and its pages."""
+        if n in self._traceable:
+            return
+        cap = mdec.window_aligned(n, self.w)
+        mdl = self.cfg
+        try:
+            jax.eval_shape(
+                lambda p, tok: tfm.lm_prefill(p, tok, mdl, cap),
+                self.params,
+                jax.ShapeDtypeStruct((1, n), jnp.int32))
+        except Exception as e:
+            raise ValueError(
+                f"prompt length {n} is not servable by the "
+                f"{mdl.attn.backend!r} prefill path (window {self.w}): {e}"
+            ) from e
+        self._traceable.add(n)
+
+    def warmup(self, prompt_lens: list[int]) -> None:
+        """Compile every program the serving loop can hit for the given
+        prompt lengths: the fused decode step and each power-of-two
+        admission-group prefill.  Runs on one scratch engine so this
+        engine's pool/scheduler state is untouched (compile caches are
+        shared module-wide)."""
+        scratch = ServingEngine(self.params, self.cfg, self.ecfg)
+        for n in sorted(set(prompt_lens)):
+            # probe requests claim the MINIMAL page budget a real request
+            # of this length would (max_new=1), so warmup never rejects a
+            # length the engine can actually serve
+            gen = 2 if mdec.window_aligned(n + 2, self.w) // self.w \
+                <= self.ecfg.pages_per_slot else 1
+            k = 1
+            while k <= self.ecfg.n_slots:
+                scratch.run([Request(rid=-1 - i, prompt=np.zeros(n, np.int32),
+                                     max_new_tokens=gen) for i in range(k)])
+                k *= 2
+
+    # ----------------------------------------------------------- scheduler --
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) < 1 or req.max_new_tokens < 1:
+            raise ValueError("need a non-empty prompt and ≥ 1 new token")
+        if self.pages_needed(req) > self.ecfg.pages_per_slot:
+            raise ValueError(
+                f"request {req.rid} needs {self.pages_needed(req)} pages; a "
+                f"slot owns {self.ecfg.pages_per_slot} "
+                f"(max context {self.ecfg.pages_per_slot * self.w})")
+        if req.rid in self._inflight:
+            raise ValueError(f"request id {req.rid} is already in flight")
+        self._check_prefill_traceable(len(req.prompt))
+        self._inflight.add(req.rid)
+        self.waiting.append(req)
+
+    def _emit(self, slot: int, tok: int, now: float) -> None:
+        self.slot_out[slot].append(tok)
+        self.slot_times[slot].append(now)
+
+    def _retire(self, slot: int, now: float) -> None:
+        req = self.slot_req.pop(slot)
+        out = self.slot_out.pop(slot)
+        times = self.slot_times.pop(slot)
+        admitted, ttft = self.slot_meta.pop(slot)
+        self.alloc.release(self.slot_pages.pop(slot))
+        self.active[slot] = False
+        self.t[slot] = 0
+        self.page_table[slot] = 0     # unused entries must stay in-bounds
+        self.free_slots.append(slot)
+        self._dirty = True
+        self._inflight.discard(req.rid)
+        self.finished.append(FinishedRequest(
+            rid=req.rid, tokens=np.asarray(out, np.int32),
+            arrival=req.arrival, admitted=admitted, first_token=ttft,
+            finished=now, token_times=times))
+
+    def _admit(self, now: float) -> None:
+        """FCFS admission with same-length grouping: the head-of-line
+        request picks the prompt length; any other waiting requests of that
+        length ride along in ONE fused prefill+pack dispatch (prefill rows
+        are independent, so grouping never changes a request's tokens).
+        Head-of-line blocking on pages is deliberate — big requests are not
+        starved by later small ones."""
+        while self.waiting and self.free_slots:
+            head = self.waiting[0]
+            if self.pages_needed(head) > len(self.alloc.free):
+                return
+            n = len(head.prompt)
+            budget = len(self.alloc.free) - self.pages_needed(head)
+            group = [head]
+            for r in list(self.waiting)[1:]:
+                if len(group) >= len(self.free_slots):
+                    break
+                if len(r.prompt) == n and self.pages_needed(r) <= budget:
+                    group.append(r)
+                    budget -= self.pages_needed(r)
+            # power-of-two chunks: bounds the (length, group-size) compile
+            # variants to log2(slots) per prompt length (see `warmup`);
+            # the remainder is admitted by the next loop iteration
+            group = group[: 1 << (len(group).bit_length() - 1)]
+            for r in group:
+                self.waiting.remove(r)
+            slots = [self.free_slots.pop() for _ in group]
+            pages_list = [self.alloc.alloc(self.pages_needed(r))
+                          for r in group]
+            cap_pre = mdec.window_aligned(n, self.w)
+
+            logits, self.states = self._prefill_fn(n, len(group))(
+                self.params, self.states,
+                jnp.asarray(np.stack([r.prompt for r in group]), jnp.int32),
+                jnp.asarray(slots, jnp.int32),
+                jnp.asarray(np.stack(
+                    [pg[: cap_pre // self.w] for pg in pages_list]),
+                    jnp.int32))
+            logits = np.asarray(logits)
+
+            for i, (req, slot, pages) in enumerate(
+                    zip(group, slots, pages_list)):
+                self.slot_req[slot] = req
+                self.slot_pages[slot] = pages
+                self.slot_out[slot] = []
+                self.slot_times[slot] = []
+                self.page_table[slot] = 0
+                self.page_table[slot, : len(pages)] = pages
+                self.t[slot] = n
+                self.m_done[slot] = n // self.w
+                self.active[slot] = True
+                first = self._sample(logits[i], req, 0)
+                self.slot_meta[slot] = (now, time.perf_counter())
+                self._emit(slot, first, time.perf_counter())
+                self.tokens_in[slot] = first
+                if req.max_new_tokens == 1:
+                    self._retire(slot, time.perf_counter())
+            self._dirty = True
+
+    # ---------------------------------------------------------------- step --
+
+    def step(self) -> bool:
+        """One engine iteration: retire/admit, then one fused decode step.
+        Returns False when there is nothing left to do."""
+        now = time.perf_counter()
+        self._admit(now)
+        if not self.active.any():
+            return bool(self.waiting)
+
+        if self._dirty:
+            self._t_dev = jnp.asarray(self.t)
+            self._md_dev = jnp.asarray(self.m_done)
+            self._pt_dev = jnp.asarray(self.page_table)
+            self._ac_dev = jnp.asarray(self.active)
+            self._dirty = False
+        # host mirror of the device-side due/m_done transition
+        due = self.active & (self.t % self.w == 0) & (self.t // self.w
+                                                      > self.m_done)
+        self.m_done = np.where(due, self.t // self.w, self.m_done)
+
+        t0 = time.perf_counter()
+        logits, self.states, self._t_dev, self._md_dev = self._decode(
+            self.params, self.states, jnp.asarray(self.tokens_in),
+            self._t_dev, self._md_dev, self._pt_dev, self._ac_dev)
+        logits = np.asarray(logits)
+        self.step_times.append(time.perf_counter() - t0)
+        self.steps += 1
+
+        now = time.perf_counter()
+        for slot in np.nonzero(self.active)[0]:
+            req = self.slot_req[slot]
+            tok = self._sample(logits[slot], req, len(self.slot_out[slot]))
+            self._emit(slot, tok, now)
+            self.t[slot] += 1
+            self.tokens_in[slot] = tok
+            if len(self.slot_out[slot]) >= req.max_new_tokens:
+                self._retire(slot, now)
+        return True
+
+    def run(self, requests: list[Request],
+            realtime: bool = False) -> list[FinishedRequest]:
+        """Drive a whole trace, returning the requests finished during THIS
+        call (an engine can serve many traces back-to-back).
+        ``realtime=True`` honours arrival offsets on the wall clock
+        (Poisson traces); otherwise all requests queue up front
+        (max-throughput mode)."""
+        pending = sorted(requests, key=lambda r: r.arrival)
+        start = time.perf_counter()
+        already_done = len(self.finished)
+        idx = 0
+        while idx < len(pending) or self.waiting or self.active.any():
+            now = time.perf_counter() - start
+            while idx < len(pending) and (
+                    not realtime or pending[idx].arrival <= now):
+                self.submit(pending[idx])
+                idx += 1
+            progressed = self.step()
+            if not progressed and idx < len(pending):
+                if realtime:
+                    time.sleep(max(0.0,
+                                   pending[idx].arrival
+                                   - (time.perf_counter() - start)))
+        return sorted(self.finished[already_done:], key=lambda f: f.rid)

@@ -1,0 +1,69 @@
+"""Hypothesis shim: property tests run on a bare interpreter.
+
+Prefers the real `hypothesis` (pin in requirements-dev.txt) and falls back
+to a tiny seeded-random emulation of the subset this suite uses
+(`given` + `settings` + integers/floats/sampled_from/booleans strategies).
+The fallback draws `max_examples` samples from a per-test deterministic
+RNG — no shrinking, no database, but the properties still execute.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare interpreters
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 10)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    fn(*args, *(s.draw(rng) for s in strategies), **kwargs)
+            # NOT functools.wraps: __wrapped__ would make pytest resolve the
+            # original signature and demand the drawn params as fixtures
+            for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+                setattr(wrapper, attr, getattr(fn, attr))
+            return wrapper
+        return deco

@@ -5,3 +5,14 @@ import sys
 # and benches must see 1 device; distributed tests spawn subprocesses with
 # their own XLA_FLAGS (see test_distributed.py).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# tests/ has no __init__.py; make the _hypothesis_compat shim importable
+# regardless of pytest's import mode
+sys.path.insert(0, os.path.dirname(__file__))
+
+# One consistent RNG implementation for the whole suite: src/repro/
+# __init__.py flips jax_threefry_partitionable on at package import
+# (mesh-invariant init); setting it up-front too keeps random streams
+# identical even for tests that touch jax.random before importing repro.
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

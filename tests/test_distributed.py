@@ -9,6 +9,10 @@ import textwrap
 
 import pytest
 
+# subprocess spawns + 8 fake devices: ~3.5 min wall — keep out of the CI
+# fast lane (`-m "not slow"`); the full lane still runs everything.
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

@@ -1,0 +1,288 @@
+"""Continuous-batching serving engine: paged-cache parity + scheduler
+invariants.
+
+The serving-correctness contract has two layers:
+  * core: `mita_paged_decode_step` over a shared pool with arbitrary page
+    assignment must equal `mita_decode_step` on a per-request monolithic
+    cache, at every position, for any slot activity pattern;
+  * engine: greedy tokens emitted through the scheduler (mixed lengths,
+    slot reuse, page recycling) must be IDENTICAL to the static-batch
+    `launch.serve` baseline for every request.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mita_decode as mdec
+from repro.launch.serve import static_generate
+from repro.models import transformer as tfm
+from repro.models.modules import AttnConfig, ModelConfig
+from repro.serve import EngineConfig, Request, ServingEngine
+
+W, K = 8, 8
+
+
+def _cfg(backend="mita_ref", external=False):
+    return ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+                       vocab=97,
+                       attn=AttnConfig(window=W, k=K, backend=backend,
+                                       external_finalize=external))
+
+
+# ------------------------------------------------------------------- core --
+
+def test_paged_step_matches_monolithic():
+    """Shared pool + shuffled page tables == per-request monolithic caches,
+    every position."""
+    B, Hkv, G, N, d = 3, 2, 2, 48, 16
+    cfg = mdec.DecodeConfig(window=W, k=K, s=1)
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (B, Hkv, G, N, d))
+    k, v = (jax.random.normal(kk, (B, Hkv, N, d))
+            for kk in jax.random.split(key, 2))
+    m = N // W
+    n_pages = B * m + 3
+    table = np.random.default_rng(0).permutation(n_pages)[: B * m]
+    page_table = jnp.asarray(table.reshape(B, m), jnp.int32)
+
+    st_m = mdec.init_decode_state(B, Hkv, d, N, cfg, jnp.float32)
+    st_p = mdec.init_paged_state(Hkv, d, n_pages, B, m, cfg, jnp.float32)
+    step_m = jax.jit(lambda s, *a: mdec.mita_decode_step(s, *a, cfg))
+    step_p = jax.jit(lambda s, *a: mdec.mita_paged_decode_step(s, *a, cfg))
+    t = jnp.zeros((B,), jnp.int32)
+    active = jnp.ones((B,), bool)
+    for i in range(N):
+        o_m, st_m = step_m(st_m, q[:, :, :, i], k[:, :, i], v[:, :, i])
+        o_p, st_p = step_p(st_p, q[:, :, :, i], k[:, :, i], v[:, :, i],
+                           page_table, t, active)
+        np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_m),
+                                   atol=1e-5, err_msg=f"t={i}")
+        t = t + 1
+
+
+def test_paged_staggered_slots():
+    """Slots at different progress in ONE fused step: a slot admitted
+    mid-flight matches a fresh monolithic cache; inactive slots emit
+    zeros."""
+    B, Hkv, G, N, d = 2, 2, 1, 32, 8
+    cfg = mdec.DecodeConfig(window=W, k=K, s=1)
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(key, (B, Hkv, G, N, d))
+    k, v = (jax.random.normal(kk, (B, Hkv, N, d))
+            for kk in jax.random.split(key, 2))
+    m = N // W
+    st_p = mdec.init_paged_state(Hkv, d, 2 * m, B, m, cfg, jnp.float32)
+    page_table = jnp.asarray(np.arange(2 * m).reshape(B, m), jnp.int32)
+    refs = [mdec.init_decode_state(1, Hkv, d, N, cfg, jnp.float32)
+            for _ in range(B)]
+    step_m = jax.jit(lambda s, *a: mdec.mita_decode_step(s, *a, cfg))
+    step_p = jax.jit(lambda s, *a: mdec.mita_paged_decode_step(s, *a, cfg))
+    offs = [0, 11]                       # slot 1 joins at step 11
+    t = jnp.zeros((B,), jnp.int32)
+    for i in range(N):
+        act = np.array([offs[s] <= i < offs[s] + N for s in range(B)])
+        qi = jnp.stack([q[s, :, :, (i - offs[s]) % N] for s in range(B)])
+        ki = jnp.stack([k[s, :, (i - offs[s]) % N] for s in range(B)])
+        vi = jnp.stack([v[s, :, (i - offs[s]) % N] for s in range(B)])
+        o_p, st_p = step_p(st_p, qi, ki, vi, page_table, t, jnp.asarray(act))
+        for s in range(B):
+            if act[s]:
+                o_m, refs[s] = step_m(refs[s], qi[s:s + 1], ki[s:s + 1],
+                                      vi[s:s + 1])
+                np.testing.assert_allclose(np.asarray(o_p[s]),
+                                           np.asarray(o_m[0]), atol=1e-5,
+                                           err_msg=f"i={i} slot={s}")
+            else:
+                assert np.all(np.asarray(o_p[s]) == 0.0)
+        t = t + jnp.asarray(act)
+
+
+def test_paged_external_finalize_matches_monolithic():
+    B, Hkv, G, N, d = 2, 2, 1, 32, 8
+    cfg = mdec.DecodeConfig(window=W, k=K, s=1, external_finalize=True)
+    key = jax.random.PRNGKey(13)
+    q = jax.random.normal(key, (B, Hkv, G, N, d))
+    k, v = (jax.random.normal(kk, (B, Hkv, N, d))
+            for kk in jax.random.split(key, 2))
+    m = N // W
+    st_p = mdec.init_paged_state(Hkv, d, 2 * m, B, m, cfg, jnp.float32)
+    st_m = mdec.init_decode_state(B, Hkv, d, N, cfg, jnp.float32)
+    page_table = jnp.asarray(np.arange(2 * m).reshape(B, m), jnp.int32)
+    step_m = jax.jit(lambda s, *a: mdec.mita_decode_step(s, *a, cfg))
+    step_p = jax.jit(lambda s, *a: mdec.mita_paged_decode_step(s, *a, cfg))
+    fin_m = jax.jit(lambda s: mdec.mita_finalize_if_due(s, cfg))
+    fin_p = jax.jit(lambda s, *a: mdec.mita_paged_finalize(s, *a, cfg))
+    t = jnp.zeros((B,), jnp.int32)
+    active = jnp.ones((B,), bool)
+    m_done = np.zeros(B, int)
+    for i in range(N):
+        tn = np.full(B, i)
+        due = (tn % W == 0) & (tn // W > m_done)
+        if due.any():
+            st_p = fin_p(st_p, page_table, t, jnp.asarray(due))
+            m_done = np.where(due, tn // W, m_done)
+        st_m = fin_m(st_m)
+        o_m, st_m = step_m(st_m, q[:, :, :, i], k[:, :, i], v[:, :, i])
+        o_p, st_p = step_p(st_p, q[:, :, :, i], k[:, :, i], v[:, :, i],
+                           page_table, t, active)
+        np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_m),
+                                   atol=1e-5, err_msg=f"t={i}")
+        t = t + 1
+
+
+def test_pack_prefill_matches_monolithic_prefill():
+    """Mid-window prefill packed into shuffled pages continues exactly
+    like a monolithic prefill state."""
+    B, Hkv, G, N, d = 2, 2, 2, 48, 16
+    cfg = mdec.DecodeConfig(window=W, k=K, s=1)
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (B, Hkv, G, N, d))
+    k, v = (jax.random.normal(kk, (B, Hkv, 1, N, d))
+            for kk in jax.random.split(key, 2))
+    n_pre = 20                                 # partial final window
+    cap_pre = ((n_pre + W - 1) // W) * W
+    m = N // W
+    n_pages = B * m + 2
+    table = np.random.default_rng(1).permutation(n_pages)[: B * m]
+    page_table = jnp.asarray(table.reshape(B, m), jnp.int32)
+
+    st_p = mdec.init_paged_state(Hkv, d, n_pages, B, m, cfg, jnp.float32)
+    refs = []
+    for s in range(B):
+        pre = mdec.mita_prefill_state(q[s:s + 1, :, :, :n_pre],
+                                      k[s:s + 1, :, :, :n_pre],
+                                      v[s:s + 1, :, :, :n_pre], cfg,
+                                      capacity=cap_pre)
+        st_p = mdec.pack_prefill_into_pages(
+            st_p, pre, s, page_table[s, : cap_pre // W], cfg)
+        refs.append(mdec.mita_prefill_state(
+            q[s:s + 1, :, :, :n_pre], k[s:s + 1, :, :, :n_pre],
+            v[s:s + 1, :, :, :n_pre], cfg, capacity=N))
+    t = jnp.full((B,), n_pre, jnp.int32)
+    active = jnp.ones((B,), bool)
+    step_m = jax.jit(lambda s, *a: mdec.mita_decode_step(s, *a, cfg))
+    step_p = jax.jit(lambda s, *a: mdec.mita_paged_decode_step(s, *a, cfg))
+    for i in range(n_pre, N):
+        o_p, st_p = step_p(st_p, q[:, :, :, i], k[:, :, 0, i], v[:, :, 0, i],
+                           page_table, t, active)
+        for s in range(B):
+            o_m, refs[s] = step_m(refs[s], q[s:s + 1, :, :, i],
+                                  k[s:s + 1, :, 0, i], v[s:s + 1, :, 0, i])
+            np.testing.assert_allclose(np.asarray(o_p[s]), np.asarray(o_m[0]),
+                                       atol=1e-5, err_msg=f"i={i} slot={s}")
+        t = t + 1
+
+
+# ----------------------------------------------------------------- engine --
+
+def _requests(cfg, n, lens, gens, seed=7):
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(21)
+    reqs = []
+    for i in range(n):
+        ln = int(rng.choice(lens))
+        p = np.asarray(jax.random.randint(jax.random.fold_in(key, i), (ln,),
+                                          0, cfg.vocab))
+        reqs.append(Request(rid=i, prompt=p,
+                            max_new_tokens=int(rng.choice(gens))))
+    return reqs
+
+
+def test_engine_matches_static_greedy():
+    """Engine greedy tokens == static-batch baseline tokens, per request,
+    with more requests than slots (slot reuse mid-trace)."""
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    B, N, gen = 4, 24, 10
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (B, N), 0, cfg.vocab)
+    pages = (N + gen + W - 1) // W
+    scfg = _cfg(external=True)      # engine default is external finalize
+    ref, _ = static_generate(params, scfg, prompts, gen, capacity=pages * W)
+
+    eng = ServingEngine(params, cfg, EngineConfig(
+        n_slots=3, pages_per_slot=pages, n_pages=3 * pages + 2))
+    done = eng.run([Request(rid=i, prompt=np.asarray(prompts[i]),
+                            max_new_tokens=gen) for i in range(B)])
+    assert len(done) == B
+    for i, f in enumerate(done):
+        np.testing.assert_array_equal(f.tokens, ref[i], err_msg=f"req {i}")
+
+
+def test_engine_inline_finalize_matches_static():
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    B, N, gen = 3, 16, 9
+    prompts = jax.random.randint(jax.random.PRNGKey(8), (B, N), 0, cfg.vocab)
+    pages = (N + gen + W - 1) // W
+    ref, _ = static_generate(params, cfg, prompts, gen, capacity=pages * W)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        n_slots=2, pages_per_slot=pages, n_pages=2 * pages,
+        finalize="inline"))
+    done = eng.run([Request(rid=i, prompt=np.asarray(prompts[i]),
+                            max_new_tokens=gen) for i in range(B)])
+    for i, f in enumerate(done):
+        np.testing.assert_array_equal(f.tokens, ref[i], err_msg=f"req {i}")
+
+
+def test_engine_mixed_lengths_page_recycling():
+    """Mixed prompt/gen lengths through a pool tight enough to force page
+    recycling; every request still matches its own single-request static
+    decode, and allocator invariants hold after every step."""
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    pages_per_slot, n_pages = 5, 12
+    reqs = _requests(cfg, 8, lens=[8, 16, 24], gens=[2, 5, 9, 13])
+    eng = ServingEngine(params, cfg, EngineConfig(
+        n_slots=3, pages_per_slot=pages_per_slot, n_pages=n_pages))
+    for r in reqs:
+        eng.submit(r)
+    while eng.step():
+        # invariant: active slots own disjoint page sets from the free list
+        owned = [p for pages in eng.slot_pages.values() for p in pages]
+        assert len(owned) == len(set(owned)), "page double-booked"
+        assert not set(owned) & set(eng.alloc.free), "owned page in free list"
+        assert len(owned) + len(eng.alloc.free) == n_pages, "page leaked"
+    done = sorted(eng.finished, key=lambda f: f.rid)
+    assert len(done) == len(reqs)
+    scfg = _cfg(external=True)
+    for f, r in zip(done, reqs):
+        ref, _ = static_generate(params, scfg, jnp.asarray(r.prompt)[None],
+                                 r.max_new_tokens,
+                                 capacity=pages_per_slot * W)
+        np.testing.assert_array_equal(f.tokens, ref[0],
+                                      err_msg=f"req {f.rid}")
+
+
+def test_engine_temperature_sampling_batch_invariant():
+    """Temperature sampling keys derive from (rid, token index): a request
+    sampled alone equals the same request sampled inside a busy batch."""
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    reqs = _requests(cfg, 4, lens=[16], gens=[6], seed=3)
+    for r in reqs:
+        r.temperature = 0.9
+    ecfg = EngineConfig(n_slots=3, pages_per_slot=4, n_pages=12)
+    together = ServingEngine(params, cfg, ecfg).run(reqs)
+    alone = ServingEngine(params, cfg, ecfg).run([reqs[2]])
+    np.testing.assert_array_equal(together[2].tokens, alone[0].tokens)
+
+
+def test_engine_rejects_oversized_and_bad_pool():
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        n_slots=2, pages_per_slot=2, n_pages=4))
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(Request(rid=0, prompt=np.zeros(16, np.int32),
+                           max_new_tokens=8))
+    with pytest.raises(ValueError, match="deadlock"):
+        ServingEngine(params, cfg, EngineConfig(
+            n_slots=2, pages_per_slot=8, n_pages=4))
+    with pytest.raises(ValueError, match="MiTA"):
+        full = dataclasses.replace(
+            cfg, attn=dataclasses.replace(cfg.attn, backend="full"))
+        ServingEngine(params, full, EngineConfig())
