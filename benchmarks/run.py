@@ -17,6 +17,7 @@ ALL = [
     ("tab7", tables.tab7_algorithmic_generalization),
     ("fig5", tables.fig5_inference_throughput),
     ("serve", serve_bench.serve_poisson),
+    ("serve_interference", serve_bench.serve_interference),
 ]
 
 

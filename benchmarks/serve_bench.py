@@ -1,17 +1,26 @@
-"""Serving benchmark: continuous-batching paged engine vs the static-batch
-baseline on a Poisson arrival trace with mixed prompt/generation lengths.
+"""Serving benchmarks: continuous-batching paged engine vs baselines.
 
-Emits (via benchmarks.common.emit):
-  * aggregate decode throughput (tokens/sec) for both schedulers,
-  * p50/p99 inter-token latency and mean TTFT (arrival -> first token),
-  * a greedy-parity bit: every request's engine tokens must equal the
-    static path's tokens for the same request.
+Two traces:
+  * `serve_poisson` — engine vs static batching on a Poisson arrival trace
+    with mixed prompt/generation lengths (PR-1 regression cell);
+  * `serve_interference` — a decode-heavy short-request stream with long
+    prompts arriving mid-stream: the unchunked engine stalls every decoding
+    request behind each long monolithic prefill, the chunked+preemptive
+    engine admits the long prompt in window-aligned chunks interleaved
+    with the decode batch.  Reports TTFT p50/p99 for the short (victim)
+    class and overall, aggregate tokens/sec for both engines, and gates:
+    chunked short-class TTFT p99 strictly lower, tokens/sec within 5%,
+    greedy tokens per request identical to the static baseline.
+
+Emits (via benchmarks.common.emit) throughput, latency percentiles, and a
+greedy-parity bit per trace.
 
 Run:  PYTHONPATH=src python -m benchmarks.run serve
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -147,3 +156,97 @@ def serve_poisson(n_req: int = 32, n_slots: int = 8) -> None:
                 for r in reqs)
     emit("serve_poisson_parity", 0.0,
          f"greedy_match={match} speedup={tps_e / tps_s:.2f}x")
+
+
+# -------------------------------------------------- long-prompt interference --
+
+def _interference_trace(vocab: int, w: int, n_short: int, n_long: int,
+                        seed: int = 0):
+    """Decode-heavy short stream + long prompts arriving mid-stream.
+
+    Shorts: prompt = w, gen in [w, 2w], priority 1, Poisson arrivals.
+    Longs:  prompt = 12w (window-aligned so the chunked path serves them),
+            gen = 8, priority 0, arriving evenly inside the short stream.
+    """
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(0.025, size=n_short))
+    reqs = []
+    for i in range(n_short):
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, vocab, size=w).astype(np.int32),
+            max_new_tokens=int(rng.integers(w, 2 * w + 1)),
+            arrival=float(arrivals[i]), priority=1))
+    span = float(arrivals[-1])
+    for j in range(n_long):
+        reqs.append(Request(
+            rid=n_short + j,
+            prompt=rng.integers(0, vocab, size=12 * w).astype(np.int32),
+            max_new_tokens=8,
+            arrival=span * (j + 1) / (n_long + 1), priority=0))
+    return reqs
+
+
+def _ttft(done, start):
+    return {f.rid: f.first_token - (start + f.arrival) for f in done}
+
+
+def serve_interference(n_short: int = 48, n_long: int = 3,
+                       n_slots: int = 8) -> None:
+    """Chunked+preemptive engine vs the unchunked engine on the same trace.
+
+    Gates (emitted in the derived column):
+      * short-class TTFT p99 strictly lower with chunking,
+      * aggregate tokens/sec within 5% of the unchunked engine,
+      * greedy tokens per request identical to the static baseline.
+    """
+    cfg = tiny_lm_cfg("mita_ref", m=8, k=16, layers=2, d=64, seq=256)
+    w = cfg.attn.window
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    reqs = _interference_trace(cfg.vocab, w, n_short, n_long)
+    pages = window_aligned(12 * w + 8, w) // w      # long prompt + gen
+    total_tokens = sum(r.max_new_tokens for r in reqs)
+    prompt_lens = sorted({len(r.prompt) for r in reqs})
+
+    base = EngineConfig(n_slots=n_slots, pages_per_slot=pages,
+                        n_pages=3 * pages + 6)
+    chunked = dataclasses.replace(base, prefill_chunk=2 * w, reserve_pages=4)
+
+    results = {}
+    for name, ecfg in (("unchunked", base), ("chunked", chunked)):
+        eng = ServingEngine(params, cfg, ecfg)
+        eng.warmup(prompt_lens)     # compiles outside the timed region
+        start = time.perf_counter()
+        done = eng.run(reqs, realtime=True)
+        dt = time.perf_counter() - start
+        ttft = _ttft(done, start)
+        short = np.asarray([ttft[r.rid] for r in reqs if r.priority == 1])
+        allt = np.asarray(list(ttft.values()))
+        stats = eng.stats()
+        results[name] = dict(
+            tokens={f.rid: f.tokens for f in done}, tps=total_tokens / dt,
+            p50=float(np.percentile(short, 50)),
+            p99=float(np.percentile(short, 99)),
+            p99_all=float(np.percentile(allt, 99)), stats=stats)
+        emit(f"serve_interference_{name}", dt * 1e6 / total_tokens,
+             f"{results[name]['tps']:.1f} tok/s | short ttft "
+             f"p50 {results[name]['p50'] * 1e3:.0f}ms "
+             f"p99 {results[name]['p99'] * 1e3:.0f}ms | all ttft "
+             f"p99 {results[name]['p99_all'] * 1e3:.0f}ms | "
+             f"chunks={stats['chunks']} preempt={stats['preemptions']} "
+             f"pages_hw={stats['pages_high_water']}")
+
+    # greedy parity vs the static baseline, per request
+    scfg = dataclasses.replace(cfg, attn=dataclasses.replace(
+        cfg.attn, external_finalize=True))
+    match = True
+    for r in reqs:
+        ref, _ = static_generate(params, scfg, jnp.asarray(r.prompt)[None],
+                                 r.max_new_tokens, capacity=pages * w)
+        for name in results:
+            if not np.array_equal(results[name]["tokens"][r.rid], ref[0]):
+                match = False
+    p99_better = results["chunked"]["p99"] < results["unchunked"]["p99"]
+    tps_ratio = results["chunked"]["tps"] / results["unchunked"]["tps"]
+    emit("serve_interference_gates", 0.0,
+         f"greedy_match={match} short_p99_better={p99_better} "
+         f"tps_ratio={tps_ratio:.3f} tps_within_5pct={abs(tps_ratio - 1) <= 0.05}")

@@ -1,9 +1,27 @@
-"""Continuous-batching serving example: mixed prompt/generation lengths
-through the paged MiTA engine — requests are admitted and retired every
-step, so short generations free their slot (and pages) for waiting work
-instead of idling until the longest request finishes.
+"""Continuous-batching serving example: mixed priorities and prompt lengths
+through the paged MiTA engine with chunked prefill.
+
+Requests are admitted and retired every step, so short generations free
+their slot (and pages) for waiting work instead of idling until the longest
+request finishes.  The trace mixes two priority classes: a batch-class
+(priority 0) long prompt arrives first and starts prefilling in
+window-aligned chunks interleaved with the decode batch; then a burst of
+interactive (priority 1) short prompts lands, outranks it, and — the pool
+being sized just over one long request's budget — preempts it (pages
+released, later rebuilt by recompute-from-prompt, emitting the same
+tokens it would have unpreempted; see docs/serving.md for the lifecycle).
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
+
+Expected output (timings vary; request/token counts are deterministic for
+the fixed seeds, and the script asserts every request finished and that
+the batch-class request was preempted at least once):
+
+    16 requests, 320 tokens in ~Xs (~Y tok/s, Z fused steps)
+    scheduler: chunks=C preemptions=P pages_high_water=H   (P >= 1)
+      req  0 (prio 1): 23 tokens -> [197, 160, 240, ...]
+      ...
+    all 16 requests finished; batch-class request survived P preemption(s)
 """
 
 import time
@@ -25,31 +43,57 @@ def main():
     params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
 
     rng = np.random.default_rng(0)
-    prompt_lens = [2 * w, 4 * w, 6 * w]
+    short_lens = [w, 2 * w]
+    long_len = 8 * w
     pool = {n: np.asarray(synthetic_batch(
         DataConfig(vocab=cfg.vocab, seq_len=n, global_batch=16), 0)["tokens"])
-        for n in prompt_lens}
+        for n in short_lens + [long_len]}
+
+    # 15 interactive requests (priority 1) + 1 batch-class long prompt
+    # (priority 0) that admits chunk-by-chunk and gets preempted
     reqs = []
-    for i in range(24):
-        n = prompt_lens[int(rng.integers(len(prompt_lens)))]
+    for i in range(15):
+        n = short_lens[int(rng.integers(len(short_lens)))]
         reqs.append(Request(
             rid=i, prompt=pool[n][i % 16],
-            max_new_tokens=int(rng.integers(4, 33)),
-            temperature=0.8))
+            max_new_tokens=int(rng.integers(8, 33)),
+            temperature=0.8, priority=1))
+    long_req = Request(rid=15, prompt=pool[long_len][0], max_new_tokens=8,
+                       priority=0)
+    reqs.append(long_req)
 
-    pages = window_aligned(max(prompt_lens) + 32, w) // w
+    # pool sized TIGHT (just over one long request's budget) so the
+    # batch-class prompt must yield its pages to interactive arrivals
+    pages = window_aligned(long_len + 32, w) // w
     eng = ServingEngine(params, cfg, EngineConfig(
-        n_slots=8, pages_per_slot=pages, n_pages=12 * pages))
+        n_slots=4, pages_per_slot=pages, n_pages=pages + 6,
+        prefill_chunk=2 * w, reserve_pages=2))
 
     t0 = time.perf_counter()
-    done = eng.run(reqs)
+    # the long prompt arrives first and starts prefilling chunk-by-chunk...
+    eng.submit(long_req)
+    for _ in range(6):
+        eng.step()
+    # ...then the interactive burst lands, outranks it, and evicts it
+    done = eng.run(reqs[:15])
     dt = time.perf_counter() - t0
     total = sum(len(f.tokens) for f in done)
+    st = eng.stats()
     print(f"{len(done)} requests, {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s aggregate, {eng.steps} fused steps)")
+    print(f"scheduler: chunks={st['chunks']} "
+          f"preemptions={st['preemptions']} "
+          f"pages_high_water={st['pages_high_water']}")
     for f in done[:4]:
-        print(f"  req {f.rid}: {len(f.tokens):2d} tokens "
-              f"-> {f.tokens[:10].tolist()}")
+        req = next(r for r in reqs if r.rid == f.rid)
+        print(f"  req {f.rid:2d} (prio {req.priority}): "
+              f"{len(f.tokens):2d} tokens -> {f.tokens[:10].tolist()}")
+    assert len(done) == len(reqs), "a request was lost"
+    long_done = next(f for f in done if f.rid == 15)
+    assert st["preemptions"] >= 1, \
+        "pool no longer tight enough to demonstrate preemption"
+    print(f"all {len(done)} requests finished; batch-class request "
+          f"survived {long_done.preemptions} preemption(s)")
     return 0
 
 

@@ -1,0 +1,50 @@
+#!/usr/bin/env python3
+"""Check internal markdown links (CI docs lane).
+
+Scans every tracked *.md file for inline links/images and verifies that
+relative targets exist on disk (anchors and external URLs are skipped).
+Exits non-zero listing every broken link.
+
+Run:  python scripts/check_doc_links.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache"}
+
+
+def md_files():
+    for p in sorted(ROOT.rglob("*.md")):
+        if not SKIP_DIRS & set(p.relative_to(ROOT).parts):
+            yield p
+
+
+def main() -> int:
+    broken = []
+    n_links = 0
+    for md in md_files():
+        for target in LINK.findall(md.read_text(encoding="utf-8")):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            n_links += 1
+            path = target.split("#", 1)[0]
+            if not (md.parent / path).resolve().exists():
+                broken.append(f"{md.relative_to(ROOT)} -> {target}")
+    if broken:
+        print(f"{len(broken)} broken internal link(s):")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"ok: {n_links} internal links across "
+          f"{sum(1 for _ in md_files())} markdown files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

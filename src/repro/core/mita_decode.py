@@ -314,16 +314,22 @@ def mita_decode_step(state: MiTADecodeState, q: jax.Array, k_new: jax.Array,
 class PagedMiTAState(NamedTuple):
     """Paged decode cache for one layer, shared across S request slots.
 
-    Shapes (R = n_pages * window pool rows + 1 scratch row, S slots,
+    Shapes (R = n_pages * window pool rows, S slots,
     M = pages_per_slot = landmark capacity per slot, K expert width):
-      k_pool, v_pool:   [R + 1, Hkv, d]
+      k_pool, v_pool:   [R + 1, Hkv, d]  row R is a write scratch for
+                                         inactive slots / padded tokens
       lm_q, lm_v:       [S, Hkv, M, d]   finalized landmark queries/values
-      expert_idx:       [S, Hkv, M, K]   global pool rows per expert
+      expert_idx:       [S, Hkv, M, K]   GLOBAL pool rows per expert
+                                         (page_id * window + offset)
       expert_valid:     [S, Hkv, M, K]
       q_sum:            [S, Hkv, d]      running query sum, current window
-    Per-slot progress (t), page tables, and activity live on the host and
-    are passed into each step — the scheduler owns them.
-    """
+                                         (f32; resumed across prefill chunks)
+
+    Ownership contract: per-slot progress (t), page tables, and activity
+    live on the host and are passed into each step — the scheduler owns
+    them and guarantees a page belongs to at most one slot, so every write
+    issued on behalf of a slot lands in rows no other slot can read
+    (docs/serving.md, invariant 1)."""
 
     k_pool: jax.Array
     v_pool: jax.Array
@@ -425,7 +431,14 @@ def mita_paged_decode_step(state: PagedMiTAState, q: jax.Array,
                   return zeros.
     Returns: (output [S, Hkv, G, d], updated state).  The caller advances
     ``t`` for active slots.
-    """
+
+    This is ONE program for the whole batch regardless of per-request
+    progress: positions, page tables, and activity are data, not shape.
+    Scheduler invariants relied on (docs/serving.md): the page named by
+    ``page_table[s, t[s] // w]`` exists for every active slot (the engine
+    allocates the next page BEFORE the step that appends into it), and
+    pages of distinct slots are disjoint, so the per-slot 1-row scatter
+    can never race another slot's rows."""
     from repro.kernels.ops import (gather_pages, gather_pool_rows,
                                    scatter_pool_rows)
 
@@ -498,10 +511,20 @@ def mita_paged_decode_step(state: PagedMiTAState, q: jax.Array,
 def pack_prefill_into_pages(state: PagedMiTAState, pre: MiTADecodeState,
                             slot: jax.Array, pages: jax.Array,
                             cfg: DecodeConfig) -> PagedMiTAState:
-    """Copy a single-request prefill state (B == 1, window-aligned capacity
-    C = P_used * w) into ``slot``, writing its KV rows into ``pages``
-    (``[P_used]`` page ids, table order == token order) and rebasing expert
-    indices from cache-local rows to global pool rows."""
+    """Copy a single-request monolithic prefill state into a slot's pages.
+
+    Shape contract: ``pre`` has B == 1 and a window-aligned cache capacity
+    C = P_used * w; ``pages`` is ``[P_used]`` int32 page ids in table order
+    (token order).  KV rows land at ``pages[c // w] * w + c % w`` and expert
+    indices are rebased from cache-local rows to GLOBAL pool rows, so the
+    decode-step gather needs no page-table lookup afterwards.
+
+    Scheduler invariant preserved: only ``slot``'s landmark/expert/q_sum
+    entries and the rows of ``pages`` are written — a pack can never touch
+    pages owned by another slot (invariant 1 in docs/serving.md).  The open
+    final window's ``q_sum`` is carried into the slot, so decode (or a later
+    `mita_chunk_prefill` call) resumes the window exactly where the prefill
+    left it."""
     w = cfg.window
     c_pre = pre.k_cache.shape[-2]
     if c_pre % w:
@@ -532,4 +555,169 @@ def pack_prefill_into_pages(state: PagedMiTAState, pre: MiTADecodeState,
         expert_valid=state.expert_valid.at[slot].set(
             jnp.pad(pre.expert_valid[0], pad_m)),
         q_sum=state.q_sum.at[slot].set(pre.q_sum[0]),
+    )
+
+
+# --------------------------------------------------------- chunked prefill --
+#
+# Serving engines bound admission latency by splitting a long prompt into
+# fixed-size chunks and interleaving chunk prefill with the decode batch
+# (vLLM-style chunked prefill).  `mita_chunk_prefill` is the MiTA form of
+# one such chunk: it appends the chunk's KV rows to the slot's pages,
+# finalizes every landmark window the chunk completes (scores over the
+# WHOLE gathered past, exactly like `_finalize_window`), resumes the open
+# window's query sum across chunk boundaries, and computes the chunk's
+# attention outputs so the model forward over the chunk is exact.
+#
+# The same op is the recompute path for preemption: a preempted request is
+# rebuilt by chunk-prefilling prompt + generated tokens.  Because decode ran
+# with a given finalize mode, positions >= n_train replicate the DECODE
+# availability rule (external mode: the last token of a window routes one
+# expert stale) while positions < n_train replicate the training/prefill
+# rule — so the rebuilt state continues bit-compatibly with the state the
+# request had when it was evicted.
+
+
+def mita_chunk_prefill(state: PagedMiTAState, q: jax.Array, k: jax.Array,
+                       v: jax.Array, page_table: jax.Array, slot: jax.Array,
+                       t0: jax.Array, n_valid: jax.Array, n_train: jax.Array,
+                       cfg: DecodeConfig) -> tuple[jax.Array, PagedMiTAState]:
+    """Prefill one chunk of a single slot's prompt into the paged pool.
+
+    Args:
+      q:          [Hkv, G, nc, d] chunk queries (RoPE'd at positions
+                  ``t0 + arange(nc)``).
+      k, v:       [Hkv, nc, d] chunk keys/values.
+      page_table: [M] int32 — the slot's page-table row.  Pages covering
+                  positions < t0 + n_valid must already be allocated.
+      slot:       scalar int32 — which slot's landmark/expert/q_sum to edit.
+      t0:         scalar int32 — tokens already packed for this slot (the
+                  chunk covers positions [t0, t0 + n_valid)).  Need NOT be
+                  window-aligned: an open window is resumed from the slot's
+                  ``q_sum``.
+      n_valid:    scalar int32 — valid tokens in the chunk; positions >=
+                  n_valid are padding (their KV rows go to the scratch row,
+                  their outputs are garbage and must be ignored).
+      n_train:    scalar int32 — training/decode semantics boundary.  For a
+                  fresh prompt pass t0 + n_valid (everything is "prompt");
+                  for preemption recompute pass the ORIGINAL prompt length
+                  so recomputed generated positions see landmarks exactly as
+                  the decode step did (external-finalize staleness included).
+
+    Returns (out [Hkv, G, nc, d], updated state).  One compiled program per
+    chunk shape serves every chunk of every request — chunk index, length
+    and resume point are data.
+
+    Scheduler invariants preserved: writes touch only ``slot``'s state rows,
+    the rows of pages named by ``page_table``, and the scratch row; landmark
+    i of the slot summarizes exactly the tokens of ``page_table[i]``.
+    """
+    from repro.kernels.ops import gather_pages, gather_pool_rows
+
+    w = cfg.window
+    hkv, g, nc, d = q.shape
+    m_slot = page_table.shape[0]
+    ctx = m_slot * w
+    scratch = state.k_pool.shape[0] - 1
+
+    pos = t0 + jnp.arange(nc)                       # [nc] global positions
+    valid_tok = jnp.arange(nc) < n_valid            # [nc]
+
+    # 1. append chunk KV to the slot's pages (padding -> scratch row)
+    page_idx = jnp.clip(pos // w, 0, m_slot - 1)
+    dst = jnp.where(valid_tok, page_table[page_idx] * w + pos % w, scratch)
+    kp = state.k_pool.at[dst].set(
+        jnp.swapaxes(k, 0, 1).astype(state.k_pool.dtype))
+    vp = state.v_pool.at[dst].set(
+        jnp.swapaxes(v, 0, 1).astype(state.v_pool.dtype))
+
+    # gathered slot context in token order: [ctx, Hkv, d]
+    k_ctx = gather_pages(kp, page_table[None], w)[0]
+    v_ctx = gather_pages(vp, page_table[None], w)[0]
+
+    # 2. finalize every window the chunk completes (windows [m0, m_new)),
+    # resuming the open window's query sum from the previous chunk
+    m0 = t0 // w
+    m_new = (t0 + n_valid) // w
+    li = jnp.arange(m_slot)                         # landmark slot ids [M]
+    ql = jnp.mean(q, axis=1)                        # [Hkv, nc, d] group pool
+    win_of = pos // w
+    tok_in_win = valid_tok[None, :] & (win_of[None, :] == li[:, None])
+    sums = jnp.einsum("mn,hnd->hmd", tok_in_win.astype(jnp.float32),
+                      ql.astype(jnp.float32))       # [Hkv, M, d]
+    resume = (li == m0)[None, :, None] & (t0 % w != 0)
+    sums = sums + jnp.where(resume, state.q_sum[slot][:, None, :], 0.0)
+
+    q_lm_new = (sums / w).astype(kp.dtype)          # [Hkv, M, d]
+    ends = (li + 1) * w                             # [M] strict window ends
+    s_lm = jnp.einsum("chd,hmd->hmc", k_ctx, q_lm_new) / math.sqrt(d)
+    vis = jnp.arange(ctx)[None, None, :] < ends[None, :, None]
+    s_lm = jnp.where(vis, s_lm.astype(jnp.float32), NEG_INF)
+    top_vals, top_loc = jax.lax.top_k(s_lm, cfg.k)  # [Hkv, M, K] ctx idx
+    new_valid = top_vals > NEG_INF / 2
+    ctx_rows = (page_table[:, None] * w + jnp.arange(w)[None, :]).reshape(ctx)
+    new_rows = ctx_rows[top_loc]                    # ctx idx -> global rows
+    p_lm = jax.nn.softmax(s_lm, axis=-1)
+    v_lm_new = jnp.einsum("hmc,chd->hmd", p_lm.astype(vp.dtype), v_ctx)
+
+    commit = ((li >= m0) & (li < m_new))[None, :, None]
+    lm_q_s = jnp.where(commit, q_lm_new, state.lm_q[slot])
+    lm_v_s = jnp.where(commit, v_lm_new, state.lm_v[slot])
+    ei_s = jnp.where(commit, new_rows, state.expert_idx[slot])
+    ev_s = jnp.where(commit, new_valid, state.expert_valid[slot])
+    # open window after the chunk: tail of this chunk, plus the resumed sum
+    # if the chunk closed no window at all
+    tail = jnp.einsum("n,hnd->hd",
+                      (valid_tok & (win_of == m_new)).astype(jnp.float32),
+                      ql.astype(jnp.float32))
+    q_sum_s = tail + jnp.where((m_new == m0) & (t0 % w != 0),
+                               state.q_sum[slot], 0.0)
+
+    # 3. chunk attention: shared + routed + local, same branch math as the
+    # training path / decode step, with per-position landmark availability
+    is_train = (pos < n_train)[:, None]             # [nc, 1]
+    avail_train = ends[None, :] <= pos[:, None] + 1
+    avail_dec = ends[None, :] <= pos[:, None] if cfg.external_finalize \
+        else avail_train
+    avail = jnp.where(is_train, avail_train, avail_dec)   # [nc, M]
+
+    r = jnp.einsum("hgnd,hmd->hgnm", q, lm_q_s) / math.sqrt(d)
+    r = jnp.where(avail[None, None], r.astype(jnp.float32), NEG_INF)
+    parts: list[Partial] = [partial_from_scores(r, lm_v_s[:, None])]
+
+    s_ = min(cfg.s, m_slot)
+    _, e_idx = jax.lax.top_k(r, s_)                 # [Hkv, G, nc, s]
+    e_ok = jnp.take_along_axis(r, e_idx, axis=-1) > NEG_INF / 2
+    flat_e = e_idx.reshape(hkv, g * nc * s_)
+    rows = jnp.take_along_axis(ei_s, flat_e[..., None], axis=1)
+    rows_valid = jnp.take_along_axis(ev_s, flat_e[..., None], axis=1)
+    rows = rows.reshape(hkv, g * nc * s_ * cfg.k)
+    k_sel = gather_pool_rows(kp, rows[None])[0].reshape(
+        hkv, g, nc, s_ * cfg.k, d)
+    v_sel = gather_pool_rows(vp, rows[None])[0].reshape(
+        hkv, g, nc, s_ * cfg.k, d)
+    logits = jnp.einsum("hgnd,hgnkd->hgnk", q, k_sel) / math.sqrt(d)
+    mask = (rows_valid.reshape(hkv, g, nc, s_, cfg.k)
+            & e_ok[..., None]).reshape(hkv, g, nc, s_ * cfg.k)
+    parts.append(partial_from_logits(logits, v_sel, mask=mask))
+
+    # local: each chunk position attends its own window, which may start in
+    # a previous chunk (resume) — the gathered context covers both
+    loc_idx = (jnp.clip(pos // w, 0, m_slot - 1) * w)[:, None] \
+        + jnp.arange(w)[None, :]                    # [nc, w] ctx positions
+    k_loc = jnp.moveaxis(k_ctx[loc_idx], 2, 0)      # [Hkv, nc, w, d]
+    v_loc = jnp.moveaxis(v_ctx[loc_idx], 2, 0)
+    loc_logits = jnp.einsum("hgnd,hnwd->hgnw", q, k_loc) / math.sqrt(d)
+    loc_mask = (loc_idx <= pos[:, None])[None, None]
+    parts.append(partial_from_logits(loc_logits, v_loc[:, None],
+                                     mask=loc_mask))
+
+    out = combine(parts)
+    return out, state._replace(
+        k_pool=kp, v_pool=vp,
+        lm_q=state.lm_q.at[slot].set(lm_q_s),
+        lm_v=state.lm_v.at[slot].set(lm_v_s),
+        expert_idx=state.expert_idx.at[slot].set(ei_s),
+        expert_valid=state.expert_valid.at[slot].set(ev_s),
+        q_sum=state.q_sum.at[slot].set(q_sum_s),
     )

@@ -11,7 +11,14 @@ Two paths over the same model/step functions:
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-      --batch 4 --prompt-len 128 --gen 32 [--engine continuous]
+      --batch 4 --prompt-len 128 --gen 32 [--engine continuous] \
+      [--prefill-chunk 256] [--priority 0] [--reserve-pages 2]
+
+``--prefill-chunk N`` (continuous engine) admits prompts in N-token chunks
+interleaved with the decode batch and enables priority preemption;
+``--priority`` tags the generated requests' priority class and
+``--reserve-pages`` keeps pages back for decode-time appends
+(docs/serving.md explains all three).
 """
 
 from __future__ import annotations
@@ -106,6 +113,14 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--requests", type=int, default=0,
                     help="continuous: total requests (default 2x batch)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="continuous: chunked-prefill length in tokens "
+                         "(multiple of the window; 0 = monolithic prefill)")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="continuous: priority class for the generated "
+                         "requests (higher wins admission/preemption)")
+    ap.add_argument("--reserve-pages", type=int, default=0,
+                    help="continuous: pages reserved for decode appends")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch, smoke=args.smoke)
@@ -136,18 +151,24 @@ def main(argv=None):
         pages = mdec.window_aligned(args.prompt_len + args.gen, w) // w
         eng = ServingEngine(params, cfg, EngineConfig(
             n_slots=args.batch, pages_per_slot=pages,
-            n_pages=2 * args.batch * pages))
+            n_pages=2 * args.batch * pages,
+            prefill_chunk=args.prefill_chunk,
+            reserve_pages=args.reserve_pages))
         reqs = [Request(rid=i, prompt=prompts[i % len(prompts)],
                         max_new_tokens=args.gen,
-                        temperature=args.temperature)
+                        temperature=args.temperature,
+                        priority=args.priority)
                 for i in range(n_req)]
         t0 = time.perf_counter()
         done = eng.run(reqs)
         dt = time.perf_counter() - t0
         total = sum(len(f.tokens) for f in done)
+        st = eng.stats()
         print(f"continuous: {n_req} requests ({args.prompt_len}+{args.gen}) "
               f"in {dt:.3f}s — {total / dt:.1f} tok/s, "
-              f"{eng.steps} fused steps, batch={args.batch}")
+              f"{eng.steps} fused steps, batch={args.batch}, "
+              f"chunks={st['chunks']}, preemptions={st['preemptions']}, "
+              f"pages_hw={st['pages_high_water']}")
         sample = np.stack([done[b].tokens for b in range(min(2, len(done)))])
     print("sample generations (token ids):")
     for b in range(min(2, sample.shape[0])):

@@ -292,6 +292,57 @@ def pack_prefill_into_states(states, prefill_states, slot: jax.Array,
         in_axes=(0, 0))(states, prefill_states)
 
 
+def lm_prefill_chunk(params: Params, states, tokens: jax.Array,
+                     slot: jax.Array, page_table_row: jax.Array,
+                     t0: jax.Array, n_valid: jax.Array, n_train: jax.Array,
+                     cfg: nn.ModelConfig):
+    """Prefill one chunk of one slot's prompt directly into the paged pools.
+
+    Args:
+      tokens:         [nc] int32 chunk tokens, zero-padded past ``n_valid``.
+      slot:           scalar int32 destination slot.
+      page_table_row: [M] int32 — the slot's page-table row; pages covering
+                      positions < t0 + n_valid must be allocated.
+      t0:             scalar int32 resume point (tokens already packed).
+      n_valid:        scalar int32 valid tokens in this chunk.
+      n_train:        scalar int32 — original prompt length; recomputed
+                      generated positions (>= n_train) replicate decode-time
+                      landmark availability (see `mita_chunk_prefill`).
+
+    Returns (logits [V] at position ``t0 + n_valid - 1``, updated states).
+    One compiled program per chunk length serves every chunk of every
+    request — chunk index, resume point, and validity are data, so the
+    engine's set of prefill program shapes stays O(1).
+    """
+    (nc,) = tokens.shape
+    pos = t0 + jnp.arange(nc)
+    x = nn.embed(params["emb"], tokens[None], cfg)
+    dcfg = _decode_cfg(cfg)
+    ct = cfg.compute_dtype
+
+    def body(h, layer):
+        lp, st = layer
+        xin = nn.rms_norm(h, lp["ln1"])
+        q, k, v = nn._qkv(lp["attn"], xin, cfg, pos)
+        o, st = mdec.mita_chunk_prefill(
+            st, q[0], k[0, :, 0], v[0, :, 0], page_table_row, slot,
+            t0, n_valid, n_train, dcfg)
+        o = jnp.moveaxis(o, 2, 0).reshape(1, nc, cfg.n_heads * cfg.dh)
+        h = h + o @ lp["attn"]["wo"].astype(ct)
+        xn = nn.rms_norm(h, lp["ln2"])
+        if cfg.n_experts:
+            f, _ = moe_apply(lp["moe"], xn, cfg)
+        else:
+            f = nn.swiglu_apply(lp["ffn"], xn, cfg)
+        return h + f, st
+
+    x, new_states = jax.lax.scan(body, x, (params["blocks"], states),
+                                 unroll=cfg.scan_unroll)
+    x = nn.rms_norm(x, params["ln_f"])
+    last = jnp.take(x[0], n_valid - 1, axis=0)
+    return nn.unembed(params["emb"], last, cfg), new_states
+
+
 def lm_prefill(params: Params, tokens: jax.Array, cfg: nn.ModelConfig,
                capacity: int,
                extra_embeds: Optional[jax.Array] = None):

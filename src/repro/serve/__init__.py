@@ -1,9 +1,16 @@
 """Continuous-batching MiTA serving engine (paged decode cache).
 
 Public surface:
-  * `Request` / `FinishedRequest` — one generation job and its result.
-  * `EngineConfig` — slot/page budget and scheduling knobs.
-  * `ServingEngine` — admits requests into a paged, fused decode batch.
+  * `Request` / `FinishedRequest` — one generation job (with a priority
+    class) and its result.
+  * `EngineConfig` — slot/page budget and scheduling knobs, including
+    chunked prefill (`prefill_chunk`) and the append-only page reserve.
+  * `ServingEngine` — admits requests into a paged, fused decode batch;
+    with chunking enabled it also preempts low-priority requests under
+    page pressure and rebuilds them by recompute-from-prompt.
+
+docs/serving.md documents the request lifecycle, the page-pool layout, and
+every compiled program shape the engine can dispatch.
 """
 
 from repro.serve.engine import (EngineConfig, FinishedRequest, Request,

@@ -1,17 +1,29 @@
 """Continuous-batching engine over the paged MiTA decode cache.
 
-The scheduler is plain host Python; everything device-side is one of two
-jitted programs (see README.md for the page layout and invariants):
+The scheduler is plain host Python; everything device-side is one of three
+jitted programs (docs/serving.md has the page layout, the request-lifecycle
+state machine, and the full program inventory):
 
   * ``prefill+pack`` — `lm_prefill` over an admission group (same-length
     waiting requests, power-of-two sizes) packed straight into the slots'
     pages; compiled per (window-aligned prompt capacity, group size);
+  * ``chunk prefill`` — `lm_prefill_chunk`: ONE program per configured
+    chunk length that prefills any chunk of any request (chunk index,
+    resume point, and validity are data).  Enabled by
+    ``EngineConfig.prefill_chunk``; long prompts then admit incrementally,
+    interleaved with the decode batch, instead of stalling it;
   * ``decode``       — `lm_paged_decode_step`, ONE program for the whole
     slot batch regardless of per-request progress (per-slot positions, page
     tables, and activity are data, not shape).  The window-boundary
     landmark finalize is fused behind a scalar `lax.cond`, and the per-slot
     position/finalize counters advance on device so the hot loop uploads
     only the sampled tokens.
+
+Chunked mode also enables priority preemption: under page pressure the
+scheduler evicts the lowest-priority victim (releasing its pages) and later
+rebuilds it by chunk-prefilling prompt + generated-so-far — recompute-from-
+prompt, vLLM-style.  A preempted request emits the same greedy tokens it
+would have emitted unpreempted (`tests/test_serve_chunked.py` pins this).
 
 Greedy sampling is exact w.r.t. the static `launch.serve` path: a request
 decoded by the engine emits the same tokens it would emit in a fixed batch
@@ -21,11 +33,11 @@ from (request id, token index) so results are batching-invariant too.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import functools
 import time
-from collections import deque
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -78,54 +90,148 @@ def _prefill_pack_fn(cfg: ModelConfig, cap: int, k: int) -> Callable:
     return jax.jit(prefill_pack, donate_argnums=(1,))
 
 
+@functools.lru_cache(maxsize=None)
+def _chunk_prefill_fn(cfg: ModelConfig, chunk: int, m_slot: int) -> Callable:
+    """Chunked prefill program: ONE compiled shape per (chunk length,
+    pages-per-slot) serves every chunk of every request — resume point,
+    validity, and the training/decode semantics boundary are data."""
+
+    def run(p, st, toks, slot, pt_row, t0, n_valid, n_train):
+        return tfm.lm_prefill_chunk(p, st, toks, slot, pt_row, t0, n_valid,
+                                    n_train, cfg)
+
+    return jax.jit(run, donate_argnums=(1,))
+
+
 @dataclasses.dataclass(eq=False)
 class Request:
-    """One generation job.  ``max_new_tokens`` includes the first token
-    sampled from the prefill logits.  ``eq=False``: requests compare by
-    identity — the scheduler removes them from its queue by object, and a
-    generated __eq__ would compare the ndarray prompt."""
+    """One generation job.
+
+    Shape contract: ``prompt`` is a [n] int32 token array with n >= 1;
+    ``max_new_tokens`` >= 1 counts every emitted token INCLUDING the first
+    one sampled from the prefill logits, so a request occupies
+    ``ceil((n + max_new_tokens) / window)`` pages at full length.
+
+    ``priority``: higher wins.  Admission order is (priority desc, submit
+    order); in chunked mode a higher-priority arrival may preempt the
+    lowest-priority running request under page pressure (the victim is
+    rebuilt later, emitting identical tokens).
+
+    ``eq=False``: requests compare by identity — the scheduler removes them
+    from its queue by object, and a generated __eq__ would compare the
+    ndarray prompt."""
     rid: int
     prompt: np.ndarray              # [n] int32 token ids
     max_new_tokens: int
     temperature: float = 0.0
     arrival: float = 0.0            # seconds since trace start
+    priority: int = 0               # higher = more important
 
 
 @dataclasses.dataclass
 class FinishedRequest:
     """``arrival`` is trace-relative (copied from the Request); all other
-    stamps are absolute `time.perf_counter` values."""
+    stamps are absolute `time.perf_counter` values.  ``preemptions`` counts
+    how many times the request was evicted and rebuilt."""
     rid: int
     tokens: np.ndarray              # [max_new_tokens] generated ids
     arrival: float
-    admitted: float                 # when prefill ran
+    admitted: float                 # when prefill started
     first_token: float              # TTFT reference point
     finished: float
     token_times: list[float] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
+    """Slot/page budget and scheduling knobs.
+
+    Invariants enforced at construction: the pool minus the reserve still
+    fits one slot's maximum context (otherwise admission could deadlock),
+    and ``prefill_chunk`` is a positive multiple of the landmark window
+    (pages and landmarks are window-aligned, so chunk boundaries must be
+    too).
+
+    ``prefill_chunk`` = 0 (default) keeps the monolithic prefill path:
+    full page budget up front, no preemption — exactly the PR-1 engine.
+    ``prefill_chunk`` > 0 enables chunked prefill AND priority preemption:
+    requests admit with their first chunk's pages only, grow page-by-page,
+    and may be evicted for higher-priority work.
+
+    ``reserve_pages``: pages the admission/prefill path may not claim;
+    only decode-time appends (one page per ``window`` tokens per slot) can
+    dip into them, which is what keeps running requests running when a
+    burst of admissions would otherwise drain the pool."""
     n_slots: int = 8                # decode batch width
     n_pages: int = 64               # shared pool size (pages of `window`)
     pages_per_slot: int = 8         # max context per request, in pages
     finalize: str = "external"      # external | inline (see core.mita_decode)
+    prefill_chunk: int = 0          # chunk length (0 = monolithic prefill)
+    reserve_pages: int = 0          # appends-only page reserve
 
 
 class _PageAllocator:
-    """Free-list over the shared pool.  A page belongs to ≤ 1 active slot."""
+    """Free-list over the shared pool.  A page belongs to ≤ 1 active slot.
 
-    def __init__(self, n_pages: int):
+    ``reserve`` pages are invisible to ordinary allocations (admission,
+    prefill chunks) and only served when ``reserved=True`` (decode appends)
+    — the high-water mark and the dip counter quantify how close the pool
+    came to starving the decode batch."""
+
+    def __init__(self, n_pages: int, reserve: int = 0):
+        self.n_pages = n_pages
+        self.reserve = reserve
         self.free: list[int] = list(range(n_pages))
+        self.high_water = 0             # max pages ever in use
+        self.reserve_dips = 0           # appends served from the reserve
 
-    def alloc(self, n: int) -> list[int]:
-        if n > len(self.free):
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - len(self.free)
+
+    def can_alloc(self, n: int, reserved: bool = False) -> bool:
+        avail = len(self.free) if reserved else len(self.free) - self.reserve
+        return n <= avail
+
+    def alloc(self, n: int, reserved: bool = False) -> list[int]:
+        if not self.can_alloc(n, reserved):
             raise RuntimeError("page pool exhausted")
+        if reserved and len(self.free) - n < self.reserve:
+            self.reserve_dips += 1
         pages, self.free = self.free[:n], self.free[n:]
+        self.high_water = max(self.high_water, self.in_use)
         return pages
 
     def release(self, pages: list[int]) -> None:
         self.free.extend(pages)
+
+
+@dataclasses.dataclass(eq=False)
+class _WaitEntry:
+    """Queue entry: (priority desc, submit order) defines admission order.
+    ``resume`` holds (tokens, times, meta) for a preempted request awaiting
+    its recompute-from-prompt re-admission; ``evictions`` counts every
+    preemption the request has suffered (mid-prefill restarts included)."""
+    req: Request
+    seq: int
+    resume: Optional[tuple] = None
+    evictions: int = 0
+
+    @property
+    def key(self):
+        return (-self.req.priority, self.seq)
+
+
+@dataclasses.dataclass(eq=False)
+class _PrefillJob:
+    """A request mid-(chunked)-prefill: owns a slot and a growing page set,
+    but is NOT in the decode batch until the last chunk lands."""
+    entry: _WaitEntry
+    toks: np.ndarray                # prompt [+ generated-so-far] to pack
+    n_train: int                    # original prompt length (semantics)
+    admit_time: float
+    done: int = 0                   # tokens packed so far (next chunk's t0)
 
 
 class ServingEngine:
@@ -138,9 +244,15 @@ class ServingEngine:
             raise ValueError("ServingEngine drives MiTA decode caches")
         if ecfg.finalize not in ("external", "inline"):
             raise ValueError(f"unknown finalize mode {ecfg.finalize!r}")
-        if ecfg.n_pages < ecfg.pages_per_slot:
-            raise ValueError("pool smaller than one slot's max context — "
-                             "admission could deadlock")
+        if ecfg.n_pages - ecfg.reserve_pages < ecfg.pages_per_slot:
+            raise ValueError("pool minus reserve smaller than one slot's "
+                             "max context — admission could deadlock")
+        if ecfg.prefill_chunk and (ecfg.prefill_chunk < 0
+                                   or ecfg.prefill_chunk % cfg.attn.window):
+            raise ValueError("prefill_chunk must be a positive multiple of "
+                             f"the landmark window ({cfg.attn.window})")
+        if ecfg.reserve_pages < 0:
+            raise ValueError("reserve_pages must be >= 0")
         self.params = params
         self.cfg = dataclasses.replace(
             cfg, attn=dataclasses.replace(
@@ -152,7 +264,7 @@ class ServingEngine:
 
         s, m = ecfg.n_slots, ecfg.pages_per_slot
         self.states = tfm.init_paged_states(self.cfg, s, ecfg.n_pages, m)
-        self.alloc = _PageAllocator(ecfg.n_pages)
+        self.alloc = _PageAllocator(ecfg.n_pages, ecfg.reserve_pages)
 
         # host-owned scheduler state
         self.page_table = np.zeros((s, m), np.int32)
@@ -162,14 +274,21 @@ class ServingEngine:
         self.m_done = np.zeros(s, np.int32)   # finalized landmarks per slot
         self.free_slots: list[int] = list(range(s))
         self.slot_req: dict[int, Request] = {}
+        self.slot_entry: dict[int, _WaitEntry] = {}
         self.slot_pages: dict[int, list[int]] = {}
         self.slot_out: dict[int, list[int]] = {}
         self.slot_times: dict[int, list[float]] = {}
         self.slot_meta: dict[int, tuple[float, float]] = {}  # admitted, ttft
-        self.waiting: deque[Request] = deque()
+        self.slot_seq: dict[int, int] = {}    # admission recency (victims)
+        self.slot_npre: dict[int, int] = {}   # preemptions suffered so far
+        self.prefilling: dict[int, _PrefillJob] = {}
+        self.waiting: list[_WaitEntry] = []   # sorted by _WaitEntry.key
         self.finished: list[FinishedRequest] = []
         self.steps = 0
+        self.n_preemptions = 0
+        self.n_chunks = 0
         self.step_times: list[float] = []
+        self._seq = 0
 
         # window-boundary landmark finalize fused behind a lax.cond —
         # off-boundary steps skip the O(context) work inside ONE program
@@ -186,6 +305,10 @@ class ServingEngine:
         cap = mdec.window_aligned(n, self.w)
         return _prefill_pack_fn(self.cfg, cap, k)
 
+    def _chunk_fn(self) -> Callable:
+        return _chunk_prefill_fn(self.cfg, self.ecfg.prefill_chunk,
+                                 self.ecfg.pages_per_slot)
+
     def _sample(self, logits: np.ndarray, req: Request, index: int) -> int:
         if req.temperature <= 0.0:
             return int(np.argmax(logits))
@@ -200,7 +323,7 @@ class ServingEngine:
     def _check_prefill_traceable(self, n: int) -> None:
         """Reject prompt lengths the prefill path cannot lower (e.g. the
         sorted-mita block_q divisibility constraint) at SUBMIT time, with
-        abstract tracing only — a length that failed inside `_admit` after
+        abstract tracing only — a length that failed inside admission after
         scheduler state was mutated would leak the slot and its pages."""
         if n in self._traceable:
             return
@@ -220,11 +343,12 @@ class ServingEngine:
 
     def warmup(self, prompt_lens: list[int]) -> None:
         """Compile every program the serving loop can hit for the given
-        prompt lengths: the fused decode step and each power-of-two
-        admission-group prefill.  Runs on one scratch engine so this
-        engine's pool/scheduler state is untouched (compile caches are
-        shared module-wide)."""
+        prompt lengths: the fused decode step, the chunk-prefill program
+        (chunked mode), and each monolithic prefill variant.  Runs on one
+        scratch engine so this engine's pool/scheduler state is untouched
+        (compile caches are shared module-wide)."""
         scratch = ServingEngine(self.params, self.cfg, self.ecfg)
+        k_max = 1 if self.ecfg.prefill_chunk else self.ecfg.n_slots
         for n in sorted(set(prompt_lens)):
             # probe requests claim the MINIMAL page budget a real request
             # of this length would (max_new=1), so warmup never rejects a
@@ -232,14 +356,27 @@ class ServingEngine:
             gen = 2 if mdec.window_aligned(n + 2, self.w) // self.w \
                 <= self.ecfg.pages_per_slot else 1
             k = 1
-            while k <= self.ecfg.n_slots:
+            while k <= k_max:
                 scratch.run([Request(rid=-1 - i, prompt=np.zeros(n, np.int32),
                                      max_new_tokens=gen) for i in range(k)])
                 k *= 2
 
+    def stats(self) -> dict[str, float]:
+        """Scheduler counters: fused steps, prefill chunks run, preemptions,
+        and the allocator's high-water / reserve accounting."""
+        return {"steps": self.steps, "chunks": self.n_chunks,
+                "preemptions": self.n_preemptions,
+                "pages_high_water": self.alloc.high_water,
+                "reserve_dips": self.alloc.reserve_dips}
+
     # ----------------------------------------------------------- scheduler --
 
     def submit(self, req: Request) -> None:
+        """Queue a request.  Validates — before any scheduler state is
+        touched — that the prompt is non-empty, that prompt + max_new fits a
+        slot's page budget (invariant 3: an admitted request can always
+        finish), that the rid is not already in flight, and that the prompt
+        length lowers through whichever prefill path will serve it."""
         if len(req.prompt) < 1 or req.max_new_tokens < 1:
             raise ValueError("need a non-empty prompt and ≥ 1 new token")
         if self.pages_needed(req) > self.ecfg.pages_per_slot:
@@ -249,9 +386,14 @@ class ServingEngine:
                 f"(max context {self.ecfg.pages_per_slot * self.w})")
         if req.rid in self._inflight:
             raise ValueError(f"request id {req.rid} is already in flight")
-        self._check_prefill_traceable(len(req.prompt))
+        if not self.ecfg.prefill_chunk or len(req.prompt) % self.w:
+            self._check_prefill_traceable(len(req.prompt))
         self._inflight.add(req.rid)
-        self.waiting.append(req)
+        self._seq += 1
+        self._enqueue(_WaitEntry(req=req, seq=self._seq))
+
+    def _enqueue(self, entry: _WaitEntry) -> None:
+        bisect.insort(self.waiting, entry, key=lambda e: e.key)
 
     def _emit(self, slot: int, tok: int, now: float) -> None:
         self.slot_out[slot].append(tok)
@@ -259,10 +401,13 @@ class ServingEngine:
 
     def _retire(self, slot: int, now: float) -> None:
         req = self.slot_req.pop(slot)
+        self.slot_entry.pop(slot)
         out = self.slot_out.pop(slot)
         times = self.slot_times.pop(slot)
         admitted, ttft = self.slot_meta.pop(slot)
         self.alloc.release(self.slot_pages.pop(slot))
+        self.slot_seq.pop(slot)
+        npre = self.slot_npre.pop(slot)
         self.active[slot] = False
         self.t[slot] = 0
         self.page_table[slot] = 0     # unused entries must stay in-bounds
@@ -272,54 +417,173 @@ class ServingEngine:
         self.finished.append(FinishedRequest(
             rid=req.rid, tokens=np.asarray(out, np.int32),
             arrival=req.arrival, admitted=admitted, first_token=ttft,
-            finished=now, token_times=times))
+            finished=now, token_times=times, preemptions=npre))
+
+    # ---------------------------------------------------------- preemption --
+
+    def _pick_victim(self, below: Optional[int] = None) -> Optional[int]:
+        """Lowest-priority occupied slot; ties broken toward the most
+        recently admitted (its recompute loses the least work).  ``below``
+        restricts candidates to strictly lower priorities (admission-side
+        preemption never thrashes equals)."""
+        cands = [(job.entry.req.priority, self.slot_seq[s], s)
+                 for s, job in self.prefilling.items()]
+        cands += [(req.priority, self.slot_seq[s], s)
+                  for s, req in self.slot_req.items()]
+        if below is not None:
+            cands = [c for c in cands if c[0] < below]
+        if not cands:
+            return None
+        cands.sort(key=lambda c: (c[0], -c[1]))
+        return cands[0][2]
+
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot``: release its pages and requeue its request.  A
+        decoding victim keeps its emitted tokens/stamps and is rebuilt by
+        recompute-from-prompt; a prefilling victim simply restarts (it has
+        emitted nothing)."""
+        self.n_preemptions += 1
+        self.alloc.release(self.slot_pages.pop(slot))
+        self.page_table[slot] = 0
+        self.slot_seq.pop(slot)
+        job = self.prefilling.pop(slot, None)
+        if job is not None:
+            entry = job.entry      # mid-prefill: restart, nothing emitted
+        else:
+            entry = self.slot_entry.pop(slot)
+            self.slot_req.pop(slot)
+            out = self.slot_out.pop(slot)
+            times = self.slot_times.pop(slot)
+            meta = self.slot_meta.pop(slot)
+            self.slot_npre.pop(slot)
+            entry.resume = (out, times, meta)
+            self.active[slot] = False
+            self.t[slot] = 0
+            self._dirty = True
+        entry.evictions += 1
+        self.free_slots.append(slot)
+        self._enqueue(entry)
+
+    def _preempt_for(self, priority: int, pages: int,
+                     need_slot: bool = False) -> None:
+        """Evict strictly-lower-priority victims until ``pages`` are
+        allocatable (and a slot is free, if requested) or none remain."""
+        while ((need_slot and not self.free_slots)
+               or not self.alloc.can_alloc(pages)):
+            victim = self._pick_victim(below=priority)
+            if victim is None:
+                return
+            self._preempt(victim)
+
+    # ----------------------------------------------------------- admission --
 
     def _admit(self, now: float) -> None:
-        """FCFS admission with same-length grouping: the head-of-line
-        request picks the prompt length; any other waiting requests of that
-        length ride along in ONE fused prefill+pack dispatch (prefill rows
-        are independent, so grouping never changes a request's tokens).
-        Head-of-line blocking on pages is deliberate — big requests are not
-        starved by later small ones."""
+        if self.ecfg.prefill_chunk:
+            self._admit_chunked(now)
+        else:
+            self._admit_grouped(now)
+
+    def _first_chunk_pages(self, entry: _WaitEntry) -> int:
+        """Pages the first prefill dispatch of this request needs: one
+        chunk's worth, or the whole (window-aligned) prompt when the prompt
+        is not window-aligned and must go through the monolithic head."""
+        n_train = len(entry.req.prompt)
+        n_total = n_train if entry.resume is None \
+            else n_train + len(entry.resume[0]) - 1
+        if n_train % self.w:
+            return mdec.window_aligned(n_train, self.w) // self.w
+        first = min(self.ecfg.prefill_chunk, n_total)
+        return mdec.window_aligned(first, self.w) // self.w
+
+    def _admit_chunked(self, now: float) -> None:
+        """Chunked admission: one request at a time, first-chunk pages only.
+        A higher-priority arrival preempts the lowest strictly-lower victim
+        when slots or pages run short (invariant 2 becomes priority-ordered
+        head-of-line blocking)."""
+        while self.waiting:
+            entry = self.waiting[0]
+            first = self._first_chunk_pages(entry)
+            if not self.free_slots or not self.alloc.can_alloc(first):
+                self._preempt_for(entry.req.priority, first, need_slot=True)
+                if not self.free_slots or not self.alloc.can_alloc(first):
+                    return
+            self.waiting.pop(0)
+            slot = self.free_slots.pop()
+            if entry.resume is None:
+                toks = np.asarray(entry.req.prompt, np.int32)
+            else:
+                out = entry.resume[0]
+                toks = np.concatenate([
+                    np.asarray(entry.req.prompt, np.int32),
+                    np.asarray(out[:-1], np.int32)])
+            self.prefilling[slot] = _PrefillJob(
+                entry=entry, toks=toks, n_train=len(entry.req.prompt),
+                admit_time=now)
+            # claim the first dispatch's pages NOW so concurrent admissions
+            # never overcommit the same free pages
+            pages = self.alloc.alloc(first)
+            self.slot_pages[slot] = pages
+            self.page_table[slot] = 0
+            self.page_table[slot, : len(pages)] = pages
+            self._dirty = True
+            self._seq += 1
+            self.slot_seq[slot] = self._seq
+
+    def _admit_grouped(self, now: float) -> None:
+        """Monolithic admission (``prefill_chunk`` = 0): priority-then-FCFS
+        with same-length grouping — the head-of-line request picks the
+        prompt length; other waiting requests of that length ride along in
+        ONE fused prefill+pack dispatch (prefill rows are independent, so
+        grouping never changes a request's tokens).  Head-of-line blocking
+        on pages is deliberate — big requests are not starved by later
+        small ones.  The full page budget is claimed up front (invariant
+        3), so this path never needs preemption."""
         while self.waiting and self.free_slots:
-            head = self.waiting[0]
-            if self.pages_needed(head) > len(self.alloc.free):
+            head = self.waiting[0].req
+            if not self.alloc.can_alloc(self.pages_needed(head)):
                 return
             n = len(head.prompt)
-            budget = len(self.alloc.free) - self.pages_needed(head)
-            group = [head]
-            for r in list(self.waiting)[1:]:
+            budget = (len(self.alloc.free) - self.alloc.reserve
+                      - self.pages_needed(head))
+            group = [self.waiting[0]]
+            for e in self.waiting[1:]:
                 if len(group) >= len(self.free_slots):
                     break
-                if len(r.prompt) == n and self.pages_needed(r) <= budget:
-                    group.append(r)
-                    budget -= self.pages_needed(r)
+                if len(e.req.prompt) == n and self.pages_needed(e.req) <= budget:
+                    group.append(e)
+                    budget -= self.pages_needed(e.req)
             # power-of-two chunks: bounds the (length, group-size) compile
             # variants to log2(slots) per prompt length (see `warmup`);
             # the remainder is admitted by the next loop iteration
             group = group[: 1 << (len(group).bit_length() - 1)]
-            for r in group:
-                self.waiting.remove(r)
+            for e in group:
+                self.waiting.remove(e)
             slots = [self.free_slots.pop() for _ in group]
-            pages_list = [self.alloc.alloc(self.pages_needed(r))
-                          for r in group]
+            pages_list = [self.alloc.alloc(self.pages_needed(e.req))
+                          for e in group]
             cap_pre = mdec.window_aligned(n, self.w)
 
             logits, self.states = self._prefill_fn(n, len(group))(
                 self.params, self.states,
-                jnp.asarray(np.stack([r.prompt for r in group]), jnp.int32),
+                jnp.asarray(np.stack([e.req.prompt for e in group]),
+                            jnp.int32),
                 jnp.asarray(slots, jnp.int32),
                 jnp.asarray(np.stack(
                     [pg[: cap_pre // self.w] for pg in pages_list]),
                     jnp.int32))
             logits = np.asarray(logits)
 
-            for i, (req, slot, pages) in enumerate(
+            for i, (entry, slot, pages) in enumerate(
                     zip(group, slots, pages_list)):
+                req = entry.req
                 self.slot_req[slot] = req
+                self.slot_entry[slot] = entry
                 self.slot_pages[slot] = pages
                 self.slot_out[slot] = []
                 self.slot_times[slot] = []
+                self.slot_npre[slot] = 0
+                self._seq += 1
+                self.slot_seq[slot] = self._seq
                 self.page_table[slot] = 0
                 self.page_table[slot, : len(pages)] = pages
                 self.t[slot] = n
@@ -333,15 +597,159 @@ class ServingEngine:
                     self._retire(slot, time.perf_counter())
             self._dirty = True
 
+    # ------------------------------------------------------ chunked prefill --
+
+    def _grow_pages(self, slot: int, target: int) -> bool:
+        """Grow ``slot`` to ``target`` pages for the next prefill dispatch.
+
+        On pressure, pages flow toward the best-keyed admitted work: the
+        globally worst occupant — lowest priority, then most recently
+        admitted (FCFS within a class) — is evicted until the allocation
+        fits.  The worst occupant is never better-keyed than this job (the
+        job is itself a candidate), so higher-priority and more-senior work
+        is never disturbed; if this job IS the pool's worst occupant while
+        others wait on it, it yields (self-preempt).  The strict total
+        order (priority, admission seq) is what rules out livelock between
+        equal-priority jobs."""
+        delta = target - len(self.slot_pages[slot])
+        if delta <= 0:
+            return True
+        while not self.alloc.can_alloc(delta):
+            victim = self._pick_victim()
+            if victim is None or victim == slot:
+                break
+            self._preempt(victim)
+        if not self.alloc.can_alloc(delta):
+            occupied = len(self.prefilling) + len(self.slot_req)
+            if occupied > 1 and self._pick_victim() == slot:
+                self._preempt(slot)
+            return False
+        pages = self.alloc.alloc(delta)
+        base = len(self.slot_pages[slot])
+        for i, p in enumerate(pages):
+            self.page_table[slot, base + i] = p
+        self.slot_pages[slot].extend(pages)
+        self._dirty = True
+        return True
+
+    def _advance_prefill(self, now: float) -> None:
+        """Run ONE prefill dispatch (a chunk, or the monolithic head for a
+        non-window-aligned prompt) for the best prefilling job — bounding
+        per-step added latency to one chunk regardless of prompt length."""
+        if not self.prefilling:
+            return
+        slot, job = min(self.prefilling.items(),
+                        key=lambda kv: kv[1].entry.key)
+        n_total = len(job.toks)
+        if job.done == 0 and job.n_train % self.w:
+            # monolithic head: the training-path prefill program this prompt
+            # length would have used unchunked (non-aligned prompts keep the
+            # quirkless monolithic semantics; see docs/serving.md)
+            n = job.n_train
+            cap = mdec.window_aligned(n, self.w)
+            if not self._grow_pages(slot, cap // self.w):
+                return
+            logits, self.states = self._prefill_fn(n, 1)(
+                self.params, self.states,
+                jnp.asarray(job.toks[None, :n], jnp.int32),
+                jnp.asarray([slot], jnp.int32),
+                jnp.asarray([self.slot_pages[slot][: cap // self.w]],
+                            jnp.int32))
+            job.done = n
+            if job.done == n_total:
+                self._finish_prefill(slot, job, np.asarray(logits)[0], now)
+            return
+        chunk = self.ecfg.prefill_chunk
+        t0 = job.done
+        nv = min(chunk, n_total - t0)
+        target = mdec.window_aligned(t0 + nv, self.w) // self.w
+        if not self._grow_pages(slot, target):
+            return
+        toks = np.zeros(chunk, np.int32)
+        toks[:nv] = job.toks[t0:t0 + nv]
+        logits, self.states = self._chunk_fn()(
+            self.params, self.states, jnp.asarray(toks), np.int32(slot),
+            jnp.asarray(self.page_table[slot]), np.int32(t0), np.int32(nv),
+            np.int32(job.n_train))
+        self.n_chunks += 1
+        job.done = t0 + nv
+        if job.done == n_total:
+            self._finish_prefill(slot, job, np.asarray(logits), now)
+
+    def _finish_prefill(self, slot: int, job: _PrefillJob,
+                        logits: np.ndarray, now: float) -> None:
+        """Last chunk landed: move the slot into the decode batch.  Fresh
+        requests sample their first token from the final chunk's logits;
+        resumed (preempted) requests restore their emitted tokens and
+        continue decoding from where they were evicted."""
+        entry = job.entry
+        req = entry.req
+        del self.prefilling[slot]
+        n_total = len(job.toks)
+        self.slot_req[slot] = req
+        self.slot_entry[slot] = entry
+        self.t[slot] = n_total
+        self.m_done[slot] = n_total // self.w
+        self.active[slot] = True
+        self._dirty = True
+        self.slot_npre[slot] = entry.evictions
+        if entry.resume is None:
+            self.slot_out[slot] = []
+            self.slot_times[slot] = []
+            first = self._sample(logits, req, 0)
+            self.slot_meta[slot] = (job.admit_time, time.perf_counter())
+            self._emit(slot, first, time.perf_counter())
+            self.tokens_in[slot] = first
+            if req.max_new_tokens == 1:
+                self._retire(slot, time.perf_counter())
+        else:
+            out, times, meta = entry.resume
+            entry.resume = None
+            self.slot_out[slot] = list(out)
+            self.slot_times[slot] = list(times)
+            self.slot_meta[slot] = meta
+            self.tokens_in[slot] = out[-1]
+
+    def _ensure_append_pages(self) -> None:
+        """Guarantee every active slot owns the page its next append lands
+        in (invariant 3 in incremental form).  Appends may dip into the
+        reserve; if the pool is truly dry the lowest-priority slot is
+        preempted — possibly the appender itself, whose pages then fund the
+        survivors."""
+        for slot in np.nonzero(self.active)[0]:
+            slot = int(slot)
+            if not self.active[slot]:
+                continue              # preempted as a victim this pass
+            need_idx = int(self.t[slot]) // self.w
+            if need_idx < len(self.slot_pages[slot]):
+                continue
+            while not self.alloc.can_alloc(1, reserved=True):
+                victim = self._pick_victim()
+                if victim is None:
+                    break
+                self._preempt(victim)
+                if victim == slot:
+                    break
+            if not self.active[slot]:
+                continue
+            page = self.alloc.alloc(1, reserved=True)[0]
+            self.slot_pages[slot].append(page)
+            self.page_table[slot, need_idx] = page
+            self._dirty = True
+
     # ---------------------------------------------------------------- step --
 
     def step(self) -> bool:
-        """One engine iteration: retire/admit, then one fused decode step.
-        Returns False when there is nothing left to do."""
+        """One engine iteration: retire/admit, advance at most one prefill
+        chunk, then one fused decode step for the active batch.  Returns
+        False when there is nothing left to do."""
         now = time.perf_counter()
         self._admit(now)
+        self._advance_prefill(now)
+        if self.ecfg.prefill_chunk:
+            self._ensure_append_pages()
         if not self.active.any():
-            return bool(self.waiting)
+            return bool(self.waiting or self.prefilling)
 
         if self._dirty:
             self._t_dev = jnp.asarray(self.t)
@@ -384,7 +792,8 @@ class ServingEngine:
         start = time.perf_counter()
         already_done = len(self.finished)
         idx = 0
-        while idx < len(pending) or self.waiting or self.active.any():
+        while (idx < len(pending) or self.waiting or self.prefilling
+               or self.active.any()):
             now = time.perf_counter() - start
             while idx < len(pending) and (
                     not realtime or pending[idx].arrival <= now):

@@ -1,0 +1,277 @@
+"""Chunked prefill + priority preemption (PR 2).
+
+Contract layers:
+  * core: `mita_chunk_prefill` over the paged pool — chunk-by-chunk — must
+    rebuild exactly the state `mita_prefill_state` builds monolithically
+    (landmarks, expert rows, open-window q_sum), resume an open window
+    across a non-aligned chunk boundary, and emit forward outputs equal to
+    the training-path attention;
+  * engine: chunked admission and recompute-from-prompt preemption must be
+    invisible in the output — greedy tokens identical to the static
+    baseline / the unpreempted run;
+  * scheduler: priority ordering, allocator reserve/high-water accounting.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mita as mref
+from repro.core import mita_decode as mdec
+from repro.launch.serve import static_generate
+from repro.models import transformer as tfm
+from repro.models.modules import AttnConfig, ModelConfig
+from repro.serve import EngineConfig, Request, ServingEngine
+from repro.serve.engine import _PageAllocator
+
+W, K = 8, 8
+
+
+def _cfg(external=False):
+    return ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+                       vocab=97,
+                       attn=AttnConfig(window=W, k=K, backend="mita_ref",
+                                       external_finalize=external))
+
+
+# ------------------------------------------------------------------- core --
+
+def test_chunk_prefill_state_matches_monolithic():
+    """Chunk-by-chunk prefill into shuffled pages == monolithic prefill:
+    forward outputs, landmarks, expert rows (rebased), and q_sum."""
+    Hkv, G, d, N, M = 2, 2, 16, 48, 8
+    cfg = mdec.DecodeConfig(window=W, k=K, s=1)
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, Hkv, G, N, d))
+    k, v = (jax.random.normal(kk, (1, Hkv, 1, N, d))
+            for kk in jax.random.split(key, 2))
+
+    pre = mdec.mita_prefill_state(q, k, v, cfg, capacity=M * W)
+    mcfg = mref.MiTAConfig(m=N // W, k=K, s=1, causal=True)
+    out_ref = mref.mita_attention(
+        q[0], k[0], v[0], mcfg,
+        q_landmarks=jnp.mean(q[0], axis=1, keepdims=True))
+
+    n_pages = M + 3
+    table = np.random.default_rng(0).permutation(n_pages)[:M]
+    pt = jnp.asarray(table, jnp.int32)
+    st = mdec.init_paged_state(Hkv, d, n_pages, 2, M, cfg, jnp.float32)
+    slot, chunk = 1, 16
+    step = jax.jit(mdec.mita_chunk_prefill, static_argnames="cfg")
+    outs = []
+    for t0 in range(0, N, chunk):
+        o, st = step(st, q[0, :, :, t0:t0 + chunk], k[0, :, 0, t0:t0 + chunk],
+                     v[0, :, 0, t0:t0 + chunk], pt, slot, t0, chunk, N, cfg)
+        outs.append(np.asarray(o))
+    np.testing.assert_allclose(np.concatenate(outs, axis=2),
+                               np.asarray(out_ref), atol=2e-5)
+
+    m = N // W
+    np.testing.assert_allclose(np.asarray(st.lm_q[slot][:, :m]),
+                               np.asarray(pre.lm_q[0][:, :m]), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st.lm_v[slot][:, :m]),
+                               np.asarray(pre.lm_v[0][:, :m]), atol=2e-5)
+    loc = np.asarray(pre.expert_idx[0][:, :m])
+    np.testing.assert_array_equal(np.asarray(st.expert_idx[slot][:, :m]),
+                                  table[loc // W] * W + loc % W)
+    np.testing.assert_array_equal(np.asarray(st.expert_valid[slot][:, :m]),
+                                  np.asarray(pre.expert_valid[0][:, :m]))
+    np.testing.assert_allclose(np.asarray(st.q_sum[slot]),
+                               np.asarray(pre.q_sum[0]), atol=2e-5)
+    # KV rows landed at page_table[c // w] * w + c % w
+    kpool = np.asarray(st.k_pool)
+    for c in range(0, N, 7):
+        np.testing.assert_allclose(kpool[table[c // W] * W + c % W],
+                                   np.asarray(k[0, :, 0, c]), atol=1e-6)
+
+
+def test_chunk_prefill_resumes_open_window():
+    """A chunk starting mid-window (non-aligned t0, the preemption-recompute
+    shape) resumes the packed q_sum and matches monolithic decode steps."""
+    Hkv, G, d, M = 2, 2, 16, 8
+    cfg = mdec.DecodeConfig(window=W, k=K, s=1)
+    n_pre, n_tot = 20, 36
+    q = jax.random.normal(jax.random.PRNGKey(7), (1, Hkv, G, n_tot, d))
+    k, v = (jax.random.normal(kk, (1, Hkv, 1, n_tot, d))
+            for kk in jax.random.split(jax.random.PRNGKey(8), 2))
+
+    cap_pre = mdec.window_aligned(n_pre, W)
+    pre = mdec.mita_prefill_state(q[:, :, :, :n_pre], k[:, :, :, :n_pre],
+                                  v[:, :, :, :n_pre], cfg, capacity=cap_pre)
+    ref = mdec.mita_prefill_state(q[:, :, :, :n_pre], k[:, :, :, :n_pre],
+                                  v[:, :, :, :n_pre], cfg, capacity=M * W)
+    step_m = jax.jit(lambda s, *a: mdec.mita_decode_step(s, *a, cfg))
+    for i in range(n_pre, n_tot):
+        _, ref = step_m(ref, q[:, :, :, i], k[:, :, 0, i], v[:, :, 0, i])
+
+    n_pages = M + 2
+    table = np.random.default_rng(1).permutation(n_pages)[:M]
+    pt = jnp.asarray(table, jnp.int32)
+    st = mdec.init_paged_state(Hkv, d, n_pages, 1, M, cfg, jnp.float32)
+    st = mdec.pack_prefill_into_pages(st, pre, 0, pt[: cap_pre // W], cfg)
+    _, st = jax.jit(mdec.mita_chunk_prefill, static_argnames="cfg")(
+        st, q[0, :, :, n_pre:], k[0, :, 0, n_pre:], v[0, :, 0, n_pre:],
+        pt, 0, n_pre, n_tot - n_pre, n_tot, cfg)
+
+    m = n_tot // W
+    np.testing.assert_allclose(np.asarray(st.lm_q[0][:, :m]),
+                               np.asarray(ref.lm_q[0][:, :m]), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st.lm_v[0][:, :m]),
+                               np.asarray(ref.lm_v[0][:, :m]), atol=2e-5)
+    loc = np.asarray(ref.expert_idx[0][:, :m])
+    np.testing.assert_array_equal(np.asarray(st.expert_idx[0][:, :m]),
+                                  table[loc // W] * W + loc % W)
+    np.testing.assert_allclose(np.asarray(st.q_sum[0]),
+                               np.asarray(ref.q_sum[0]), atol=2e-5)
+
+
+# ----------------------------------------------------------------- engine --
+
+def test_engine_chunked_matches_static_greedy():
+    """Chunked admission (prompt spans several chunks) emits the same greedy
+    tokens as the monolithic static baseline, per request."""
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    B, N, gen = 4, 48, 10
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (B, N), 0, cfg.vocab)
+    pages = (N + gen + W - 1) // W
+    ref, _ = static_generate(params, _cfg(external=True), prompts, gen,
+                             capacity=pages * W)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        n_slots=3, pages_per_slot=pages, n_pages=3 * pages + 2,
+        prefill_chunk=2 * W))
+    done = eng.run([Request(rid=i, prompt=np.asarray(prompts[i]),
+                            max_new_tokens=gen) for i in range(B)])
+    assert len(done) == B
+    assert eng.stats()["chunks"] >= B * (N // (2 * W))
+    for i, f in enumerate(done):
+        np.testing.assert_array_equal(f.tokens, ref[i], err_msg=f"req {i}")
+
+
+def test_engine_chunked_nonaligned_prompt_fallback():
+    """Non-window-aligned prompts take the monolithic head inside the
+    chunked engine and still match the static baseline."""
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    N, gen = 20, 9
+    prompts = jax.random.randint(jax.random.PRNGKey(9), (2, N), 0, cfg.vocab)
+    pages = (N + gen + W - 1) // W
+    ref, _ = static_generate(params, _cfg(external=True), prompts, gen,
+                             capacity=pages * W)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        n_slots=2, pages_per_slot=pages, n_pages=2 * pages + 2,
+        prefill_chunk=2 * W))
+    done = eng.run([Request(rid=i, prompt=np.asarray(prompts[i]),
+                            max_new_tokens=gen) for i in range(2)])
+    for i, f in enumerate(done):
+        np.testing.assert_array_equal(f.tokens, ref[i], err_msg=f"req {i}")
+
+
+def test_preemption_round_trip_identical_tokens():
+    """A low-priority request evicted mid-decode by high-priority arrivals
+    (pages released, later rebuilt by recompute-from-prompt) emits exactly
+    the tokens of the same request run unpreempted, and page-accounting
+    invariants hold through eviction and re-admission."""
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    N, gen = 16, 24
+    victim = np.asarray(jax.random.randint(jax.random.PRNGKey(3), (N,),
+                                           0, cfg.vocab))
+    ecfg = EngineConfig(n_slots=2, pages_per_slot=6, n_pages=8,
+                        prefill_chunk=2 * W)
+    ref = ServingEngine(params, cfg, ecfg).run(
+        [Request(rid=0, prompt=victim, max_new_tokens=gen)])[0].tokens
+
+    eng = ServingEngine(params, cfg, ecfg)
+    eng.submit(Request(rid=0, prompt=victim, max_new_tokens=gen, priority=0))
+    for _ in range(6):                   # prefill + decode a few tokens
+        eng.step()
+    hp = jax.random.randint(jax.random.PRNGKey(5), (2, 16), 0, cfg.vocab)
+    eng.submit(Request(rid=1, prompt=np.asarray(hp[0]), max_new_tokens=24,
+                       priority=5))
+    eng.submit(Request(rid=2, prompt=np.asarray(hp[1]), max_new_tokens=24,
+                       priority=5))
+    while eng.step():
+        owned = [p for pages in eng.slot_pages.values() for p in pages]
+        assert len(owned) == len(set(owned)), "page double-booked"
+        assert not set(owned) & set(eng.alloc.free), "owned page in free list"
+        assert len(owned) + len(eng.alloc.free) == ecfg.n_pages, "page leaked"
+    done = sorted(eng.finished, key=lambda f: f.rid)
+    assert len(done) == 3
+    assert eng.n_preemptions >= 1, "scenario no longer triggers preemption"
+    assert done[0].preemptions >= 1
+    np.testing.assert_array_equal(done[0].tokens, ref)
+
+
+def test_equal_priority_jobs_never_livelock():
+    """Two equal-priority long prompts whose chunked prefills together
+    exceed the pool: pages must flow to the senior job (FCFS within a
+    priority class) instead of both jobs stalling forever, and both
+    requests must finish with the right token counts."""
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    N = 8 * W
+    prompts = jax.random.randint(jax.random.PRNGKey(13), (2, N), 0,
+                                 cfg.vocab)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        n_slots=2, pages_per_slot=9, n_pages=9, prefill_chunk=2 * W))
+    for i in range(2):
+        eng.submit(Request(rid=i, prompt=np.asarray(prompts[i]),
+                           max_new_tokens=1))
+    for _ in range(400):
+        if not eng.step():
+            break
+    else:
+        raise AssertionError("engine livelocked: no progress in 400 steps")
+    done = sorted(eng.finished, key=lambda f: f.rid)
+    assert [f.rid for f in done] == [0, 1]
+    assert all(len(f.tokens) == 1 for f in done)
+
+
+def test_priority_orders_admission():
+    """With one free slot, a later-submitted higher-priority request is
+    admitted first; FCFS order holds within a priority class."""
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        n_slots=1, pages_per_slot=3, n_pages=3, prefill_chunk=W))
+    pr = jax.random.randint(jax.random.PRNGKey(11), (3, W), 0, cfg.vocab)
+    eng.submit(Request(rid=0, prompt=np.asarray(pr[0]), max_new_tokens=4,
+                       priority=0))
+    eng.submit(Request(rid=1, prompt=np.asarray(pr[1]), max_new_tokens=4,
+                       priority=3))
+    eng.submit(Request(rid=2, prompt=np.asarray(pr[2]), max_new_tokens=4,
+                       priority=3))
+    while eng.step():
+        pass
+    order = [f.rid for f in sorted(eng.finished, key=lambda f: f.finished)]
+    assert order == [1, 2, 0]
+
+
+def test_allocator_reserve_and_high_water():
+    """Ordinary allocations cannot dip into the reserve; reserved (append)
+    allocations can, and both dips and the high-water mark are counted."""
+    al = _PageAllocator(8, reserve=2)
+    assert al.can_alloc(6) and not al.can_alloc(7)
+    got = al.alloc(6)
+    assert len(got) == 6 and al.high_water == 6
+    with pytest.raises(RuntimeError, match="exhausted"):
+        al.alloc(1)
+    assert al.can_alloc(2, reserved=True)
+    al.alloc(1, reserved=True)
+    assert al.reserve_dips == 1 and al.high_water == 7
+    al.release(got)
+    assert al.in_use == 1
+
+
+def test_engine_rejects_bad_chunk_and_reserve():
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="multiple of"):
+        ServingEngine(params, cfg, EngineConfig(prefill_chunk=W + 1))
+    with pytest.raises(ValueError, match="multiple of"):
+        ServingEngine(params, cfg, EngineConfig(prefill_chunk=-W))
+    with pytest.raises(ValueError, match="deadlock"):
+        ServingEngine(params, cfg, EngineConfig(
+            n_slots=2, pages_per_slot=8, n_pages=9, reserve_pages=4))
