@@ -1,0 +1,186 @@
+"""Decode-step microbenchmark: fused kernel + on-device sampling vs the
+PR-2 XLA-gather / host-sampling path.
+
+Three measurements, emitted as CSV rows (`benchmarks.common.emit`) and as
+``BENCH_decode.json``:
+
+  * ``decode_engine_{host,fused}`` — the continuous-batching engine on a
+    Poisson mixed-length trace, sampling on the host (downloads the whole
+    [S, V] logits every step) vs inside the fused program (downloads [S]
+    int32 tokens).  Reports tok/s, per-step latency, and the per-step
+    host<->device transfer in bytes; the gate row checks greedy tokens are
+    bit-identical between the two engines.
+  * ``decode_step_{xla,kernel}`` — one jitted `mita_paged_decode_step`
+    with ``paged_impl`` "xla" vs "kernel".  Off-TPU the kernel runs in
+    interpret mode, so its absolute time is NOT meaningful there — the
+    row exists so the TPU lane has a like-for-like comparison and the CPU
+    CI lane exercises the kernel's compile + numerics end to end.
+
+Run:  PYTHONPATH=src python -m benchmarks.run decode
+      PYTHONPATH=src python -m benchmarks.decode_bench --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, tiny_lm_cfg
+from repro.core import mita_decode as mdec
+from repro.core.mita_decode import window_aligned
+from repro.kernels import ops
+from repro.models import transformer as tfm
+from repro.serve import EngineConfig, Request, ServingEngine
+
+
+def _trace(vocab: int, window: int, n_req: int, seed: int = 0):
+    """Decode-heavy Poisson trace (same length mix as
+    serve_bench.serve_poisson), half greedy and half temperature-sampled —
+    the production mix: tempered requests are what makes host sampling a
+    per-slot Python (fold_in + categorical) dispatch in the hot loop."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(0.03, size=n_req))
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, size=int(
+                        rng.choice([window, 2 * window]))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(window, 4 * window + 1)),
+                    temperature=0.8 if i % 2 else 0.0,
+                    arrival=float(arrivals[i]))
+            for i in range(n_req)]
+
+
+def _engine_compare(vocab: int, n_req: int, n_slots: int,
+                    repeats: int = 3) -> dict:
+    cfg = tiny_lm_cfg("mita_ref", m=8, k=16, layers=2, d=64, vocab=vocab,
+                      seq=256)
+    w = cfg.attn.window
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    reqs = _trace(cfg.vocab, w, n_req)
+    pages = window_aligned(2 * w + 4 * w, w) // w
+    base = EngineConfig(n_slots=n_slots, pages_per_slot=pages,
+                        n_pages=2 * n_slots * pages)
+    total_tokens = sum(r.max_new_tokens for r in reqs)
+    prompt_lens = sorted({len(r.prompt) for r in reqs})
+
+    out: dict = {"vocab": vocab, "n_slots": n_slots, "n_req": n_req,
+                 "total_tokens": total_tokens}
+    tokens = {}
+    for name, ecfg in (("host", base),
+                       ("fused", dataclasses.replace(
+                           base, sample_device="fused"))):
+        ServingEngine(params, cfg, ecfg).warmup(prompt_lens)
+        # best-of-N full-trace runs: CPU smoke boxes are noisy and the
+        # two paths differ by well under the load-induced variance there
+        dt, steps = np.inf, None
+        for _ in range(repeats):
+            eng = ServingEngine(params, cfg, ecfg)
+            t0 = time.perf_counter()
+            done = eng.run(reqs)
+            dt_i = time.perf_counter() - t0
+            if dt_i < dt:
+                dt, steps = dt_i, np.asarray(eng.step_times)
+        tokens[name] = {f.rid: f.tokens for f in done}
+        # per-step host<->device traffic of the hot loop: tokens up, and
+        # logits ([S, V] f32) or sampled tokens ([S] i32) down
+        down = n_slots * (vocab * 4 if name == "host" else 4)
+        out[name] = {
+            "tok_s": total_tokens / dt,
+            "step_ms_p50": float(np.percentile(steps, 50) * 1e3),
+            "step_ms_p99": float(np.percentile(steps, 99) * 1e3),
+            "steps": int(eng.steps),
+            "bytes_down_per_step": down,
+            "bytes_up_per_step": n_slots * 4,
+        }
+        emit(f"decode_engine_{name}", dt * 1e6 / total_tokens,
+             f"{out[name]['tok_s']:.1f} tok/s | step p50 "
+             f"{out[name]['step_ms_p50']:.2f}ms | "
+             f"down {down}B/step (S={n_slots}, V={vocab})")
+
+    # bit-parity for EVERY request: greedy, and tempered too (the fused
+    # sampler derives the same (rid, index) threefry keys as the host)
+    match = all(np.array_equal(tokens["host"][r.rid], tokens["fused"][r.rid])
+                for r in reqs)
+    out["speedup"] = out["fused"]["tok_s"] / out["host"]["tok_s"]
+    out["greedy_match"] = bool(match)
+    out["transfer_reduction"] = (out["host"]["bytes_down_per_step"]
+                                 / out["fused"]["bytes_down_per_step"])
+    emit("decode_engine_gates", 0.0,
+         f"greedy_match={match} speedup={out['speedup']:.2f}x "
+         f"transfer_down {out['host']['bytes_down_per_step']}B -> "
+         f"{out['fused']['bytes_down_per_step']}B/step "
+         f"({out['transfer_reduction']:.0f}x)")
+    if not match:
+        raise SystemExit("greedy parity violated between host and fused "
+                         "sampling engines")
+    return out
+
+
+def _kernel_step_compare(n_steps: int) -> dict:
+    """One fused decode step, XLA gather path vs the Pallas kernel."""
+    w, k = 8, 8
+    b, hkv, g, d, m = 4, 2, 2, 32, 4
+    cfg_x = mdec.DecodeConfig(window=w, k=k, s=1, external_finalize=True,
+                              paged_impl="xla")
+    cfg_k = dataclasses.replace(cfg_x, paged_impl="kernel")
+    key = jax.random.PRNGKey(0)
+    qi = jax.random.normal(key, (b, hkv, g, d))
+    ki, vi = (jax.random.normal(kk, (b, hkv, d))
+              for kk in jax.random.split(key, 2))
+    pt = jnp.asarray(np.arange(b * m).reshape(b, m), jnp.int32)
+    t = jnp.full((b,), w + 1, jnp.int32)
+    ac = jnp.ones((b,), bool)
+    res = {"interpret": not ops.on_tpu()}
+    for name, cfg in (("xla", cfg_x), ("kernel", cfg_k)):
+        st = mdec.init_paged_state(hkv, d, b * m, b, m, cfg, jnp.float32)
+        step = jax.jit(lambda s, *a: mdec.mita_paged_decode_step(s, *a, cfg))
+        o, st = step(st, qi, ki, vi, pt, t, ac)       # compile
+        jax.block_until_ready(o)
+        t0 = time.perf_counter()
+        for _ in range(n_steps):
+            o, st = step(st, qi, ki, vi, pt, t, ac)
+        jax.block_until_ready(o)
+        us = (time.perf_counter() - t0) / n_steps * 1e6
+        res[f"{name}_us"] = us
+        note = " (interpret — not meaningful off-TPU)" \
+            if name == "kernel" and res["interpret"] else ""
+        emit(f"decode_step_{name}", us, f"S={b} Hkv={hkv} G={g} d={d}{note}")
+    return res
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for the CI interpret-mode lane")
+    ap.add_argument("--out", default="BENCH_decode.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        vocab, n_req, n_slots, n_steps, reps = 1024, 8, 4, 3, 2
+    else:
+        vocab, n_req, n_slots, n_steps, reps = 32768, 32, 8, 20, 3
+
+    print("name,us_per_call,derived")
+    result = {
+        "engine": _engine_compare(vocab, n_req, n_slots, repeats=reps),
+        "kernel_step": _kernel_step_compare(n_steps),
+        "backend": jax.default_backend(),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}")
+    return result
+
+
+def decode_bench() -> None:
+    """benchmarks.run entry point (full shapes, default output path)."""
+    main([])
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,7 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [tab2 tab5 ...]
 
 import sys
 
-from benchmarks import serve_bench, tables
+from benchmarks import decode_bench, serve_bench, tables
 
 
 ALL = [
@@ -18,6 +18,7 @@ ALL = [
     ("fig5", tables.fig5_inference_throughput),
     ("serve", serve_bench.serve_poisson),
     ("serve_interference", serve_bench.serve_interference),
+    ("decode", decode_bench.decode_bench),
 ]
 
 

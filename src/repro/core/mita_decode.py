@@ -70,6 +70,14 @@ class DecodeConfig:
     # vs inline: the last token of each window routes among j instead of
     # j+1 experts (1/w of tokens, one-expert-stale routing).
     external_finalize: bool = False
+    # Paged decode-step backend: "auto" (fused Pallas kernel on TPU when
+    # its working set fits the VMEM budget; XLA gather path elsewhere),
+    # "kernel" (force the kernel — interpret mode off-TPU — still bounded
+    # by the budget), or "xla" (force the oracle).
+    paged_impl: str = "auto"
+    # VMEM working-set budget for kernel dispatch; 0 = use the env/default
+    # budget (`kernels.ops.vmem_budget_bytes`).
+    vmem_budget: int = 0
 
 
 def window_aligned(n: int, window: int) -> int:
@@ -372,8 +380,11 @@ def _paged_finalize(state: PagedMiTAState, page_table: jax.Array,
     d = state.k_pool.shape[-1]
     ctx = m_max * w
 
-    k_ctx = gather_pages(state.k_pool, page_table, w)   # [S, C, Hkv, d]
-    v_ctx = gather_pages(state.v_pool, page_table, w)
+    # gather only pages covering positions < t_new; unowned table entries
+    # redirect to the scratch row (they are masked below either way)
+    owned = (t_new + w - 1) // w
+    k_ctx = gather_pages(state.k_pool, page_table, w, owned=owned)
+    v_ctx = gather_pages(state.v_pool, page_table, w, owned=owned)
     q_lm = (state.q_sum / w).astype(state.k_pool.dtype)  # [S, Hkv, d]
 
     scores = jnp.einsum("schd,shd->shc", k_ctx, q_lm) / math.sqrt(d)
@@ -438,25 +449,41 @@ def mita_paged_decode_step(state: PagedMiTAState, q: jax.Array,
     ``page_table[s, t[s] // w]`` exists for every active slot (the engine
     allocates the next page BEFORE the step that appends into it), and
     pages of distinct slots are disjoint, so the per-slot 1-row scatter
-    can never race another slot's rows."""
-    from repro.kernels.ops import (gather_pages, gather_pool_rows,
-                                   scatter_pool_rows)
+    can never race another slot's rows.
+
+    Backend dispatch (``cfg.paged_impl``, `kernels.ops.use_paged_kernel`):
+    the fused Pallas kernel (`kernels.mita_paged_attn`) replaces the
+    append + gather-then-attend below when it fits the VMEM budget; the
+    XLA path here stays as the fallback and the parity oracle.  Inline
+    finalize needs the appended row in the pool before scoring, so in
+    that mode the append/finalize run in XLA and the kernel only attends."""
+    from repro.kernels import ops
 
     n_slots, hkv, g, d = q.shape
     w = cfg.window
     m_max = state.lm_q.shape[-2]
     scratch = state.k_pool.shape[0] - 1
+    s_ = min(cfg.s, m_max)
+
+    use_kernel = ops.use_paged_kernel(
+        cfg.paged_impl, window=w, m=m_max, k_width=cfg.k, g=g, d=d,
+        itemsize=state.k_pool.dtype.itemsize, budget=cfg.vmem_budget)
 
     # 1. append to the slot's current page, accumulate window query sum
+    # (the kernel fuses the append when it also owns the attend)
     cur_page = jnp.take_along_axis(page_table, (t // w)[:, None], axis=1)[:, 0]
     rows_new = jnp.where(active, cur_page * w + t % w, scratch)
     state = state._replace(
-        k_pool=scatter_pool_rows(state.k_pool, rows_new, k_new),
-        v_pool=scatter_pool_rows(state.v_pool, rows_new, v_new),
         q_sum=state.q_sum + jnp.where(
             active[:, None, None], jnp.mean(q, axis=2).astype(jnp.float32), 0.0),
     )
     t_new = t + 1
+    fuse_append = use_kernel and cfg.external_finalize
+    if not fuse_append:
+        state = state._replace(
+            k_pool=ops.scatter_pool_rows(state.k_pool, rows_new, k_new),
+            v_pool=ops.scatter_pool_rows(state.v_pool, rows_new, v_new),
+        )
 
     # 2. finalize slots whose window just completed (masked, all-slot
     # compute).  External mode defers this to `mita_paged_finalize`, called
@@ -469,14 +496,22 @@ def mita_paged_decode_step(state: PagedMiTAState, q: jax.Array,
     else:
         m_cnt = t // w
 
+    if use_kernel:
+        out, kp, vp = ops.paged_decode_attend(
+            q, k_new, v_new, state.lm_q, state.lm_v, state.expert_idx,
+            state.expert_valid, state.k_pool, state.v_pool, page_table, t,
+            active, m_cnt, window=w, n_route=s_, fuse_append=fuse_append)
+        return out, state._replace(k_pool=kp, v_pool=vp)
+
     # 3. attend: shared + routed + local window (same branch math as
     # `mita_decode_step`, with every cache access routed through the pool)
+    gather_pages = ops.gather_pages
+    gather_pool_rows = ops.gather_pool_rows
     lm_mask = jnp.arange(m_max)[None, None, None, :] < m_cnt[:, None, None, None]
     r = jnp.einsum("shgd,shmd->shgm", q, state.lm_q) / math.sqrt(d)
     r = jnp.where(lm_mask, r.astype(jnp.float32), NEG_INF)
     parts: list[Partial] = [partial_from_scores(r, state.lm_v)]
 
-    s_ = min(cfg.s, m_max)
     _, e_idx = jax.lax.top_k(r, s_)                     # [S, Hkv, G, s]
     e_ok = jnp.take_along_axis(r, e_idx, axis=-1) > NEG_INF / 2
     flat_e = e_idx.reshape(n_slots, hkv, g * s_)
@@ -631,9 +666,13 @@ def mita_chunk_prefill(state: PagedMiTAState, q: jax.Array, k: jax.Array,
     vp = state.v_pool.at[dst].set(
         jnp.swapaxes(v, 0, 1).astype(state.v_pool.dtype))
 
-    # gathered slot context in token order: [ctx, Hkv, d]
-    k_ctx = gather_pages(kp, page_table[None], w)[0]
-    v_ctx = gather_pages(vp, page_table[None], w)[0]
+    # gathered slot context in token order: [ctx, Hkv, d] — only pages
+    # covering positions < t0 + n_valid are real; later table entries
+    # redirect to the scratch row (all reads past the valid prefix are
+    # masked below, so this only avoids gathering unowned pages)
+    owned = ((t0 + n_valid + w - 1) // w)[None]
+    k_ctx = gather_pages(kp, page_table[None], w, owned=owned)[0]
+    v_ctx = gather_pages(vp, page_table[None], w, owned=owned)[0]
 
     # 2. finalize every window the chunk completes (windows [m0, m_new)),
     # resuming the open window's query sum from the previous chunk

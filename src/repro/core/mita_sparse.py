@@ -73,10 +73,8 @@ def _routed_sorted(q, k_e, v_e, valid, r, cfg: MiTAConfig,
     q_sorted = jnp.take_along_axis(sub_q, order[..., None], axis=-2)
     a_sorted = jnp.take_along_axis(a_sortkey, order, axis=-1)
 
-    if ns % block_q:
-        raise ValueError(f"N*s={ns} not divisible by block_q={block_q}")
-
     if expert_span == 0:   # Pallas kernel path: dynamic expert walk
+        # (no NS % block_q constraint — the kernel wrapper pads internally)
         from repro.kernels.ops import routed_expert_partial
         o_s, m_s, l_s = routed_expert_partial(
             q_sorted, jnp.broadcast_to(a_sorted, lead + (ns,)),
@@ -86,6 +84,10 @@ def _routed_sorted(q, k_e, v_e, valid, r, cfg: MiTAConfig,
         ll = jnp.take_along_axis(l_s, inv, axis=-1)
         return _merge_subqueries(o, mm, ll, lead, n, s, q.dtype)
 
+    if ns % block_q:
+        raise ValueError(f"N*s={ns} not divisible by block_q={block_q} "
+                         "(the static-span path needs whole blocks; "
+                         "impl='pallas' pads internally)")
     nb = ns // block_q
     qb = q_sorted.reshape(lead + (nb, block_q, d))
     ab = a_sorted.reshape(rlead + (nb, block_q))

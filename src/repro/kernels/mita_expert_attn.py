@@ -86,12 +86,22 @@ def mita_expert_attention(q_sorted: jax.Array, assign: jax.Array,
     assign:   [B, H, NS] int32 expert per sub-query (>= m means inactive)
     k_e/v_e:  [B, H, M, K, d]; valid: [B, H, M, K]
     Returns (o, m_stat, l): [B,H,NS,d], [B,H,NS], [B,H,NS].
+
+    NS need not divide ``block_q``: the sorted sub-queries are padded to
+    the next block boundary with the inactive assignment id ``m`` (sort
+    order is preserved — padding sorts after every real sub-query), which
+    the routing mask turns into empty partials; outputs are sliced back.
     """
     b, h, ns, d = q_sorted.shape
     m, kw = k_e.shape[-3], k_e.shape[-2]
     block_q = min(block_q, ns)
-    if ns % block_q:
-        raise ValueError("NS must divide by block_q")
+    ns_pad = ((ns + block_q - 1) // block_q) * block_q
+    if ns_pad != ns:
+        pad = ((0, 0), (0, 0), (0, ns_pad - ns))
+        q_sorted = jnp.pad(q_sorted, pad + ((0, 0),))
+        assign = jnp.pad(assign, pad, constant_values=m)
+    nso = ns
+    ns = ns_pad
 
     qf = q_sorted.reshape(b * h, ns, d)
     af = assign.reshape(b * h, ns).astype(jnp.int32)
@@ -125,5 +135,6 @@ def mita_expert_attention(q_sorted: jax.Array, assign: jax.Array,
         ],
         interpret=interpret,
     )(af, qf, kef, vef, bias)
-    return (o.reshape(b, h, ns, d), m_stat.reshape(b, h, ns),
-            l.reshape(b, h, ns))
+    return (o.reshape(b, h, ns, d)[:, :, :nso],
+            m_stat.reshape(b, h, ns)[:, :, :nso],
+            l.reshape(b, h, ns)[:, :, :nso])

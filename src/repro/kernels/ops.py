@@ -4,11 +4,26 @@
 `repro.core.mita_sparse` when ``impl="pallas"``: it takes the sorted
 sub-queries + expert bank and returns online-softmax partials compatible
 with `repro.core.combine.Partial`.
+
+`paged_decode_attend` is the integration point used by
+`repro.core.mita_decode.mita_paged_decode_step`: the fused paged-decode
+kernel (`kernels.mita_paged_attn`) walks page tables in VMEM and gathers
+routed-expert rows by global row id; the XLA gather path in
+`core.mita_decode` stays as the oracle and the fallback whenever
+`use_paged_kernel` says no.
+
+Tunables (satellite of the module constants they replace):
+  * ``REPRO_VMEM_BUDGET_BYTES`` — per-kernel VMEM working-set budget used
+    by every fits/dispatch decision (default 8 MiB).  `DecodeConfig
+    .vmem_budget` overrides it per decode config.
+  * ``REPRO_BLOCK_Q`` / ``REPRO_BLOCK_K`` — default kernel block sizes for
+    the flash / expert kernels when the caller passes none.
 """
 
 from __future__ import annotations
 
 import math
+import os
 from typing import Optional
 
 import jax
@@ -16,8 +31,25 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attn as _fa
 from repro.kernels import mita_expert_attn as _mea
+from repro.kernels import mita_paged_attn as _mpa
 
-VMEM_BUDGET_BYTES = 8 * 2**20   # expert bank budget for the resident kernel
+DEFAULT_VMEM_BUDGET_BYTES = 8 * 2**20   # expert-bank / paged working set
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def vmem_budget_bytes() -> int:
+    """Effective VMEM working-set budget: env override or the default."""
+    return int(os.environ.get("REPRO_VMEM_BUDGET_BYTES",
+                              DEFAULT_VMEM_BUDGET_BYTES))
+
+
+def default_block_q() -> int:
+    return int(os.environ.get("REPRO_BLOCK_Q", DEFAULT_BLOCK_Q))
+
+
+def default_block_k() -> int:
+    return int(os.environ.get("REPRO_BLOCK_K", DEFAULT_BLOCK_K))
 
 
 def on_tpu() -> bool:
@@ -25,17 +57,21 @@ def on_tpu() -> bool:
 
 
 def flash_attention(q, k, v, causal: bool = False,
-                    block_q: int = 128, block_k: int = 128,
+                    block_q: Optional[int] = None,
+                    block_k: Optional[int] = None,
                     interpret: Optional[bool] = None):
     """[B,H,N,d] flash attention; interpret mode on CPU."""
     if interpret is None:
         interpret = not on_tpu()
-    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
-                               block_k=block_k, interpret=interpret)
+    return _fa.flash_attention(q, k, v, causal=causal,
+                               block_q=block_q or default_block_q(),
+                               block_k=block_k or default_block_k(),
+                               interpret=interpret)
 
 
-def expert_bank_fits(m: int, k: int, d: int, bytes_per_el: int = 2) -> bool:
-    return 2 * m * k * d * bytes_per_el <= VMEM_BUDGET_BYTES
+def expert_bank_fits(m: int, k: int, d: int, bytes_per_el: int = 2,
+                     budget: int = 0) -> bool:
+    return 2 * m * k * d * bytes_per_el <= (budget or vmem_budget_bytes())
 
 
 # -------------------------------------------------- paged-cache indirection --
@@ -44,8 +80,9 @@ def expert_bank_fits(m: int, k: int, d: int, bytes_per_el: int = 2) -> bool:
 # requests; a request owns a set of fixed-size, window-aligned pages named by
 # a page table.  Every decode-time gather then goes through row indirection
 # instead of slicing a per-request [B, Hkv, C, d] cache.  These wrappers are
-# the dispatch point: XLA gathers everywhere today; a TPU Pallas paged-gather
-# kernel (vLLM-style) slots in here without touching `core.mita_decode`.
+# the dispatch point: the fused Pallas kernel (`paged_decode_attend`) covers
+# the decode hot path; the XLA gathers remain for the finalize / chunk-
+# prefill paths and as the decode fallback/oracle.
 
 def gather_pool_rows(pool: jax.Array, rows: jax.Array) -> jax.Array:
     """Gather per-(slot, kv-head) rows from a shared KV pool.
@@ -59,13 +96,27 @@ def gather_pool_rows(pool: jax.Array, rows: jax.Array) -> jax.Array:
 
 
 def gather_pages(pool: jax.Array, page_ids: jax.Array,
-                 page_size: int) -> jax.Array:
+                 page_size: int,
+                 owned: Optional[jax.Array] = None) -> jax.Array:
     """Gather whole pages in page-table order (sequential token order).
 
     pool: [R, Hkv, d]; page_ids: [S, P] int32.
     Returns [S, P * page_size, Hkv, d].
+
+    ``owned`` (optional [S] int32): pages each slot actually owns
+    (``ceil(t / page_size)``).  Table entries at ordinal >= owned are
+    redirected to the pool's trailing scratch row instead of gathering
+    whatever page the unused table entry happens to name — unused entries
+    are in-bounds but unowned (scheduler invariant 4), so without the
+    redirect a short request copies other requests' pages only to mask
+    them downstream.
     """
     rows = page_ids[..., None] * page_size + jnp.arange(page_size)
+    if owned is not None:
+        scratch = pool.shape[0] - 1
+        is_owned = (jnp.arange(page_ids.shape[-1])[None, :, None]
+                    < owned[:, None, None])
+        rows = jnp.where(is_owned, rows, scratch)
     return pool[rows.reshape(rows.shape[:-2] + (-1,))]
 
 
@@ -79,18 +130,78 @@ def scatter_pool_rows(pool: jax.Array, rows: jax.Array,
     return pool.at[rows].set(new.astype(pool.dtype))
 
 
+# ------------------------------------------------- fused paged-decode attn --
+
+def paged_attention_vmem_bytes(window: int, m: int, k_width: int, g: int,
+                               d: int, itemsize: int = 4) -> int:
+    """Per-program VMEM working set of the fused paged-decode kernel:
+    q + out, the landmark tiles, the local page, one expert KV tile, and
+    the expert index/bias tables (`kernels.mita_paged_attn` docstring)."""
+    tiles = (2 * g * d          # q + out
+             + 2 * m * d        # lm_q + lm_v
+             + 2 * window * d   # local page (k, v)
+             + 2 * k_width * d)  # expert KV tile scratch
+    tables = m * k_width * (4 + 4)   # expert_idx (i32) + bias (f32)
+    return tiles * itemsize + tables
+
+
+def use_paged_kernel(impl: str, *, window: int, m: int, k_width: int,
+                     g: int, d: int, itemsize: int = 4,
+                     budget: int = 0) -> bool:
+    """Decode-step dispatch: fused Pallas kernel vs the XLA gather oracle.
+
+    ``impl``: "auto" (kernel on TPU when the working set fits the VMEM
+    budget), "kernel" (force, still bounded by the budget so an oversized
+    config degrades to the fallback instead of failing to lower), or "xla".
+    ``budget`` = 0 uses `vmem_budget_bytes()` (env-overridable).
+    """
+    if impl == "xla":
+        return False
+    if impl not in ("auto", "kernel"):
+        raise ValueError(f"unknown paged impl {impl!r}")
+    fits = paged_attention_vmem_bytes(window, m, k_width, g, d,
+                                      itemsize) <= (budget
+                                                    or vmem_budget_bytes())
+    if impl == "kernel":
+        return fits
+    return on_tpu() and fits
+
+
+def paged_decode_attend(q, k_new, v_new, lm_q, lm_v, expert_idx,
+                        expert_valid, k_pool, v_pool, page_table, t, active,
+                        m_cnt, *, window: int, n_route: int,
+                        fuse_append: bool,
+                        interpret: Optional[bool] = None):
+    """Kernel-backed fused decode step: append + three-branch attend.
+
+    See `kernels.mita_paged_attn.mita_paged_attention` for the contract.
+    Returns (out [S, Hkv, G, d], k_pool, v_pool) with the pools aliased
+    in/out (new row written in place when ``fuse_append``).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    return _mpa.mita_paged_attention(
+        q, k_new, v_new, lm_q, lm_v, expert_idx, expert_valid,
+        k_pool, v_pool, page_table, t, active, m_cnt,
+        window=window, n_route=n_route, fuse_append=fuse_append,
+        interpret=interpret)
+
+
 def routed_expert_partial(q_sorted, assign, k_e, v_e, valid,
-                          block_q: int = 128,
+                          block_q: Optional[int] = None,
                           interpret: Optional[bool] = None):
     """Kernel-backed routed-expert partials with arbitrary lead dims.
 
     q_sorted: [..., NS, d]; assign: [..., NS];
     k_e/v_e: [kv_lead..., M, K, d] (lead may contain broadcast-1 dims);
     valid: [kv_lead..., M, K].
-    Returns (o, m_stat, l) with q_sorted's lead dims.
+    Returns (o, m_stat, l) with q_sorted's lead dims.  NS need not divide
+    the block size — `mita_expert_attention` pads internally.
     """
     if interpret is None:
         interpret = not on_tpu()
+    if block_q is None:
+        block_q = default_block_q()
     lead = q_sorted.shape[:-2]
     ns, d = q_sorted.shape[-2:]
     m, kw = k_e.shape[-3], k_e.shape[-2]

@@ -12,13 +12,16 @@ Two paths over the same model/step functions:
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --batch 4 --prompt-len 128 --gen 32 [--engine continuous] \
-      [--prefill-chunk 256] [--priority 0] [--reserve-pages 2]
+      [--prefill-chunk 256] [--priority 0] [--reserve-pages 2] \
+      [--sample-device fused]
 
 ``--prefill-chunk N`` (continuous engine) admits prompts in N-token chunks
 interleaved with the decode batch and enables priority preemption;
 ``--priority`` tags the generated requests' priority class and
 ``--reserve-pages`` keeps pages back for decode-time appends
-(docs/serving.md explains all three).
+(docs/serving.md explains all three).  ``--sample-device fused`` moves
+sampling into the fused decode program so the hot loop downloads [S]
+int32 tokens instead of [S, V] logits.
 """
 
 from __future__ import annotations
@@ -121,6 +124,11 @@ def main(argv=None):
                          "requests (higher wins admission/preemption)")
     ap.add_argument("--reserve-pages", type=int, default=0,
                     help="continuous: pages reserved for decode appends")
+    ap.add_argument("--sample-device", choices=("host", "fused"),
+                    default="host",
+                    help="continuous: sample on the host from downloaded "
+                         "[S, V] logits, or inside the fused decode "
+                         "program (downloads [S] int32 tokens per step)")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch, smoke=args.smoke)
@@ -153,7 +161,8 @@ def main(argv=None):
             n_slots=args.batch, pages_per_slot=pages,
             n_pages=2 * args.batch * pages,
             prefill_chunk=args.prefill_chunk,
-            reserve_pages=args.reserve_pages))
+            reserve_pages=args.reserve_pages,
+            sample_device=args.sample_device))
         reqs = [Request(rid=i, prompt=prompts[i % len(prompts)],
                         max_new_tokens=args.gen,
                         temperature=args.temperature,

@@ -37,7 +37,7 @@ class AttnConfig:
     s: int = 1                # routed experts per query
     causal: bool = True
     impl: str = "sorted"      # sorted | capacity   (mita_sparse strategy)
-    block_q: int = 128
+    block_q: int = 128        # 0 = kernels.ops.default_block_q (REPRO_BLOCK_Q)
     expert_span: int = 4
     capacity_factor: float = 1.25
     landmark: str = "pool1d"          # landmark extractor (Tab. 6 ablation)
@@ -206,7 +206,10 @@ def attention_apply(params: Params, x: jax.Array, cfg: ModelConfig,
         else:
             # block_q ~ expected tokens-per-expert so a sorted block spans
             # ~2 experts on average; span-4 then drops almost nothing.
-            bq = min(a.block_q, a.window * mcfg.s, n * mcfg.s)
+            # block_q = 0 defers to the REPRO_BLOCK_Q env default.
+            from repro.kernels.ops import default_block_q
+            bq = min(a.block_q or default_block_q(),
+                     a.window * mcfg.s, n * mcfg.s)
             o = mita_attention_sparse(
                 q, k, v, mcfg, impl=a.impl, block_q=bq,
                 expert_span=min(a.expert_span, mcfg.m),

@@ -250,17 +250,72 @@ def block_decode_paged(params: Params, x: jax.Array, state,
     return x + f, state
 
 
+def sample_tokens(logits: jax.Array, rid: jax.Array, index: jax.Array,
+                  temperature: jax.Array, key: jax.Array) -> jax.Array:
+    """Per-slot on-device sampling: greedy argmax, or temperature
+    categorical with a threefry key derived from ``(rid, index)`` — the
+    same derivation the host sampler uses, so tokens are independent of
+    batching, slot placement, and preemption schedule.
+
+    logits: [S, V]; rid/index: [S] int32; temperature: [S] f32 (<= 0 means
+    greedy); key: threefry PRNG key.  Returns [S] int32 token ids.
+    """
+
+    def first_argmax(x):
+        # first-index-of-max via two plain reduces instead of jnp.argmax:
+        # the XLA variadic argmax reduction does not vectorize on CPU
+        # (~1.3ms for [8, 32k] — more than the rest of the decode step);
+        # the tie rule (first occurrence) matches np/jnp.argmax exactly.
+        # NaNs map to +inf first: np.argmax returns the first NaN index
+        # (NaN compares false against the running max), and without the
+        # guard `x == mx` would be all-false and return the out-of-range
+        # index V
+        v = x.shape[-1]
+        x = jnp.where(jnp.isnan(x), jnp.inf, x)
+        mx = jnp.max(x, axis=-1, keepdims=True)
+        return jnp.min(jnp.where(x == mx, jnp.arange(v, dtype=jnp.int32),
+                                 v), axis=-1).astype(jnp.int32)
+
+    greedy = first_argmax(logits)
+
+    def categorical(_):
+        # `jax.random.categorical(k, lg)` is exactly
+        # argmax(gumbel(k, lg.shape, lg.dtype) + lg) — replicated here so
+        # the argmax can use the fast reduce while staying bit-identical
+        # to the host sampler (same keys, same gumbel draw, same tie rule)
+        def gumbel_logits(lg, r, i, tmp):
+            k = jax.random.fold_in(jax.random.fold_in(key, r), i)
+            return (jax.random.gumbel(k, lg.shape, lg.dtype)
+                    + lg / jnp.maximum(tmp, 1e-6))
+
+        return first_argmax(
+            jax.vmap(gumbel_logits)(logits, rid, index, temperature))
+
+    # all-greedy batches skip the [S, V] threefry work behind a scalar cond
+    sampled = jax.lax.cond(jnp.any(temperature > 0.0), categorical,
+                           lambda _: greedy, None)
+    return jnp.where(temperature > 0.0, sampled, greedy)
+
+
 def lm_paged_decode_step(params: Params, states, token: jax.Array,
                          pos: jax.Array, page_table: jax.Array,
                          active: jax.Array, cfg: nn.ModelConfig,
-                         due: Optional[jax.Array] = None):
+                         due: Optional[jax.Array] = None,
+                         sample: Optional[tuple] = None):
     """token: [S] int32; pos: [S] per-slot positions; page_table: [S, M];
-    active: [S] bool.  Returns (logits [S, V], states).
+    active: [S] bool.  Returns (logits [S, V], states) — or, with
+    ``sample`` set, (tokens [S] int32, states): sampling then runs inside
+    the fused program (`sample_tokens`) and the serving loop downloads S
+    int32 tokens per step instead of the [S, V] logits.
 
     ``due`` (external-finalize mode): [S] bool — slots whose last completed
     window still needs its landmark.  The finalize is fused into this
     program behind a scalar `lax.cond`, so steps where no slot crossed a
-    window boundary pay one dispatch and no O(context) work."""
+    window boundary pay one dispatch and no O(context) work.
+
+    ``sample``: optional (rid [S] i32, index [S] i32, temperature [S] f32,
+    key) — per-slot request ids, token indices, and temperatures for
+    on-device sampling."""
     x = nn.embed(params["emb"], token, cfg)
     dcfg = _decode_cfg(cfg)
     any_due = jnp.any(due) if due is not None else None
@@ -279,7 +334,10 @@ def lm_paged_decode_step(params: Params, states, token: jax.Array,
     x, new_states = jax.lax.scan(body, x, (params["blocks"], states),
                                  unroll=cfg.scan_unroll)
     logits = nn.unembed(params["emb"], nn.rms_norm(x, params["ln_f"]), cfg)
-    return logits, new_states
+    if sample is None:
+        return logits, new_states
+    rid, index, temperature, key = sample
+    return sample_tokens(logits, rid, index, temperature, key), new_states
 
 
 def pack_prefill_into_states(states, prefill_states, slot: jax.Array,

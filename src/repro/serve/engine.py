@@ -15,9 +15,14 @@ state machine, and the full program inventory):
   * ``decode``       — `lm_paged_decode_step`, ONE program for the whole
     slot batch regardless of per-request progress (per-slot positions, page
     tables, and activity are data, not shape).  The window-boundary
-    landmark finalize is fused behind a scalar `lax.cond`, and the per-slot
-    position/finalize counters advance on device so the hot loop uploads
-    only the sampled tokens.
+    landmark finalize is fused behind a scalar `lax.cond`, the per-slot
+    position/finalize/sampling counters advance on device, and with
+    ``EngineConfig.sample_device == "fused"`` sampling runs inside the
+    program too — the hot loop then uploads and downloads [S] int32
+    tokens instead of downloading [S, V] logits (docs/serving.md has the
+    transfer budget).  Inside the program, the paged attention dispatches
+    between the fused Pallas kernel and the XLA gather path
+    (`kernels.ops.use_paged_kernel`).
 
 Chunked mode also enables priority preemption: under page pressure the
 scheduler evicts the lowest-priority victim (releasing its pages) and later
@@ -49,26 +54,32 @@ from repro.models.modules import ModelConfig
 
 
 @functools.lru_cache(maxsize=None)
-def _decode_fn(cfg: ModelConfig, fused_finalize: bool) -> Callable:
+def _decode_fn(cfg: ModelConfig, fused_finalize: bool,
+               fused_sampling: bool) -> Callable:
     """Fused whole-batch decode step, cached at module level so every
     engine instance with the same model config shares compiled code.
 
-    Scheduler tensors (t, m_done) advance ON DEVICE: the hot loop uploads
-    only the sampled tokens and downloads only the logits — page tables,
-    activity, and positions are re-uploaded solely when admission/retire
-    changes them."""
+    Scheduler tensors (t, m_done, sample index) advance ON DEVICE: the hot
+    loop uploads only the fed-back tokens — page tables, activity,
+    positions, and per-request (rid, temperature) are re-uploaded solely
+    when admission/retire changes them.  With ``fused_sampling`` the step
+    also samples inside the program (`tfm.sample_tokens`) and returns [S]
+    int32 tokens; otherwise it returns the [S, V] logits for the host
+    sampler."""
     w = cfg.attn.window
 
-    def step(p, st, tok, t, m_done, pt, ac):
+    def step(p, st, tok, t, m_done, pt, ac, rid, si, temp, key):
         due = None
         if fused_finalize:
             due = ac & (t % w == 0) & (t // w > m_done)
             m_done = jnp.where(due, t // w, m_done)
-        logits, st = tfm.lm_paged_decode_step(p, st, tok, t, pt, ac, cfg,
-                                              due=due)
-        return logits, st, t + ac.astype(t.dtype), m_done
+        sample = (rid, si, temp, key) if fused_sampling else None
+        out, st = tfm.lm_paged_decode_step(p, st, tok, t, pt, ac, cfg,
+                                           due=due, sample=sample)
+        adv = ac.astype(t.dtype)
+        return out, st, t + adv, m_done, si + adv
 
-    return jax.jit(step, donate_argnums=(1, 3, 4))
+    return jax.jit(step, donate_argnums=(1, 3, 4, 8))
 
 
 @functools.lru_cache(maxsize=None)
@@ -162,13 +173,21 @@ class EngineConfig:
     ``reserve_pages``: pages the admission/prefill path may not claim;
     only decode-time appends (one page per ``window`` tokens per slot) can
     dip into them, which is what keeps running requests running when a
-    burst of admissions would otherwise drain the pool."""
+    burst of admissions would otherwise drain the pool.
+
+    ``sample_device``: where decode-time sampling runs.  ``"host"``
+    downloads the [S, V] logits every step and samples in Python (the
+    PR-2 path); ``"fused"`` samples inside the decode program
+    (`models.transformer.sample_tokens`) and downloads [S] int32 tokens —
+    same greedy argmax, same (rid, index)-derived categorical keys, so
+    tokens are bit-identical across the two modes."""
     n_slots: int = 8                # decode batch width
     n_pages: int = 64               # shared pool size (pages of `window`)
     pages_per_slot: int = 8         # max context per request, in pages
     finalize: str = "external"      # external | inline (see core.mita_decode)
     prefill_chunk: int = 0          # chunk length (0 = monolithic prefill)
     reserve_pages: int = 0          # appends-only page reserve
+    sample_device: str = "host"     # host | fused (on-device sampling)
 
 
 class _PageAllocator:
@@ -253,6 +272,8 @@ class ServingEngine:
                              f"the landmark window ({cfg.attn.window})")
         if ecfg.reserve_pages < 0:
             raise ValueError("reserve_pages must be >= 0")
+        if ecfg.sample_device not in ("host", "fused"):
+            raise ValueError(f"unknown sample_device {ecfg.sample_device!r}")
         self.params = params
         self.cfg = dataclasses.replace(
             cfg, attn=dataclasses.replace(
@@ -272,6 +293,10 @@ class ServingEngine:
         self.active = np.zeros(s, bool)
         self.tokens_in = np.zeros(s, np.int32)
         self.m_done = np.zeros(s, np.int32)   # finalized landmarks per slot
+        # per-slot sampling inputs for the fused on-device sampler
+        self.slot_rid = np.zeros(s, np.int32)
+        self.slot_temp = np.zeros(s, np.float32)
+        self.sample_idx = np.zeros(s, np.int32)   # next token index per slot
         self.free_slots: list[int] = list(range(s))
         self.slot_req: dict[int, Request] = {}
         self.slot_entry: dict[int, _WaitEntry] = {}
@@ -292,10 +317,12 @@ class ServingEngine:
 
         # window-boundary landmark finalize fused behind a lax.cond —
         # off-boundary steps skip the O(context) work inside ONE program
-        self._decode = _decode_fn(self.cfg, ecfg.finalize == "external")
+        self._decode = _decode_fn(self.cfg, ecfg.finalize == "external",
+                                  ecfg.sample_device == "fused")
         # device mirrors of the scheduler tensors (uploaded on change)
         self._dirty = True
         self._t_dev = self._md_dev = self._pt_dev = self._ac_dev = None
+        self._rid_dev = self._tp_dev = self._si_dev = None
         self._traceable: set[int] = set()   # validated prompt lengths
         self._inflight: set[int] = set()    # rids waiting or active
 
@@ -313,8 +340,11 @@ class ServingEngine:
         if req.temperature <= 0.0:
             return int(np.argmax(logits))
         key = jax.random.fold_in(jax.random.fold_in(self._key, req.rid), index)
+        # temperature floor matches the fused sampler exactly
+        # (`tfm.sample_tokens`) so host/fused tokens stay bit-identical
+        # even for degenerate near-zero temperatures
         return int(jax.random.categorical(
-            key, jnp.asarray(logits) / req.temperature))
+            key, jnp.asarray(logits) / max(req.temperature, 1e-6)))
 
     def pages_needed(self, req: Request) -> int:
         cap = len(req.prompt) + req.max_new_tokens
@@ -411,6 +441,9 @@ class ServingEngine:
         self.active[slot] = False
         self.t[slot] = 0
         self.page_table[slot] = 0     # unused entries must stay in-bounds
+        # a stale temperature would defeat the fused sampler's all-greedy
+        # fast path (sample_tokens conds on "any slot tempered")
+        self.slot_temp[slot] = 0.0
         self.free_slots.append(slot)
         self._dirty = True
         self._inflight.discard(req.rid)
@@ -459,6 +492,7 @@ class ServingEngine:
             entry.resume = (out, times, meta)
             self.active[slot] = False
             self.t[slot] = 0
+            self.slot_temp[slot] = 0.0
             self._dirty = True
         entry.evictions += 1
         self.free_slots.append(slot)
@@ -589,7 +623,10 @@ class ServingEngine:
                 self.t[slot] = n
                 self.m_done[slot] = n // self.w
                 self.active[slot] = True
+                self.slot_rid[slot] = req.rid
+                self.slot_temp[slot] = req.temperature
                 first = self._sample(logits[i], req, 0)
+                self.sample_idx[slot] = 1
                 self.slot_meta[slot] = (now, time.perf_counter())
                 self._emit(slot, first, time.perf_counter())
                 self.tokens_in[slot] = first
@@ -693,10 +730,13 @@ class ServingEngine:
         self.active[slot] = True
         self._dirty = True
         self.slot_npre[slot] = entry.evictions
+        self.slot_rid[slot] = req.rid
+        self.slot_temp[slot] = req.temperature
         if entry.resume is None:
             self.slot_out[slot] = []
             self.slot_times[slot] = []
             first = self._sample(logits, req, 0)
+            self.sample_idx[slot] = 1
             self.slot_meta[slot] = (job.admit_time, time.perf_counter())
             self._emit(slot, first, time.perf_counter())
             self.tokens_in[slot] = first
@@ -708,6 +748,7 @@ class ServingEngine:
             self.slot_out[slot] = list(out)
             self.slot_times[slot] = list(times)
             self.slot_meta[slot] = meta
+            self.sample_idx[slot] = len(out)
             self.tokens_in[slot] = out[-1]
 
     def _ensure_append_pages(self) -> None:
@@ -756,26 +797,39 @@ class ServingEngine:
             self._md_dev = jnp.asarray(self.m_done)
             self._pt_dev = jnp.asarray(self.page_table)
             self._ac_dev = jnp.asarray(self.active)
+            self._rid_dev = jnp.asarray(self.slot_rid)
+            self._tp_dev = jnp.asarray(self.slot_temp)
+            self._si_dev = jnp.asarray(self.sample_idx)
             self._dirty = False
         # host mirror of the device-side due/m_done transition
         due = self.active & (self.t % self.w == 0) & (self.t // self.w
                                                       > self.m_done)
         self.m_done = np.where(due, self.t // self.w, self.m_done)
 
+        fused_sampling = self.ecfg.sample_device == "fused"
         t0 = time.perf_counter()
-        logits, self.states, self._t_dev, self._md_dev = self._decode(
-            self.params, self.states, jnp.asarray(self.tokens_in),
-            self._t_dev, self._md_dev, self._pt_dev, self._ac_dev)
-        logits = np.asarray(logits)
+        out, self.states, self._t_dev, self._md_dev, self._si_dev = \
+            self._decode(self.params, self.states,
+                         jnp.asarray(self.tokens_in), self._t_dev,
+                         self._md_dev, self._pt_dev, self._ac_dev,
+                         self._rid_dev, self._si_dev, self._tp_dev,
+                         self._key)
+        # fused sampling downloads [S] int32 tokens; the host path the
+        # whole [S, V] logits (docs/serving.md, host-transfer budget)
+        out = np.asarray(out)
         self.step_times.append(time.perf_counter() - t0)
         self.steps += 1
 
         now = time.perf_counter()
         for slot in np.nonzero(self.active)[0]:
             req = self.slot_req[slot]
-            tok = self._sample(logits[slot], req, len(self.slot_out[slot]))
+            if fused_sampling:
+                tok = int(out[slot])
+            else:
+                tok = self._sample(out[slot], req, len(self.slot_out[slot]))
             self._emit(slot, tok, now)
             self.t[slot] += 1
+            self.sample_idx[slot] += 1
             self.tokens_in[slot] = tok
             if len(self.slot_out[slot]) >= req.max_new_tokens:
                 self._retire(slot, now)

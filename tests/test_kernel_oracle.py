@@ -1,10 +1,18 @@
-"""Kernel ↔ oracle parity for the routed-expert branch.
+"""Kernel ↔ oracle parity for the routed-expert branch and the fused
+paged-decode kernel.
 
 `kernels/mita_expert_attn.py` (interpret=True on CPU) against the
 `core/mita.py` routed branch, on exactly the cases the static-shape kernel
 can get wrong: causal window masking, k wider than early window ends
 (padded expert tiles), GQA group-shared routing, and pathological expert
-load skew (a sorted query block spanning one expert vs many)."""
+load skew (a sorted query block spanning one expert vs many).
+
+`kernels/mita_paged_attn.py` (interpret mode) against the XLA gather path
+of `core/mita_decode.mita_paged_decode_step` (``paged_impl="xla"``), on
+the cases the page walk can get wrong: randomized page permutations,
+ragged per-slot progress, inactive slots, and the scratch-row append."""
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -12,9 +20,11 @@ import numpy as np
 import pytest
 
 from repro.core import mita as mref
+from repro.core import mita_decode as mdec
 from repro.core import mita_sparse as msp
 from repro.core.mita import MiTAConfig, mita_attention
 from repro.core.mita_sparse import mita_attention_sparse
+from repro.kernels import ops
 
 RNG = jax.random.PRNGKey(11)
 
@@ -102,6 +112,20 @@ def test_pallas_uneven_expert_load():
     assert counts.max() > 0.9 * top.size
 
 
+def test_expert_kernel_pads_ragged_ns():
+    """NS not divisible by block_q: the kernel wrapper pads the sorted
+    sub-queries with the inactive assignment id and slices the outputs —
+    the caller-side divisibility constraint is gone (the span path keeps
+    it; impl='pallas' must not)."""
+    q, k, v = _qkv(n=120)            # n*s = 120, block_q = 32 -> pad to 128
+    cfg = MiTAConfig(m=8, k=16, s=1, causal=False)
+    ref = mita_attention(q, k, v, cfg)
+    out = mita_attention_sparse(q, k, v, cfg, impl="pallas", block_q=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+    with pytest.raises(ValueError, match="block_q"):
+        mita_attention_sparse(q, k, v, cfg, impl="sorted", block_q=32)
+
+
 def test_pallas_all_experts_invalid_early_rows():
     """Causal + tiny first window where even expert 0's tile is partially
     invalid; queries before the first window end have NO routable expert —
@@ -121,3 +145,157 @@ def test_pallas_all_experts_invalid_early_rows():
     assert np.isfinite(np.asarray(out.o)).all()
     ref = mref._routed_partial(q, k_e, v_e, valid, r, cfg)
     assert np.array_equal(l > 0, np.asarray(ref.l) > 0)
+
+
+# ------------------------------------------------- fused paged-decode kernel --
+
+W, K = 8, 8
+
+
+def _paged_pair(s_route=1, external=True, impl="kernel"):
+    cfg_x = mdec.DecodeConfig(window=W, k=K, s=s_route, paged_impl="xla",
+                              external_finalize=external)
+    return cfg_x, dataclasses.replace(cfg_x, paged_impl=impl)
+
+
+def _drive(cfg_x, cfg_k, offs, n_steps, seed=3, b=3, hkv=2, g=2, d=16):
+    """Step the XLA oracle and the kernel side by side over a shuffled page
+    pool with per-slot staggered activity; assert outputs AND pools match
+    every step (the pools pin the fused scratch-row append)."""
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (b, hkv, g, n_steps, d))
+    k, v = (jax.random.normal(kk, (b, hkv, n_steps, d))
+            for kk in jax.random.split(key, 2))
+    m = (n_steps + W - 1) // W
+    n_pages = b * m + 2
+    table = np.random.default_rng(seed).permutation(n_pages)[: b * m]
+    page_table = jnp.asarray(table.reshape(b, m), jnp.int32)
+    st_x = mdec.init_paged_state(hkv, d, n_pages, b, m, cfg_x, jnp.float32)
+    st_k = mdec.init_paged_state(hkv, d, n_pages, b, m, cfg_k, jnp.float32)
+    step_x = jax.jit(lambda s, *a: mdec.mita_paged_decode_step(s, *a, cfg_x))
+    step_k = jax.jit(lambda s, *a: mdec.mita_paged_decode_step(s, *a, cfg_k))
+    fin = jax.jit(lambda s, *a: mdec.mita_paged_finalize(s, *a, cfg_x))
+    t = np.zeros(b, np.int32)
+    m_done = np.zeros(b, np.int32)
+    for i in range(n_steps):
+        act = np.array([offs[s] <= i for s in range(b)])
+        if cfg_x.external_finalize:
+            due = act & (t % W == 0) & (t // W > m_done)
+            if due.any():
+                td, dd = jnp.asarray(t), jnp.asarray(due)
+                st_x = fin(st_x, page_table, td, dd)
+                st_k = fin(st_k, page_table, td, dd)
+                m_done = np.where(due, t // W, m_done)
+        qi = jnp.stack([q[s, :, :, (i - offs[s]) % n_steps] for s in range(b)])
+        ki = jnp.stack([k[s, :, (i - offs[s]) % n_steps] for s in range(b)])
+        vi = jnp.stack([v[s, :, (i - offs[s]) % n_steps] for s in range(b)])
+        td, ad = jnp.asarray(t), jnp.asarray(act)
+        o_x, st_x = step_x(st_x, qi, ki, vi, page_table, td, ad)
+        o_k, st_k = step_k(st_k, qi, ki, vi, page_table, td, ad)
+        np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_x),
+                                   atol=2e-5, err_msg=f"step {i}")
+        np.testing.assert_array_equal(np.asarray(st_k.k_pool),
+                                      np.asarray(st_x.k_pool),
+                                      err_msg=f"k_pool step {i}")
+        np.testing.assert_array_equal(np.asarray(st_k.v_pool),
+                                      np.asarray(st_x.v_pool),
+                                      err_msg=f"v_pool step {i}")
+        t = t + act
+    return st_x, st_k
+
+
+@pytest.mark.parametrize("s_route,external", [(1, True), (2, True),
+                                              (1, False)])
+def test_paged_kernel_matches_xla_staggered(s_route, external):
+    """Kernel vs XLA gather path over shuffled pages, ragged per-slot t
+    (slots join at different steps), inactive slots, inline + external
+    finalize, and multi-expert routing.  Pools are compared bit-exactly —
+    the kernel's fused append (external mode) must write exactly the rows
+    the XLA scatter writes, scratch row included."""
+    cfg_x, cfg_k = _paged_pair(s_route=s_route, external=external)
+    _drive(cfg_x, cfg_k, offs=[0, 5, 11], n_steps=24)
+
+
+def test_paged_kernel_scratch_row_append():
+    """An inactive slot's fused append lands in the scratch row and ONLY
+    the scratch row — no owned page of any other slot changes."""
+    cfg_x, cfg_k = _paged_pair()
+    b, hkv, g, d, m = 2, 2, 1, 16, 2
+    n_pages = b * m
+    page_table = jnp.asarray(np.arange(n_pages).reshape(b, m), jnp.int32)
+    st = mdec.init_paged_state(hkv, d, n_pages, b, m, cfg_k, jnp.float32)
+    key = jax.random.PRNGKey(0)
+    qi = jax.random.normal(key, (b, hkv, g, d))
+    ki, vi = (jax.random.normal(kk, (b, hkv, d))
+              for kk in jax.random.split(key, 2))
+    act = jnp.asarray([True, False])
+    t = jnp.asarray([3, 0], jnp.int32)
+    before = np.asarray(st.k_pool)
+    _, st2 = jax.jit(lambda s, *a: mdec.mita_paged_decode_step(
+        s, *a, cfg_k))(st, qi, ki, vi, page_table, t, act)
+    after = np.asarray(st2.k_pool)
+    scratch = after.shape[0] - 1
+    np.testing.assert_array_equal(after[scratch], np.asarray(ki)[1])
+    # slot 0 wrote its own page row; every other non-scratch row unchanged
+    row0 = int(page_table[0, 0]) * W + 3
+    np.testing.assert_array_equal(after[row0], np.asarray(ki)[0])
+    mask = np.ones(after.shape[0], bool)
+    mask[[row0, scratch]] = False
+    np.testing.assert_array_equal(after[mask], before[mask])
+
+
+def test_paged_kernel_vmem_budget_dispatch(monkeypatch):
+    """Dispatch flips to the XLA fallback when the VMEM budget shrinks —
+    via the DecodeConfig field and via REPRO_VMEM_BUDGET_BYTES — and the
+    step stays correct either way (it IS the fallback)."""
+    shape = dict(window=W, m=4, k_width=K, g=2, d=16, itemsize=4)
+    assert ops.use_paged_kernel("kernel", **shape)
+    assert not ops.use_paged_kernel("kernel", **shape, budget=64)
+    assert not ops.use_paged_kernel("xla", **shape)
+    monkeypatch.setenv("REPRO_VMEM_BUDGET_BYTES", "64")
+    assert ops.vmem_budget_bytes() == 64
+    assert not ops.use_paged_kernel("kernel", **shape)
+    monkeypatch.delenv("REPRO_VMEM_BUDGET_BYTES")
+    # a "kernel" config whose working set exceeds the budget must still
+    # produce oracle-exact results (it silently runs the fallback)
+    cfg_x, cfg_tiny = _paged_pair()
+    cfg_tiny = dataclasses.replace(cfg_tiny, vmem_budget=64)
+    _drive(cfg_x, cfg_tiny, offs=[0, 0, 0], n_steps=4)
+
+
+def test_gather_pages_owned_redirects_to_scratch():
+    """`gather_pages(owned=...)`: table entries past the owned prefix read
+    the scratch row, not whatever (other requests') pages the unused
+    entries happen to name."""
+    hkv, d, w = 2, 4, 4
+    pool = jnp.arange(9 * hkv * d, dtype=jnp.float32).reshape(9, hkv, d)
+    page_ids = jnp.asarray([[0, 1], [1, 0]], jnp.int32)   # slot 1 unused
+    out = ops.gather_pages(pool, page_ids, w,
+                           owned=jnp.asarray([1, 2], jnp.int32))
+    ref = np.asarray(pool)
+    # slot 0: first page real, second page -> scratch row replicated
+    np.testing.assert_array_equal(np.asarray(out)[0, :w], ref[0:w])
+    np.testing.assert_array_equal(np.asarray(out)[0, w:],
+                                  np.broadcast_to(ref[8], (w, hkv, d)))
+    # slot 1 owns both pages: untouched
+    np.testing.assert_array_equal(
+        np.asarray(out)[1], np.concatenate([ref[4:8], ref[0:4]]))
+
+
+def test_block_q_env_default(monkeypatch):
+    """REPRO_BLOCK_Q feeds `ops.default_block_q`, reachable via
+    AttnConfig.block_q = 0.  Checked on the pallas routed path, which is
+    block-size INVARIANT (the span path's documented drop condition
+    depends on block size, so it is not a valid invariance probe)."""
+    q, k, v = _qkv(n=128)
+    cfg = MiTAConfig(m=8, k=16, s=1, causal=True)
+    ref = mita_attention_sparse(q, k, v, cfg, impl="pallas", block_q=128)
+    monkeypatch.setenv("REPRO_BLOCK_Q", "32")
+    assert ops.default_block_q() == 32
+    out = mita_attention_sparse(q, k, v, cfg, impl="pallas",
+                                block_q=ops.default_block_q())
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+    # AttnConfig plumbs 0 -> env default (modules.attention_apply)
+    from repro.models import modules as nn
+    acfg = nn.AttnConfig(window=16, k=16, block_q=0)
+    assert (acfg.block_q or ops.default_block_q()) == 32

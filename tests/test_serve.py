@@ -286,3 +286,58 @@ def test_engine_rejects_oversized_and_bad_pool():
         full = dataclasses.replace(
             cfg, attn=dataclasses.replace(cfg.attn, backend="full"))
         ServingEngine(params, full, EngineConfig())
+
+
+def test_engine_fused_sampling_bit_identical_to_host():
+    """On-device sampling (`sample_device="fused"`): the engine downloads
+    [S] int32 tokens instead of [S, V] logits, and every request's greedy
+    tokens are BIT-identical to the host-sampling engine and the static
+    baseline.  Mixed lengths force slot reuse mid-trace."""
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    reqs = _requests(cfg, 8, lens=[8, 16, 24], gens=[2, 5, 9, 13])
+    ecfg = EngineConfig(n_slots=3, pages_per_slot=5, n_pages=12)
+    host = ServingEngine(params, cfg, ecfg).run(reqs)
+    fused = ServingEngine(
+        params, cfg,
+        dataclasses.replace(ecfg, sample_device="fused")).run(reqs)
+    assert len(fused) == len(reqs)
+    for h, f in zip(host, fused):
+        np.testing.assert_array_equal(f.tokens, h.tokens,
+                                      err_msg=f"req {h.rid}")
+    scfg = _cfg(external=True)
+    for f, r in zip(fused, reqs):
+        ref, _ = static_generate(params, scfg, jnp.asarray(r.prompt)[None],
+                                 r.max_new_tokens, capacity=5 * W)
+        np.testing.assert_array_equal(f.tokens, ref[0],
+                                      err_msg=f"req {f.rid} vs static")
+
+
+def test_engine_fused_temperature_matches_host_and_batching():
+    """Fused temperature sampling uses the same (rid, index) threefry
+    derivation as the host sampler: fused == host on the same trace, and
+    a request sampled alone equals the same request inside a busy batch
+    (preemption/batching invariance carries over to the device sampler)."""
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    reqs = _requests(cfg, 4, lens=[16], gens=[6], seed=3)
+    for r in reqs:
+        r.temperature = 0.9
+    ecfg = EngineConfig(n_slots=3, pages_per_slot=4, n_pages=12,
+                        sample_device="fused")
+    fused = ServingEngine(params, cfg, ecfg).run(reqs)
+    host = ServingEngine(
+        params, cfg,
+        dataclasses.replace(ecfg, sample_device="host")).run(reqs)
+    for h, f in zip(host, fused):
+        np.testing.assert_array_equal(f.tokens, h.tokens,
+                                      err_msg=f"req {h.rid}")
+    alone = ServingEngine(params, cfg, ecfg).run([reqs[2]])
+    np.testing.assert_array_equal(fused[2].tokens, alone[0].tokens)
+
+
+def test_engine_rejects_bad_sample_device():
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="sample_device"):
+        ServingEngine(params, cfg, EngineConfig(sample_device="gpu"))

@@ -275,3 +275,36 @@ def test_engine_rejects_bad_chunk_and_reserve():
     with pytest.raises(ValueError, match="deadlock"):
         ServingEngine(params, cfg, EngineConfig(
             n_slots=2, pages_per_slot=8, n_pages=9, reserve_pages=4))
+
+
+def test_preemption_round_trip_fused_sampling():
+    """Preemption + on-device sampling: the rebuilt request's device-side
+    sample index resumes at len(emitted), so a preempted temperature-
+    sampled request still emits exactly the tokens of its unpreempted run
+    (the (rid, index) key derivation is schedule-independent)."""
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    N, gen = 16, 24
+    victim = np.asarray(jax.random.randint(jax.random.PRNGKey(3), (N,),
+                                           0, cfg.vocab))
+    ecfg = EngineConfig(n_slots=2, pages_per_slot=6, n_pages=8,
+                        prefill_chunk=2 * W, sample_device="fused")
+    ref = ServingEngine(params, cfg, ecfg).run(
+        [Request(rid=0, prompt=victim, max_new_tokens=gen,
+                 temperature=0.7)])[0].tokens
+
+    eng = ServingEngine(params, cfg, ecfg)
+    eng.submit(Request(rid=0, prompt=victim, max_new_tokens=gen,
+                       temperature=0.7, priority=0))
+    for _ in range(6):
+        eng.step()
+    hp = jax.random.randint(jax.random.PRNGKey(5), (2, 16), 0, cfg.vocab)
+    eng.submit(Request(rid=1, prompt=np.asarray(hp[0]), max_new_tokens=24,
+                       priority=5))
+    eng.submit(Request(rid=2, prompt=np.asarray(hp[1]), max_new_tokens=24,
+                       priority=5))
+    while eng.step():
+        pass
+    done = sorted(eng.finished, key=lambda f: f.rid)
+    assert eng.n_preemptions >= 1, "scenario no longer triggers preemption"
+    np.testing.assert_array_equal(done[0].tokens, ref)
