@@ -6,7 +6,7 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [tab2 tab5 ...]
 
 import sys
 
-from benchmarks import decode_bench, serve_bench, tables
+from benchmarks import decode_bench, prefill_bench, serve_bench, tables
 
 
 ALL = [
@@ -19,6 +19,7 @@ ALL = [
     ("serve", serve_bench.serve_poisson),
     ("serve_interference", serve_bench.serve_interference),
     ("decode", decode_bench.decode_bench),
+    ("prefill", prefill_bench.prefill_bench),
 ]
 
 

@@ -75,6 +75,9 @@ class DecodeConfig:
     # "kernel" (force the kernel — interpret mode off-TPU — still bounded
     # by the budget), or "xla" (force the oracle).
     paged_impl: str = "auto"
+    # Batched chunk-prefill backend, same tri-state (dispatched by
+    # `kernels.ops.use_prefill_kernel`; REPRO_PREFILL_IMPL overrides).
+    prefill_impl: str = "auto"
     # VMEM working-set budget for kernel dispatch; 0 = use the env/default
     # budget (`kernels.ops.vmem_budget_bytes`).
     vmem_budget: int = 0
@@ -332,6 +335,16 @@ class PagedMiTAState(NamedTuple):
       expert_valid:     [S, Hkv, M, K]
       q_sum:            [S, Hkv, d]      running query sum, current window
                                          (f32; resumed across prefill chunks)
+      pre_lm_q:         [S, Hkv, M, d]   transient PROMPT landmark queries —
+                                         the training path pools the prompt's
+                                         landmarks over n//m-sized windows
+                                         (the `mita_prefill_state` quirk for
+                                         non-window-aligned prompts), so the
+                                         chunked prefill carries this second
+                                         landmark-query set across chunks;
+                                         dead weight after the last chunk
+      pre_q_sum:        [S, Hkv, d]      running query sum of the open
+                                         n//m-sized prompt window (f32)
 
     Ownership contract: per-slot progress (t), page tables, and activity
     live on the host and are passed into each step — the scheduler owns
@@ -346,6 +359,8 @@ class PagedMiTAState(NamedTuple):
     expert_idx: jax.Array
     expert_valid: jax.Array
     q_sum: jax.Array
+    pre_lm_q: jax.Array
+    pre_q_sum: jax.Array
 
 
 def init_paged_state(n_kv: int, head_dim: int, n_pages: int, n_slots: int,
@@ -361,6 +376,8 @@ def init_paged_state(n_kv: int, head_dim: int, n_pages: int, n_slots: int,
                              jnp.int32),
         expert_valid=jnp.zeros((n_slots, n_kv, pages_per_slot, cfg.k), bool),
         q_sum=jnp.zeros((n_slots, n_kv, head_dim), jnp.float32),
+        pre_lm_q=jnp.zeros((n_slots, n_kv, pages_per_slot, head_dim), dtype),
+        pre_q_sum=jnp.zeros((n_slots, n_kv, head_dim), jnp.float32),
     )
 
 
@@ -760,3 +777,394 @@ def mita_chunk_prefill(state: PagedMiTAState, q: jax.Array, k: jax.Array,
         expert_valid=state.expert_valid.at[slot].set(ev_s),
         q_sum=state.q_sum.at[slot].set(q_sum_s),
     )
+
+
+# ------------------------------------------------- batched chunked prefill --
+#
+# `mita_batched_chunk_prefill` advances ONE window-aligned chunk for EVERY
+# currently-prefilling slot in a single program — the serving engine's
+# prefill work per step is then one dispatch of one compiled shape no matter
+# how many requests are mid-prefill.  Which slots advance, their resume
+# points, chunk validity, and the training/decode semantics boundary are all
+# data ([S] vectors); inactive rows write only to the scratch row and pass
+# their slot state through untouched.
+#
+# Unlike the single-slot op above, this one also serves NON-window-aligned
+# prompts, replicating the monolithic head exactly so the engine needs no
+# monolithic fallback.  The monolithic path has a quirk worth naming: for a
+# prompt of n tokens the *training-path forward* (`attention_apply`) pools
+# m = n // w landmark queries over windows of w' = n // m tokens and masks
+# landmark visibility at (i+1) * w' — while `mita_prefill_state` builds the
+# DECODE cache's landmarks from exact w-token query windows scored against
+# the same (i+1) * w' key ends.  Both systems are therefore maintained per
+# chunk:
+#
+#   * the "A" system (prompt positions < n_train): w'-pooled landmark
+#     queries carried in `pre_lm_q` / `pre_q_sum`; landmark values and
+#     expert tiles are recomputed each chunk from the gathered context
+#     (append-only pages make the recompute exact), feeding the chunk's
+#     attention outputs so the forward over the prompt equals the training
+#     path, chunk boundaries notwithstanding;
+#   * the "B" system (the decode cache): w-pooled landmark queries committed
+#     into `lm_q` as soon as their query window completes, scores/values/
+#     expert rows committed once the (i+1) * w' key context exists — for
+#     window-aligned prompts w' == w and both systems coincide with the
+#     single-slot op above.
+#
+# Generated positions (>= n_train, the preemption-recompute shape) attend
+# through the B system with decode-time landmark availability, exactly like
+# the single-slot op.  Backend dispatch (`cfg.prefill_impl`,
+# `kernels.ops.use_prefill_kernel`): the fused Pallas kernel
+# (`kernels.mita_chunk_prefill`) replaces this XLA path when its working set
+# fits the VMEM budget; the XLA path stays as fallback and bit-exact oracle.
+
+
+def _quirk_windows(n_train: jax.Array, w: int):
+    """Per-slot prompt landmark structure: (m_train, m_a, w_a) where
+    ``m_train`` counts the decode cache's w-sized prompt windows, and the
+    training forward pools ``m_a = max(1, m_train)`` landmarks over
+    ``w_a = n_train // m_a``-sized windows (the n//m quirk; w_a == w for
+    window-aligned prompts).  All int32, safe for n_train == 0 rows."""
+    m_train = n_train // w
+    m_a = jnp.maximum(m_train, 1)
+    w_a = jnp.maximum(n_train // m_a, 1)
+    return m_train, m_a, w_a
+
+
+def mita_batched_chunk_prefill(state: PagedMiTAState, q: jax.Array,
+                               k: jax.Array, v: jax.Array,
+                               page_table: jax.Array, slots: jax.Array,
+                               t0: jax.Array, n_valid: jax.Array,
+                               n_train: jax.Array, active: jax.Array,
+                               cfg: DecodeConfig
+                               ) -> tuple[jax.Array, PagedMiTAState]:
+    """Prefill one chunk for every active row in one fused program.
+
+    Rows are *jobs*, not slots: the engine packs the currently-prefilling
+    slots (padded with DISTINCT idle slots to a fixed width P) so compute
+    scales with the number of prefilling requests, not the slot-batch
+    width.  All per-row quantities are data; P is the only shape.
+
+    Args:
+      q:          [P, Hkv, G, nc, d] chunk queries per row (RoPE'd at
+                  positions ``t0[p] + arange(nc)``; garbage for inactive
+                  rows).
+      k, v:       [P, Hkv, nc, d] chunk keys/values.
+      page_table: [P, M] int32 — each row's slot's page-table row.  Pages
+                  covering positions < t0 + n_valid must be allocated.
+      slots:      [P] int32 UNIQUE slot ids (duplicates would make the
+                  state write-back order undefined).
+      t0:         [P] int32 resume points (tokens already packed; always a
+                  multiple of the chunk length, hence window-aligned).
+      n_valid:    [P] int32 valid tokens per row; padding past it lands in
+                  the scratch row and yields garbage outputs.
+      n_train:    [P] int32 training/decode semantics boundary (original
+                  prompt length) — positions >= n_train replicate decode-
+                  time landmark availability, exactly as the single-slot op.
+      active:     [P] bool — inactive rows leave every piece of their
+                  slot's state (and every owned page) bit-identical.
+
+    Returns (out [P, Hkv, G, nc, d], updated state).
+    """
+    from repro.kernels import ops
+
+    w = cfg.window
+    _, _, g, nc, d = q.shape
+    m_slot = page_table.shape[1]
+    s_ = min(cfg.s, m_slot)
+    pdt = state.k_pool.dtype
+
+    # gather the rows' slot state once; both backends compute compact
+    # [P, ...] updates that are scattered back below
+    lm_q_r = state.lm_q[slots]
+    lm_v_r = state.lm_v[slots]
+    ei_r = state.expert_idx[slots]
+    ev_r = state.expert_valid[slots]
+    qs_r = state.q_sum[slots]
+    plm_r = state.pre_lm_q[slots]
+    pqs_r = state.pre_q_sum[slots]
+
+    if ops.use_prefill_kernel(
+            cfg.prefill_impl, nc=nc, window=w, m=m_slot, k_width=cfg.k,
+            g=g, d=d, itemsize=pdt.itemsize, budget=cfg.vmem_budget):
+        (out, lm_q_n, lm_v_n, ei_n, ev_n, qs_n, plm_n, pqs_n, kp, vp) = \
+            ops.batched_chunk_prefill(
+                q, k, v, lm_q_r, lm_v_r, ei_r, ev_r, qs_r, plm_r, pqs_r,
+                state.k_pool, state.v_pool, page_table, t0, n_valid,
+                n_train, active, window=w, k_width=cfg.k, n_route=s_,
+                external_finalize=cfg.external_finalize)
+        ev_n = ev_n.astype(bool)
+    else:
+        (out, lm_q_n, lm_v_n, ei_n, ev_n, qs_n, plm_n, pqs_n, kp, vp) = \
+            _batched_chunk_prefill_xla(
+                state.k_pool, state.v_pool, q, k, v, lm_q_r, lm_v_r, ei_r,
+                ev_r, qs_r, plm_r, pqs_r, page_table, t0, n_valid, n_train,
+                active, cfg)
+
+    return out, state._replace(
+        k_pool=kp, v_pool=vp,
+        lm_q=state.lm_q.at[slots].set(lm_q_n),
+        lm_v=state.lm_v.at[slots].set(lm_v_n),
+        expert_idx=state.expert_idx.at[slots].set(ei_n),
+        expert_valid=state.expert_valid.at[slots].set(ev_n),
+        q_sum=state.q_sum.at[slots].set(qs_n),
+        pre_lm_q=state.pre_lm_q.at[slots].set(plm_n),
+        pre_q_sum=state.pre_q_sum.at[slots].set(pqs_n))
+
+
+def _batched_chunk_prefill_xla(k_pool, v_pool, q, k, v, lm_q_r, lm_v_r,
+                               ei_r, ev_r, qs_r, plm_r, pqs_r, page_table,
+                               t0, n_valid, n_train, active,
+                               cfg: DecodeConfig):
+    """XLA path of `mita_batched_chunk_prefill` — the fallback and the
+    bit-exact oracle of the fused kernel.  The A-system (training-head)
+    and B-system (decode-cache) attention branches are gated behind
+    `lax.cond`s on whether any row has prompt / generated positions, so a
+    fresh-prompt chunk pays one attention pass, not two; the skipped
+    branch's partials are empty (m = -inf, l = 0), which the per-position
+    selection discards — bit-identical to computing both."""
+    w = cfg.window
+    p_rows, hkv, g, nc, d = q.shape
+    m_slot = page_table.shape[1]
+    ctx = m_slot * w
+    scratch = k_pool.shape[0] - 1
+    s_ = min(cfg.s, m_slot)
+    pdt = k_pool.dtype
+    from repro.kernels import ops
+
+    t0 = t0.astype(jnp.int32)
+    n_valid = n_valid.astype(jnp.int32)
+    n_train = n_train.astype(jnp.int32)
+    pos = t0[:, None] + jnp.arange(nc)                  # [P, nc]
+    valid = (jnp.arange(nc)[None, :] < n_valid[:, None]) & active[:, None]
+    li = jnp.arange(m_slot)                             # landmark ids [M]
+    cpos = jnp.arange(ctx)                              # context positions
+    m_train, m_a, w_a = _quirk_windows(n_train, w)
+
+    # 1. append chunk KV to the rows' pages (padding/inactive -> scratch).
+    # Page ordinal == pos // w, so a token's context index IS its position.
+    page_idx = jnp.clip(pos // w, 0, m_slot - 1)
+    dst = jnp.where(valid,
+                    jnp.take_along_axis(page_table, page_idx, axis=1) * w
+                    + pos % w, scratch)
+    kp = k_pool.at[dst.reshape(-1)].set(
+        jnp.swapaxes(k, 1, 2).reshape(-1, hkv, d).astype(pdt))
+    vp = v_pool.at[dst.reshape(-1)].set(
+        jnp.swapaxes(v, 1, 2).reshape(-1, hkv, d).astype(pdt))
+
+    # gathered per-row context in token order; unowned table entries
+    # redirect to the scratch row (reads past the valid prefix are masked
+    # or zero-weighted below either way)
+    owned = (t0 + n_valid + w - 1) // w
+    k_ctx = ops.gather_pages(kp, page_table, w, owned=owned)  # [P,ctx,Hkv,d]
+    v_ctx = ops.gather_pages(vp, page_table, w, owned=owned)
+
+    ql32 = jnp.mean(q, axis=2).astype(jnp.float32)      # [P, Hkv, nc, d]
+
+    # 2. B system — the decode cache.  Landmark queries commit as soon as
+    # their w-token query window completes; scores/values/expert rows
+    # commit once the window's key end exists (ends differ only under the
+    # non-aligned n//m quirk, where a prompt landmark's key context extends
+    # (i+1)*(w_a - w) tokens past its query window).
+    win_b = pos // w
+    tok_b = valid[:, None, :] & (win_b[:, None, :] == li[None, :, None])
+    sums_b = jnp.einsum("smn,shnd->shmd", tok_b.astype(jnp.float32), ql32)
+    m0 = t0 // w
+    resume_b = (li[None, :] == m0[:, None]) & (t0 % w != 0)[:, None]
+    sums_b = sums_b + jnp.where(resume_b[:, None, :, None],
+                                qs_r[:, :, None, :], 0.0)
+    q_lm_b = (sums_b / w).astype(pdt)                   # [P, Hkv, M, d]
+    wend = (li + 1) * w                                 # [M]
+    new_end = t0 + n_valid
+    qdone_b = (active[:, None] & (wend[None, :] > t0[:, None])
+               & (wend[None, :] <= new_end[:, None]))
+    lm_q_s = jnp.where(qdone_b[:, None, :, None], q_lm_b, lm_q_r)
+
+    ends_b = jnp.where(li[None, :] < m_train[:, None],
+                       (li[None, :] + 1) * w_a[:, None], wend[None, :])
+    s_b = jnp.einsum("schd,shmd->shmc", k_ctx, lm_q_s) / math.sqrt(d)
+    vis_b = cpos[None, None, :] < ends_b[:, :, None]
+    s_b = jnp.where(vis_b[:, None], s_b.astype(jnp.float32), NEG_INF)
+    top_vals, top_loc = jax.lax.top_k(s_b, cfg.k)       # [P, Hkv, M, K]
+    new_valid = top_vals > NEG_INF / 2
+    ctx_rows = (page_table[:, :, None] * w
+                + jnp.arange(w)[None, None, :]).reshape(p_rows, ctx)
+    new_rows = jnp.take_along_axis(
+        jnp.broadcast_to(ctx_rows[:, None, None, :],
+                         (p_rows, hkv, m_slot, ctx)), top_loc, axis=-1)
+    p_b = jax.nn.softmax(s_b, axis=-1)
+    v_lm_b = jnp.einsum("shmc,schd->shmd", p_b.astype(pdt), v_ctx)
+    scommit = (active[:, None] & (ends_b > t0[:, None])
+               & (ends_b <= new_end[:, None]))
+    sc4 = scommit[:, None, :, None]
+    lm_v_s = jnp.where(sc4, v_lm_b, lm_v_r)
+    ei_s = jnp.where(sc4, new_rows, ei_r)
+    ev_s = jnp.where(sc4, new_valid, ev_r)
+
+    # open-window sum == the open row of the sums matrix (the resume
+    # contribution already sits inside row m0), selected so the kernel's
+    # row-select reproduces it bit-exactly; rows past M mean an exactly
+    # full slot, whose open window is empty
+    m_new = new_end // w
+    q_sum_s = jnp.sum(jnp.where(
+        (li[None, :] == m_new[:, None])[:, None, :, None], sums_b, 0.0),
+        axis=2)
+    q_sum_s = jnp.where(active[:, None, None], q_sum_s, qs_r)
+
+    is_tr = pos < n_train[:, None]
+    any_tr = jnp.any(valid & is_tr)
+    any_gen = jnp.any(valid & ~is_tr)
+    k_ctx_h = jnp.swapaxes(k_ctx, 1, 2)                 # [P, Hkv, ctx, d]
+    v_ctx_h = jnp.swapaxes(v_ctx, 1, 2)
+
+    def shared_routed(lm_q_sys, lm_v_sys, avail):
+        r = jnp.einsum("shgnd,shmd->shgnm", q, lm_q_sys) / math.sqrt(d)
+        r = jnp.where(avail[:, None, None], r.astype(jnp.float32), NEG_INF)
+        shared = partial_from_scores(r, lm_v_sys[:, :, None])
+        _, e_idx = jax.lax.top_k(r, s_)                 # [P, Hkv, G, nc, s]
+        e_ok = jnp.take_along_axis(r, e_idx, axis=-1) > NEG_INF / 2
+        return shared, e_idx, e_ok
+
+    def empty_partials(_):
+        zo = jnp.zeros((p_rows, hkv, g, nc, d), pdt)
+        zm = jnp.full((p_rows, hkv, g, nc), NEG_INF, jnp.float32)
+        zl = jnp.zeros((p_rows, hkv, g, nc), jnp.float32)
+        return (zo, zm, zl), (zo, zm, zl)
+
+    # 3. A system — the transient prompt-forward landmarks (w_a-pooled).
+    # Values/expert tiles are recomputed from the gathered context each
+    # chunk (pages are append-only, so the recompute is exact); only the
+    # pooled queries and the open-window sum cross chunk boundaries.
+    win_a = pos // w_a[:, None]
+    tok_a = ((valid & is_tr)[:, None, :]
+             & (win_a[:, None, :] == li[None, :, None]))
+    sums_a = jnp.einsum("smn,shnd->shmd", tok_a.astype(jnp.float32), ql32)
+    m0_a = t0 // w_a
+    resume_a = ((li[None, :] == m0_a[:, None])
+                & ((t0 % w_a != 0) & (t0 < n_train))[:, None])
+    sums_a = sums_a + jnp.where(resume_a[:, None, :, None],
+                                pqs_r[:, :, None, :], 0.0)
+    q_lm_a = (sums_a / w_a[:, None, None, None].astype(jnp.float32)
+              ).astype(pdt)
+    ends_a = (li[None, :] + 1) * w_a[:, None]           # [P, M]
+    qdone_a = (active[:, None] & (ends_a > t0[:, None])
+               & (ends_a <= new_end[:, None])
+               & (li[None, :] < m_a[:, None]))
+    pre_lm_q_s = jnp.where(qdone_a[:, None, :, None], q_lm_a, plm_r)
+
+    open_a = new_end // w_a
+    pre_q_sum_s = jnp.sum(jnp.where(
+        (li[None, :] == open_a[:, None])[:, None, :, None], sums_a, 0.0),
+        axis=2)
+    pre_q_sum_s = jnp.where(active[:, None, None], pre_q_sum_s, pqs_r)
+
+    def a_products(_):
+        """A-system landmark scores/values/expert locations — the quirk
+        build (w_a != w somewhere in the batch)."""
+        s_a = jnp.einsum("schd,shmd->shmc", k_ctx, pre_lm_q_s) / math.sqrt(d)
+        vis_a = ((cpos[None, None, :] < ends_a[:, :, None])
+                 & (li[None, :, None] < m_a[:, None, None]))
+        s_a = jnp.where(vis_a[:, None], s_a.astype(jnp.float32), NEG_INF)
+        tv_a, tl_a = jax.lax.top_k(s_a, cfg.k)          # [P, Hkv, M, K]
+        p_a = jax.nn.softmax(s_a, axis=-1)
+        v_lm_a = jnp.einsum("shmc,schd->shmd", p_a.astype(pdt), v_ctx)
+        return v_lm_a, tl_a, tv_a > NEG_INF / 2
+
+    def a_reuse(_):
+        """All rows window-aligned: the A system IS the B system (same
+        pooled queries, same ends), so reuse its products.  Rows at
+        landmark ids >= m_a (generated windows) differ, but every read of
+        them is availability-masked to an exact-zero contribution."""
+        return v_lm_b, top_loc, new_valid
+
+    def a_branches(_):
+        """A-system shared/routed partials for prompt positions (skipped
+        when the chunk has none)."""
+        quirky = jnp.any(active & (n_train % w != 0))
+        v_lm_a, tl_a, val_a = jax.lax.cond(quirky, a_products, a_reuse,
+                                           None)
+        flat_tl = tl_a.reshape(p_rows, hkv, m_slot * cfg.k)
+        k_e_a = jnp.take_along_axis(k_ctx_h, flat_tl[..., None], axis=2
+                                    ).reshape(p_rows, hkv, m_slot, cfg.k, d)
+        v_e_a = jnp.take_along_axis(v_ctx_h, flat_tl[..., None], axis=2
+                                    ).reshape(p_rows, hkv, m_slot, cfg.k, d)
+
+        avail_a = ((ends_a[:, None, :] <= pos[:, :, None] + 1)
+                   & (li[None, None, :] < m_a[:, None, None])
+                   & is_tr[:, :, None])
+        shared_a, e_a, eok_a = shared_routed(pre_lm_q_s, v_lm_a, avail_a)
+        fe_a = e_a.reshape(p_rows, hkv, g * nc * s_)
+        k_sel = jnp.take_along_axis(
+            k_e_a.reshape(p_rows, hkv, m_slot, cfg.k * d), fe_a[..., None],
+            axis=2).reshape(p_rows, hkv, g, nc, s_ * cfg.k, d)
+        v_sel = jnp.take_along_axis(
+            v_e_a.reshape(p_rows, hkv, m_slot, cfg.k * d), fe_a[..., None],
+            axis=2).reshape(p_rows, hkv, g, nc, s_ * cfg.k, d)
+        va_sel = jnp.take_along_axis(
+            val_a, fe_a[..., None], axis=2).reshape(p_rows, hkv, g, nc, s_,
+                                                    cfg.k)
+        lg = jnp.einsum("shgnd,shgnkd->shgnk", q, k_sel) / math.sqrt(d)
+        routed_a = partial_from_logits(
+            lg, v_sel,
+            mask=(va_sel & eok_a[..., None]).reshape(p_rows, hkv, g, nc,
+                                                     s_ * cfg.k))
+        return ((shared_a.o, shared_a.m, shared_a.l),
+                (routed_a.o, routed_a.m, routed_a.l))
+
+    def b_branches(_):
+        """B-system shared/routed partials for generated positions — the
+        preemption-recompute shape (skipped for fresh-prompt chunks)."""
+        off = 0 if cfg.external_finalize else 1
+        avail_b = ((wend[None, None, :] <= pos[:, :, None] + off)
+                   & ~is_tr[:, :, None])
+        shared_b, e_b, eok_b = shared_routed(lm_q_s, lm_v_s, avail_b)
+        fe_b = e_b.reshape(p_rows, hkv, g * nc * s_)
+        rows_b = jnp.take_along_axis(ei_s, fe_b[..., None], axis=2)
+        rv_b = jnp.take_along_axis(ev_s, fe_b[..., None], axis=2)
+        k_sel = ops.gather_pool_rows(
+            kp, rows_b.reshape(p_rows, hkv, -1)).reshape(
+            p_rows, hkv, g, nc, s_ * cfg.k, d)
+        v_sel = ops.gather_pool_rows(
+            vp, rows_b.reshape(p_rows, hkv, -1)).reshape(
+            p_rows, hkv, g, nc, s_ * cfg.k, d)
+        lg = jnp.einsum("shgnd,shgnkd->shgnk", q, k_sel) / math.sqrt(d)
+        routed_b = partial_from_logits(
+            lg, v_sel,
+            mask=(rv_b.reshape(p_rows, hkv, g, nc, s_, cfg.k)
+                  & eok_b[..., None]).reshape(p_rows, hkv, g, nc,
+                                              s_ * cfg.k))
+        return ((shared_b.o, shared_b.m, shared_b.l),
+                (routed_b.o, routed_b.m, routed_b.l))
+
+    sh_a, ro_a = jax.lax.cond(any_tr, a_branches, empty_partials, None)
+    sh_b, ro_b = jax.lax.cond(any_gen, b_branches, empty_partials, None)
+
+    # local: each position attends its own window [start, pos] (w_a-sized
+    # inside the prompt, w-sized outside; w_a <= 2w - 1, so a 2w-wide
+    # per-position gather from the context covers both)
+    lw = 2 * w
+    start = jnp.where(is_tr, win_a * w_a[:, None], (pos // w) * w)
+    loc_pos = start[:, :, None] + jnp.arange(lw)[None, None, :]  # [P,nc,2w]
+    loc_idx = jnp.clip(loc_pos, 0, ctx - 1)
+    k_loc = jnp.take_along_axis(
+        k_ctx_h, loc_idx.reshape(p_rows, 1, nc * lw, 1),
+        axis=2).reshape(p_rows, hkv, nc, lw, d)
+    v_loc = jnp.take_along_axis(
+        v_ctx_h, loc_idx.reshape(p_rows, 1, nc * lw, 1),
+        axis=2).reshape(p_rows, hkv, nc, lw, d)
+    s_loc = jnp.einsum("shgnd,shnwd->shgnw", q, k_loc) / math.sqrt(d)
+    local = partial_from_logits(
+        s_loc, v_loc[:, :, None],
+        mask=(loc_pos <= pos[:, :, None])[:, None, None])
+
+    sel = is_tr[:, None, None, :]                       # over [P, H, G, nc]
+
+    def pick(pa, pb):
+        return Partial(o=jnp.where(sel[..., None], pa[0], pb[0]),
+                       m=jnp.where(sel, pa[1], pb[1]),
+                       l=jnp.where(sel, pa[2], pb[2]))
+
+    out = combine([pick(sh_a, sh_b), pick(ro_a, ro_b), local])
+    out = jnp.where(active[:, None, None, None, None], out, 0.0)
+    return (out, lm_q_s, lm_v_s, ei_s, ev_s, q_sum_s, pre_lm_q_s,
+            pre_q_sum_s, kp, vp)

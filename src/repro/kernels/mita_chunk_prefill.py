@@ -1,0 +1,470 @@
+"""Fused batched chunk-prefill MiTA kernel (TPU Pallas; interpret on CPU).
+
+One window-aligned prefill chunk for EVERY active slot, per (slot, KV-head)
+program — the arithmetic-dense prefill counterpart of the paged-decode
+kernel (`mita_paged_attn.py`).  Each program:
+
+  * **append** — DMAs the chunk's valid K/V rows straight into the slot's
+    pages (``page_table[s, pos // w] * w + pos % w``; scratch row for
+    padding and inactive rows), pools aliased in/out so the write is in
+    place;
+  * **context gather** — DMAs the slot's whole page set HBM→VMEM in token
+    order (context index == token position) and patches the just-appended
+    rows from registers, so every downstream read is append-order exact;
+  * **landmark build** — resumes the open-window query sums (both the
+    decode cache's w-sized windows and the training head's n//m-sized
+    prompt windows, `core.mita_decode.mita_batched_chunk_prefill`'s A/B
+    systems), scores each completed window against the gathered context
+    with one in-kernel top-k, and commits landmark queries/values + global
+    expert rows exactly where the XLA oracle does;
+  * **chunk attention** — shared + routed + local branches for every chunk
+    position, per-position A/B selection (training vs decode landmark
+    availability), merged with ONE online softmax over the concatenated
+    branch logits — the expert gathers resolve through the VMEM context via
+    exact one-hot matmuls (0·x == 0 and 1·x == x bit-exactly for finite x),
+    so no per-row DMA is needed on this path.
+
+The XLA path in `core.mita_decode.mita_batched_chunk_prefill` is the
+fallback and the bit-exact oracle: `tests/test_kernel_oracle.py` pins
+pages, landmarks, expert rows, and the resumed q_sum state bit-identical
+(f32 pools) across ragged resume points, non-aligned heads, preemption
+recompute, and inactive slots.
+
+Per-program VMEM working set (budget-checked by
+`kernels.ops.chunk_prefill_vmem_bytes`): the gathered context ``2·ctx·d``,
+chunk q/k/v/out ``(2G+2)·nc·d``, landmark tiles ``8·M·d``, expert tiles
+``2·M·K·d``, and the f32 score rows ``(2M + G·nc)·ctx`` — the local-branch
+scores are materialized over the full context, so production shapes with
+``G·nc·ctx`` beyond the budget dispatch to XLA (tiling that score matrix is
+the follow-on).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _first_argmax(x):
+    """Row-wise (max, first-index-of-max) of [R, C] — the lax.top_k /
+    jnp.argmax tie rule, expressed as two vector reduces."""
+    c = x.shape[-1]
+    cid = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    mx = jnp.max(x, axis=-1)
+    ix = jnp.min(jnp.where(x == mx[..., None], cid, c), axis=-1)
+    return mx, ix.astype(jnp.int32)
+
+
+def _topk(x, k: int):
+    """Iterative top-k over the last axis of [R, C]; bit-identical values
+    and indices to `jax.lax.top_k` (descending, ties by ascending index).
+    Selected lanes are retired with -inf, strictly below the NEG_INF used
+    for masking, so duplicates of NEG_INF still come out in index order."""
+    cid = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    vals, idxs = [], []
+    for _ in range(k):
+        mx, ix = _first_argmax(x)
+        vals.append(mx)
+        idxs.append(ix)
+        x = jnp.where(cid == ix[..., None], -jnp.inf, x)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def _onehot_gather(idx, table):
+    """Exact VMEM gather: rows ``table[idx]`` via a one-hot matmul.
+    idx: [R] int32 (out-of-range -> zero row); table: [C, d]."""
+    c = table.shape[0]
+    oh = (jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], c), 1)
+          == idx[:, None]).astype(jnp.float32)
+    return jax.lax.dot_general(oh, table.astype(jnp.float32),
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _dot(a, b):
+    """[R, d] x [C, d] -> [R, C] f32 contraction over the trailing dim."""
+    return jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _softmax(x):
+    """Replicates jax.nn.softmax(x, axis=-1) op-for-op (bit-parity with
+    the XLA oracle's landmark-value softmax)."""
+    mx = jnp.max(x, axis=-1, keepdims=True)
+    un = jnp.exp(x - mx)
+    return un / jnp.sum(un, axis=-1, keepdims=True)
+
+
+def _partial(s, p_zero):
+    """`combine.Partial` statistics of pre-masked scores [R, C]:
+    (m [R], l [R], p [R, C]); ``p_zero`` masks the zeroed lanes exactly as
+    the oracle does (scores == NEG_INF or an explicit mask)."""
+    m = jnp.max(s, axis=-1)
+    safe = jnp.where(m == NEG_INF, 0.0, m)
+    p = jnp.exp(s - safe[:, None])
+    p = jnp.where(p_zero, 0.0, p)
+    return m, jnp.sum(p, axis=-1), p
+
+
+def _chunk_kernel(pt_ref, t0_ref, nv_ref, ntr_ref, act_ref,      # SMEM
+                  q_ref, k_ref, v_ref, lmq_ref, lmv_ref, ei_ref, ev_ref,
+                  qs_ref, plmq_ref, pqs_ref, kpool_ref, vpool_ref,
+                  o_ref, lmq_o, lmv_o, ei_o, ev_o, qs_o, plmq_o, pqs_o,
+                  kp_o, vp_o,
+                  kctx, vctx, sem,
+                  *, window: int, k_width: int, n_route: int,
+                  external: bool):
+    s = pl.program_id(0)
+    h = pl.program_id(1)
+    w = window
+    nc = k_ref.shape[2]
+    m_slot = lmq_ref.shape[2]
+    g = q_ref.shape[2]
+    d = q_ref.shape[4]
+    ctx = m_slot * w
+    n_rows = kp_o.shape[0]
+
+    t0 = t0_ref[s]
+    nv = nv_ref[s]
+    ntr = ntr_ref[s]
+    act = act_ref[s] == 1
+    new_end = t0 + nv
+    m_train = ntr // w
+    m_a = jnp.maximum(m_train, 1)
+    w_a = jnp.maximum(ntr // m_a, 1)
+
+    # ---- 1. append the chunk's rows to the slot's pages (in place) ----
+    def append_row(n, _):
+        posn = t0 + n
+        page = pt_ref[s, jnp.clip(posn // w, 0, m_slot - 1)]
+        row = jnp.where(act & (n < nv), page * w + posn % w, n_rows - 1)
+        ck = pltpu.make_async_copy(k_ref.at[0, 0, n], kp_o.at[row, h], sem)
+        ck.start()
+        ck.wait()
+        cv = pltpu.make_async_copy(v_ref.at[0, 0, n], vp_o.at[row, h], sem)
+        cv.start()
+        cv.wait()
+        return 0
+
+    jax.lax.fori_loop(0, nc, append_row, 0)
+
+    # ---- 2. gather the slot's context (token order), patch own rows ----
+    def gather_page(mi, _):
+        page = pt_ref[s, mi]
+        base = pl.multiple_of(page * w, w)
+        ck = pltpu.make_async_copy(kp_o.at[pl.ds(base, w), h],
+                                   kctx.at[pl.ds(mi * w, w)], sem)
+        ck.start()
+        ck.wait()
+        cv = pltpu.make_async_copy(vp_o.at[pl.ds(base, w), h],
+                                   vctx.at[pl.ds(mi * w, w)], sem)
+        cv.start()
+        cv.wait()
+        return 0
+
+    jax.lax.fori_loop(0, m_slot, gather_page, 0)
+
+    def patch_row(n, _):
+        @pl.when(act & (n < nv))
+        def _():
+            kctx[pl.ds(t0 + n, 1)] = k_ref[0, 0, n][None].astype(kctx.dtype)
+            vctx[pl.ds(t0 + n, 1)] = v_ref[0, 0, n][None].astype(vctx.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, nc, patch_row, 0)
+
+    k_ctx = kctx[...].astype(jnp.float32)               # [ctx, d]
+    v_ctx = vctx[...].astype(jnp.float32)
+    q = q_ref[0, 0].astype(jnp.float32)                 # [G, nc, d]
+    ql = jnp.mean(q, axis=0)                            # [nc, d] group pool
+
+    nid = jax.lax.broadcasted_iota(jnp.int32, (m_slot, nc), 1)
+    lid = jax.lax.broadcasted_iota(jnp.int32, (m_slot, nc), 0)
+    pos_n = t0 + nid[0:1]                               # [1, nc] positions
+    valid_n = act & (nid[0:1] < nv)                     # [1, nc]
+    li = lid[:, 0:1]                                    # [M, 1] landmark ids
+    cid = jax.lax.broadcasted_iota(jnp.int32, (m_slot, ctx), 1)
+
+    # ---- 3. B system: the decode cache (w-sized windows) ----
+    win_b = (t0 + nid) // w
+    tok_b = (valid_n & (win_b == lid)).astype(jnp.float32)
+    sums_b = jax.lax.dot_general(tok_b, ql, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    m0 = t0 // w
+    resume_b = (li == m0) & (t0 % w != 0)
+    sums_b = sums_b + jnp.where(resume_b, qs_ref[0, 0][None], 0.0)
+    q_lm_b = (sums_b / w).astype(lmq_ref.dtype)         # [M, d]
+    wend = (li + 1) * w                                 # [M, 1]
+    qdone_b = act & (wend > t0) & (wend <= new_end)
+    lm_q_s = jnp.where(qdone_b, q_lm_b, lmq_ref[0, 0])
+
+    ends_b = jnp.where(li < m_train, (li + 1) * w_a, wend)
+    s_b = _dot(lm_q_s.astype(jnp.float32), k_ctx) / math.sqrt(d)
+    s_b = jnp.where(cid < ends_b, s_b, NEG_INF)
+    top_vals, top_loc = _topk(s_b, k_width)             # [M, K]
+    new_valid = (top_vals > NEG_INF / 2).astype(jnp.int32)
+    pt_vec = jnp.stack([pt_ref[s, j] for j in range(m_slot)])      # [M]
+    ctx_rows = (pt_vec[:, None] * w
+                + jax.lax.broadcasted_iota(jnp.int32, (m_slot, w), 1)
+                ).reshape(1, ctx)                       # [1, ctx]
+    mk_cid = jax.lax.broadcasted_iota(jnp.int32, (m_slot * k_width, ctx), 1)
+    new_rows = jnp.sum(
+        jnp.where(mk_cid == top_loc.reshape(-1)[:, None],
+                  jnp.broadcast_to(ctx_rows, (m_slot * k_width, ctx)), 0),
+        axis=-1).reshape(m_slot, k_width)
+    p_b = _softmax(s_b)
+    v_lm_b = jax.lax.dot_general(p_b, v_ctx, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32
+                                 ).astype(lmv_ref.dtype)
+    scommit = act & (ends_b > t0) & (ends_b <= new_end)
+    lm_v_s = jnp.where(scommit, v_lm_b, lmv_ref[0, 0])
+    ei_s = jnp.where(scommit, new_rows, ei_ref[0, 0])
+    ev_s = jnp.where(scommit, new_valid, ev_ref[0, 0])
+
+    m_new = new_end // w
+    q_sum_s = jnp.sum(jnp.where(li == m_new, sums_b, 0.0), axis=0)
+    q_sum_s = jnp.where(act, q_sum_s, qs_ref[0, 0])
+
+    # ---- 4. A system: the training head's n//m-sized prompt windows ----
+    is_tr_n = pos_n < ntr                               # [1, nc]
+    win_a = (t0 + nid) // w_a
+    tok_a = (valid_n & is_tr_n & (win_a == lid)).astype(jnp.float32)
+    sums_a = jax.lax.dot_general(tok_a, ql, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    m0_a = t0 // w_a
+    resume_a = (li == m0_a) & (t0 % w_a != 0) & (t0 < ntr)
+    sums_a = sums_a + jnp.where(resume_a, pqs_ref[0, 0][None], 0.0)
+    q_lm_a = (sums_a / w_a.astype(jnp.float32)).astype(plmq_ref.dtype)
+    ends_a = (li + 1) * w_a                             # [M, 1]
+    qdone_a = (act & (ends_a > t0) & (ends_a <= new_end) & (li < m_a))
+    pre_lm_q_s = jnp.where(qdone_a, q_lm_a, plmq_ref[0, 0])
+
+    # open-window sum: the resume contribution already sits inside
+    # sums_a's open row, so selecting that row reproduces tail + resume
+    open_a = new_end // w_a
+    pre_q_sum_s = jnp.sum(jnp.where(li == open_a, sums_a, 0.0), axis=0)
+    pre_q_sum_s = jnp.where(act, pre_q_sum_s, pqs_ref[0, 0])
+
+    s_a = _dot(pre_lm_q_s.astype(jnp.float32), k_ctx) / math.sqrt(d)
+    s_a = jnp.where((cid < ends_a) & (li < m_a), s_a, NEG_INF)
+    tv_a, tl_a = _topk(s_a, k_width)                    # [M, K]
+    val_a = (tv_a > NEG_INF / 2).astype(jnp.float32)
+    k_e_a = _onehot_gather(tl_a.reshape(-1), k_ctx)     # [M*K, d]
+    v_e_a = _onehot_gather(tl_a.reshape(-1), v_ctx)
+    p_a = _softmax(s_a)
+    v_lm_a = jax.lax.dot_general(p_a, v_ctx, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    # B expert rows: stored GLOBAL pool rows -> context positions via the
+    # slot's page table (no match -> ctx, i.e. a zero one-hot row; such
+    # rows are expert_valid-masked downstream either way)
+    ei_flat = ei_s.reshape(-1)                          # [M*K]
+    page_of = ei_flat // w
+    eq = pt_vec[None, :] == page_of[:, None]            # [M*K, M]
+    mid = jax.lax.broadcasted_iota(jnp.int32, eq.shape, 1)
+    ordn = jnp.min(jnp.where(eq, mid, m_slot), axis=-1)
+    b_cidx = jnp.where(ordn < m_slot, ordn * w + ei_flat % w, ctx)
+    k_e_b = _onehot_gather(b_cidx, k_ctx)               # [M*K, d]
+    v_e_b = _onehot_gather(b_cidx, v_ctx)
+    val_b = ev_s.reshape(-1).astype(jnp.float32)
+
+    # ---- 5. chunk attention: shared + routed + local, A/B per position --
+    q2 = q.reshape(g * nc, d)
+    rows_pos = jnp.broadcast_to(pos_n, (g, nc)).reshape(g * nc, 1)
+    rows_tr = jnp.broadcast_to(is_tr_n, (g, nc)).reshape(g * nc, 1)
+    lm_id = jax.lax.broadcasted_iota(jnp.int32, (g * nc, m_slot), 1)
+
+    def branch(lm_q_sys, v_lm_sys, k_e, v_e, val_e, avail):
+        """Shared + routed partials of one landmark system.
+        avail: [g*nc, M] bool; k_e/v_e: [M*K, d]; val_e: [M*K] f32."""
+        r = _dot(q2, lm_q_sys.astype(jnp.float32)) / math.sqrt(d)
+        r = jnp.where(avail, r, NEG_INF)
+        m_sh, l_sh, p_sh = _partial(r, r == NEG_INF)
+        o_sh = jax.lax.dot_general(p_sh, v_lm_sys,
+                                   (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        lg_parts, mask_parts, v_parts = [], [], []
+        r_route = r
+        for _ in range(n_route):
+            vj, ej = _first_argmax(r_route)             # [g*nc]
+            ok_j = vj > NEG_INF / 2
+            r_route = jnp.where(lm_id == ej[:, None], -jnp.inf, r_route)
+            oh = (lm_id == ej[:, None]).astype(jnp.float32)
+            k_sel = jax.lax.dot_general(
+                oh, k_e.reshape(m_slot, k_width * d),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32
+            ).reshape(g * nc, k_width, d)
+            v_sel = jax.lax.dot_general(
+                oh, v_e.reshape(m_slot, k_width * d),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32
+            ).reshape(g * nc, k_width, d)
+            vmask = jax.lax.dot_general(
+                oh, val_e.reshape(m_slot, k_width),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32) > 0.5
+            lg = jax.lax.dot_general(q2, k_sel,
+                                     (((1,), (2,)), ((0,), (0,)))
+                                     ) / math.sqrt(d)   # [g*nc, K]
+            lg_parts.append(lg)
+            mask_parts.append(vmask & ok_j[:, None])
+            v_parts.append(v_sel)
+        lg = jnp.concatenate(lg_parts, axis=-1)         # [g*nc, s*K]
+        mask = jnp.concatenate(mask_parts, axis=-1)
+        vals = jnp.concatenate(v_parts, axis=1)         # [g*nc, s*K, d]
+        lg = jnp.where(mask, lg, NEG_INF)
+        m_ro, l_ro, p_ro = _partial(lg, ~mask)
+        o_ro = jax.lax.dot_general(p_ro, vals,
+                                   (((1,), (1,)), ((0,), (0,))),
+                                   preferred_element_type=jnp.float32)
+        return (m_sh, l_sh, o_sh), (m_ro, l_ro, o_ro)
+
+    avail_a = ((jnp.transpose(ends_a) <= rows_pos + 1)
+               & (lm_id < m_a) & rows_tr)
+    avail_b = ((jnp.transpose(wend) <= rows_pos + (0 if external else 1))
+               & ~rows_tr)
+    sh_a, ro_a = branch(pre_lm_q_s, v_lm_a, k_e_a, v_e_a,
+                        val_a.reshape(-1), avail_a)
+    sh_b, ro_b = branch(lm_q_s, lm_v_s.astype(jnp.float32), k_e_b, v_e_b,
+                        val_b, avail_b)
+
+    # local branch: masked scores over the context (ctx index == position)
+    s_loc = _dot(q2, k_ctx) / math.sqrt(d)              # [g*nc, ctx]
+    crow = jax.lax.broadcasted_iota(jnp.int32, (g * nc, ctx), 1)
+    win_row = jnp.where(rows_tr, (rows_pos // w_a) * w_a,
+                        (rows_pos // w) * w)
+    lmask = (crow >= win_row) & (crow <= rows_pos)
+    s_loc = jnp.where(lmask, s_loc, NEG_INF)
+    m_lo, l_lo, p_lo = _partial(s_loc, s_loc == NEG_INF)
+    o_lo = jax.lax.dot_general(p_lo, v_ctx, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+    # per-position A/B selection, then the oracle's exact `combine`
+    sel = rows_tr[:, 0]
+    m1 = jnp.where(sel, sh_a[0], sh_b[0])
+    l1 = jnp.where(sel, sh_a[1], sh_b[1])
+    o1 = jnp.where(sel[:, None], sh_a[2], sh_b[2])
+    m2 = jnp.where(sel, ro_a[0], ro_b[0])
+    l2 = jnp.where(sel, ro_a[1], ro_b[1])
+    o2 = jnp.where(sel[:, None], ro_a[2], ro_b[2])
+    m_star = jnp.maximum(jnp.maximum(m1, m2), m_lo)
+    safe = jnp.where(m_star == NEG_INF, 0.0, m_star)
+    l_tot = jnp.zeros_like(l1)
+    o_tot = jnp.zeros_like(o1)
+    for m_p, l_p, o_p in ((m1, l1, o1), (m2, l2, o2), (m_lo, l_lo, o_lo)):
+        sc = jnp.exp(jnp.where(m_p == NEG_INF, NEG_INF, m_p - safe))
+        l_tot = l_tot + l_p * sc
+        o_tot = o_tot + o_p * sc[:, None]
+    denom = jnp.where(l_tot == 0.0, 1.0, l_tot)
+    out = jnp.where((l_tot == 0.0)[:, None], 0.0, o_tot / denom[:, None])
+    out = jnp.where(act, out, 0.0)
+
+    # ---- 6. write back ----
+    o_ref[0, 0] = out.reshape(g, nc, d).astype(o_ref.dtype)
+    lmq_o[0, 0] = lm_q_s
+    lmv_o[0, 0] = lm_v_s
+    ei_o[0, 0] = ei_s
+    ev_o[0, 0] = ev_s
+    qs_o[0, 0] = q_sum_s
+    plmq_o[0, 0] = pre_lm_q_s
+    pqs_o[0, 0] = pre_q_sum_s
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "k_width", "n_route", "external_finalize",
+                     "interpret"))
+def mita_chunk_prefill_fused(q, k, v, lm_q, lm_v, expert_idx, expert_valid,
+                             q_sum, pre_lm_q, pre_q_sum, k_pool, v_pool,
+                             page_table, t0, n_valid, n_train, active,
+                             window: int, k_width: int, n_route: int = 1,
+                             external_finalize: bool = True,
+                             interpret: bool = False):
+    """Fused batched chunk prefill (+ in-place KV append).
+
+    q: [S, Hkv, G, nc, d]; k/v: [S, Hkv, nc, d]; lm_q/lm_v/pre_lm_q:
+    [S, Hkv, M, d]; expert_idx: [S, Hkv, M, K] GLOBAL pool rows;
+    expert_valid: [S, Hkv, M, K] bool; q_sum/pre_q_sum: [S, Hkv, d] f32;
+    k_pool/v_pool: [R + 1, Hkv, d] (row R is the scratch row); page_table:
+    [S, M] i32; t0/n_valid/n_train: [S] i32; active: [S] bool.
+
+    Returns (out, lm_q, lm_v, expert_idx, expert_valid [i32], q_sum,
+    pre_lm_q, pre_q_sum, k_pool, v_pool) — the pools aliased in/out, every
+    other state tensor merged (inactive rows pass through bit-exactly).
+    See `core.mita_decode.mita_batched_chunk_prefill` for the semantics
+    this kernel must (and is pinned to) reproduce.
+    """
+    n_slots, hkv, g, nc, d = q.shape
+    m_slot, kw = expert_idx.shape[-2:]
+    assert kw == k_width
+    pdt = k_pool.dtype
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(n_slots, hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, nc, d), lambda s, h, *_: (s, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, nc, d), lambda s, h, *_: (s, h, 0, 0)),
+            pl.BlockSpec((1, 1, nc, d), lambda s, h, *_: (s, h, 0, 0)),
+            pl.BlockSpec((1, 1, m_slot, d), lambda s, h, *_: (s, h, 0, 0)),
+            pl.BlockSpec((1, 1, m_slot, d), lambda s, h, *_: (s, h, 0, 0)),
+            pl.BlockSpec((1, 1, m_slot, kw), lambda s, h, *_: (s, h, 0, 0)),
+            pl.BlockSpec((1, 1, m_slot, kw), lambda s, h, *_: (s, h, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda s, h, *_: (s, h, 0)),
+            pl.BlockSpec((1, 1, m_slot, d), lambda s, h, *_: (s, h, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda s, h, *_: (s, h, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),      # k_pool (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),      # v_pool (HBM)
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, nc, d), lambda s, h, *_: (s, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, m_slot, d), lambda s, h, *_: (s, h, 0, 0)),
+            pl.BlockSpec((1, 1, m_slot, d), lambda s, h, *_: (s, h, 0, 0)),
+            pl.BlockSpec((1, 1, m_slot, kw), lambda s, h, *_: (s, h, 0, 0)),
+            pl.BlockSpec((1, 1, m_slot, kw), lambda s, h, *_: (s, h, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda s, h, *_: (s, h, 0)),
+            pl.BlockSpec((1, 1, m_slot, d), lambda s, h, *_: (s, h, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda s, h, *_: (s, h, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((m_slot * window, d), pdt),
+            pltpu.VMEM((m_slot * window, d), pdt),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    kern = functools.partial(_chunk_kernel, window=window, k_width=k_width,
+                             n_route=n_route, external=external_finalize)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_slots, hkv, g, nc, d), pdt),
+            jax.ShapeDtypeStruct(lm_q.shape, lm_q.dtype),
+            jax.ShapeDtypeStruct(lm_v.shape, lm_v.dtype),
+            jax.ShapeDtypeStruct(expert_idx.shape, jnp.int32),
+            jax.ShapeDtypeStruct(expert_valid.shape, jnp.int32),
+            jax.ShapeDtypeStruct(q_sum.shape, jnp.float32),
+            jax.ShapeDtypeStruct(pre_lm_q.shape, pre_lm_q.dtype),
+            jax.ShapeDtypeStruct(pre_q_sum.shape, jnp.float32),
+            jax.ShapeDtypeStruct(k_pool.shape, pdt),
+            jax.ShapeDtypeStruct(v_pool.shape, pdt),
+        ],
+        # operand indices count the 5 scalar-prefetch args
+        input_output_aliases={15: 8, 16: 9},
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), t0.astype(jnp.int32),
+      n_valid.astype(jnp.int32), n_train.astype(jnp.int32),
+      active.astype(jnp.int32),
+      q, k.astype(pdt), v.astype(pdt), lm_q, lm_v,
+      expert_idx.astype(jnp.int32), expert_valid.astype(jnp.int32),
+      q_sum, pre_lm_q, pre_q_sum, k_pool, v_pool)

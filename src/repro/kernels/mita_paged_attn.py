@@ -27,8 +27,10 @@ permutations, ragged per-slot progress, and inactive slots).
 Per-program VMEM working set (budget-checked by `kernels.ops` before
 dispatch): q/out `2·G·d`, landmark tiles `2·M·d`, local page `2·w·d`, one
 expert KV tile `2·K·d`, plus the `M·K` expert index/bias tables.  The
-expert-row gathers are issued serially per row; double-buffering them is
-future work (the decode step is DMA-latency bound, not bandwidth bound).
+expert-row gathers are double-buffered by default (row i+1's copies are in
+flight while row i's drain — the decode step is DMA-latency bound, not
+bandwidth bound); ``REPRO_DMA_PIPELINE=0`` serializes them for debugging
+(`tests/test_kernel_oracle.py` pins parity in both modes).
 """
 
 from __future__ import annotations
@@ -66,9 +68,9 @@ def _paged_kernel(pt_ref, t_ref, act_ref, mcnt_ref,              # SMEM
                   q_ref, kn_ref, vn_ref, lmq_ref, lmv_ref,
                   ei_ref, eb_ref, kpool_ref, vpool_ref,          # pools: ANY
                   o_ref, kpout_ref, vpout_ref,
-                  kloc, vloc, ketile, vetile, sem,
+                  kloc, vloc, ketile, vetile, sem, psem,
                   *, window: int, n_route: int, fuse_append: bool,
-                  scale: float):
+                  pipeline: bool, scale: float):
     s = pl.program_id(0)
     h = pl.program_id(1)
     w = window
@@ -144,17 +146,45 @@ def _paged_kernel(pt_ref, t_ref, act_ref, mcnt_ref,              # SMEM
             rows = ei_ref[0, 0, pl.ds(e_gi, 1)][0]           # [K] global rows
             bias = eb_ref[0, 0, pl.ds(e_gi, 1)][0]           # [K] 0 / NEG_INF
 
-            def gather_row(kk, _):
+            def row_copies(kk, slot):
                 row = rows[kk]
-                ck = pltpu.make_async_copy(kpool_ref.at[row, h],
-                                           ketile.at[kk], sem)
+                return (pltpu.make_async_copy(kpool_ref.at[row, h],
+                                              ketile.at[kk],
+                                              psem.at[slot, 0]),
+                        pltpu.make_async_copy(vpool_ref.at[row, h],
+                                              vetile.at[kk],
+                                              psem.at[slot, 1]))
+
+            if pipeline:
+                # double-buffered row walk: row kk+1's copies are in
+                # flight while row kk's drain (distinct destination rows,
+                # alternating semaphore pairs) — hides the per-row DMA
+                # latency the serial walk pays K times
+                ck, cv = row_copies(0, 0)
                 ck.start()
-                ck.wait()
-                cv = pltpu.make_async_copy(vpool_ref.at[row, h],
-                                           vetile.at[kk], sem)
                 cv.start()
-                cv.wait()
-                return 0
+
+                def gather_row(kk, _):
+                    @pl.when(kk + 1 < k_width)
+                    def _():
+                        nk, nv = row_copies(kk + 1, (kk + 1) % 2)
+                        nk.start()
+                        nv.start()
+                    wk, wv = row_copies(kk, kk % 2)
+                    wk.wait()
+                    wv.wait()
+                    return 0
+            else:
+                def gather_row(kk, _):
+                    ck = pltpu.make_async_copy(kpool_ref.at[rows[kk], h],
+                                               ketile.at[kk], sem)
+                    ck.start()
+                    ck.wait()
+                    cv = pltpu.make_async_copy(vpool_ref.at[rows[kk], h],
+                                               vetile.at[kk], sem)
+                    cv.start()
+                    cv.wait()
+                    return 0
 
             jax.lax.fori_loop(0, k_width, gather_row, 0)
             s_e = jax.lax.dot_general(
@@ -182,7 +212,8 @@ def _paged_kernel(pt_ref, t_ref, act_ref, mcnt_ref,              # SMEM
 
 @functools.partial(
     jax.jit,
-    static_argnames=("window", "n_route", "fuse_append", "interpret"))
+    static_argnames=("window", "n_route", "fuse_append", "pipeline",
+                     "interpret"))
 def mita_paged_attention(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
                          lm_q: jax.Array, lm_v: jax.Array,
                          expert_idx: jax.Array, expert_valid: jax.Array,
@@ -190,7 +221,8 @@ def mita_paged_attention(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
                          page_table: jax.Array, t: jax.Array,
                          active: jax.Array, m_cnt: jax.Array,
                          window: int, n_route: int = 1,
-                         fuse_append: bool = True, interpret: bool = False):
+                         fuse_append: bool = True, pipeline: bool = True,
+                         interpret: bool = False):
     """Fused paged-decode attention (+ optional in-place KV append).
 
     q: [S, Hkv, G, d]; k_new/v_new: [S, Hkv, d];
@@ -238,10 +270,11 @@ def mita_paged_attention(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
             pltpu.VMEM((k_width, d), k_pool.dtype),
             pltpu.VMEM((k_width, d), v_pool.dtype),
             pltpu.SemaphoreType.DMA(()),
+            pltpu.SemaphoreType.DMA((2, 2)),   # expert-row pipeline pairs
         ],
     )
     kern = functools.partial(_paged_kernel, window=window, n_route=n_route,
-                             fuse_append=fuse_append,
+                             fuse_append=fuse_append, pipeline=pipeline,
                              scale=1.0 / math.sqrt(d))
     out, kp, vp = pl.pallas_call(
         kern,

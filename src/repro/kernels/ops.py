@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attn as _fa
+from repro.kernels import mita_chunk_prefill as _mcp
 from repro.kernels import mita_expert_attn as _mea
 from repro.kernels import mita_paged_attn as _mpa
 
@@ -184,7 +185,80 @@ def paged_decode_attend(q, k_new, v_new, lm_q, lm_v, expert_idx,
         q, k_new, v_new, lm_q, lm_v, expert_idx, expert_valid,
         k_pool, v_pool, page_table, t, active, m_cnt,
         window=window, n_route=n_route, fuse_append=fuse_append,
-        interpret=interpret)
+        pipeline=dma_pipeline(), interpret=interpret)
+
+
+def dma_pipeline() -> bool:
+    """REPRO_DMA_PIPELINE: double-buffer the paged-decode kernel's per-row
+    routed-expert DMAs (prefetch row i+1 while row i's copy drains).
+    Default on; set to 0 to serialize the copies (debug / parity bisect)."""
+    return os.environ.get("REPRO_DMA_PIPELINE", "1") != "0"
+
+
+# ------------------------------------------------ fused chunk-prefill attn --
+
+def chunk_prefill_vmem_bytes(nc: int, window: int, m: int, k_width: int,
+                             g: int, d: int, itemsize: int = 4) -> int:
+    """Per-program VMEM working set of the fused chunk-prefill kernel: the
+    gathered slot context, the chunk q/k/v + out blocks, both landmark
+    systems, the expert K/V tiles, and the f32 score rows
+    (`kernels.mita_chunk_prefill` docstring)."""
+    ctx = m * window
+    tiles = (2 * ctx * d            # gathered context (k, v)
+             + (2 * g + 2) * nc * d  # chunk q/k/v + out
+             + 8 * m * d            # lm_q/lm_v/pre_lm_q in+out tiles
+             + 2 * m * k_width * d  # expert K/V tiles
+             + 4 * d)               # q_sum / pre_q_sum in+out
+    scores = (2 * m + g * nc) * ctx  # landmark (A+B) + local score rows
+    onehot = 2 * m * k_width * ctx   # [M*K, ctx] one-hot gather + iota
+    tables = m * k_width * (4 + 4)   # expert_idx + validity
+    return tiles * itemsize + (scores + onehot) * 4 + tables
+
+
+def use_prefill_kernel(impl: str, *, nc: int, window: int, m: int,
+                       k_width: int, g: int, d: int, itemsize: int = 4,
+                       budget: int = 0) -> bool:
+    """Chunk-prefill dispatch: fused Pallas kernel vs the XLA gather oracle.
+
+    Same tri-state as `use_paged_kernel` (``DecodeConfig.prefill_impl``),
+    with a process-wide override via ``REPRO_PREFILL_IMPL`` — the serving
+    engine never retraces on an impl flip because the choice is made at
+    trace time.
+    """
+    impl = os.environ.get("REPRO_PREFILL_IMPL", impl)
+    if impl == "xla":
+        return False
+    if impl not in ("auto", "kernel"):
+        raise ValueError(f"unknown prefill impl {impl!r}")
+    fits = chunk_prefill_vmem_bytes(nc, window, m, k_width, g, d,
+                                    itemsize) <= (budget
+                                                  or vmem_budget_bytes())
+    if impl == "kernel":
+        return fits
+    return on_tpu() and fits
+
+
+def batched_chunk_prefill(q, k, v, lm_q, lm_v, expert_idx, expert_valid,
+                          q_sum, pre_lm_q, pre_q_sum, k_pool, v_pool,
+                          page_table, t0, n_valid, n_train, active, *,
+                          window: int, k_width: int, n_route: int,
+                          external_finalize: bool,
+                          interpret: Optional[bool] = None):
+    """Kernel-backed batched chunk prefill: append + landmark build +
+    three-branch chunk attention for every active row in one kernel.
+
+    Operates on COMPACT per-row slot state ([P, ...] — the caller gathers
+    rows by slot id and scatters the returned updates back); the pools are
+    aliased in/out.  See `kernels.mita_chunk_prefill
+    .mita_chunk_prefill_fused` for the full contract.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    return _mcp.mita_chunk_prefill_fused(
+        q, k, v, lm_q, lm_v, expert_idx, expert_valid, q_sum, pre_lm_q,
+        pre_q_sum, k_pool, v_pool, page_table, t0, n_valid, n_train,
+        active, window=window, k_width=k_width, n_route=n_route,
+        external_finalize=external_finalize, interpret=interpret)
 
 
 def routed_expert_partial(q_sorted, assign, k_e, v_e, valid,

@@ -13,7 +13,7 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --batch 4 --prompt-len 128 --gen 32 [--engine continuous] \
       [--prefill-chunk 256] [--priority 0] [--reserve-pages 2] \
-      [--sample-device fused]
+      [--sample-device fused] [--prefill-mode batched] [--prefill-impl auto]
 
 ``--prefill-chunk N`` (continuous engine) admits prompts in N-token chunks
 interleaved with the decode batch and enables priority preemption;
@@ -129,6 +129,17 @@ def main(argv=None):
                     help="continuous: sample on the host from downloaded "
                          "[S, V] logits, or inside the fused decode "
                          "program (downloads [S] int32 tokens per step)")
+    ap.add_argument("--prefill-mode", choices=("batched", "per-job"),
+                    default="batched",
+                    help="continuous+chunked: advance ALL prefilling slots "
+                         "in one dispatch per step (batched), or one job "
+                         "per step in its own dispatch (per-job, the "
+                         "legacy baseline)")
+    ap.add_argument("--prefill-impl", choices=("auto", "kernel", "xla"),
+                    default="auto",
+                    help="chunk-prefill backend: fused Pallas kernel when "
+                         "it fits the VMEM budget (auto/kernel) or the XLA "
+                         "oracle; REPRO_PREFILL_IMPL overrides")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch, smoke=args.smoke)
@@ -136,6 +147,10 @@ def main(argv=None):
         raise SystemExit("serve.py drives decoder LMs; use examples/ for "
                          "whisper/ssm serving")
     cfg = arch.model
+    if args.prefill_impl != "auto":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, attn=dataclasses.replace(
+            cfg.attn, prefill_impl=args.prefill_impl))
     w = cfg.attn.window
 
     params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
@@ -162,7 +177,8 @@ def main(argv=None):
             n_pages=2 * args.batch * pages,
             prefill_chunk=args.prefill_chunk,
             reserve_pages=args.reserve_pages,
-            sample_device=args.sample_device))
+            sample_device=args.sample_device,
+            prefill_mode=args.prefill_mode))
         reqs = [Request(rid=i, prompt=prompts[i % len(prompts)],
                         max_new_tokens=args.gen,
                         temperature=args.temperature,
@@ -176,7 +192,9 @@ def main(argv=None):
         print(f"continuous: {n_req} requests ({args.prompt_len}+{args.gen}) "
               f"in {dt:.3f}s — {total / dt:.1f} tok/s, "
               f"{eng.steps} fused steps, batch={args.batch}, "
-              f"chunks={st['chunks']}, preemptions={st['preemptions']}, "
+              f"chunks={st['chunks']} in "
+              f"{st['prefill_dispatches']} dispatches, "
+              f"preemptions={st['preemptions']}, "
               f"pages_hw={st['pages_high_water']}")
         sample = np.stack([done[b].tokens for b in range(min(2, len(done)))])
     print("sample generations (token ids):")

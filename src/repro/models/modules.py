@@ -53,6 +53,10 @@ class AttnConfig:
     local_window: int = 2048  # for backend == "local" (recurrentgemma)
     enc_window: int = 0       # enc-dec: encoder-side window (0 = same)
     external_finalize: bool = False  # serve-loop landmark finalize (opt)
+    # Chunk-prefill backend: "auto" (fused Pallas kernel on TPU when its
+    # working set fits the VMEM budget; XLA elsewhere), "kernel", "xla".
+    # Overridable per-process via REPRO_PREFILL_IMPL (kernels.ops).
+    prefill_impl: str = "auto"
 
     def mita_cfg(self, n: int, bidir: bool = False) -> MiTAConfig:
         m = max(1, n // self.window)

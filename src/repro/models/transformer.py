@@ -114,7 +114,8 @@ def lm_loss(params: Params, batch: dict[str, jax.Array], cfg: nn.ModelConfig,
 def _decode_cfg(cfg: nn.ModelConfig) -> mdec.DecodeConfig:
     return mdec.DecodeConfig(window=cfg.attn.window, k=cfg.attn.k,
                              s=cfg.attn.s,
-                             external_finalize=cfg.attn.external_finalize)
+                             external_finalize=cfg.attn.external_finalize,
+                             prefill_impl=cfg.attn.prefill_impl)
 
 
 def lm_finalize_states(states, cfg: nn.ModelConfig):
@@ -350,6 +351,25 @@ def pack_prefill_into_states(states, prefill_states, slot: jax.Array,
         in_axes=(0, 0))(states, prefill_states)
 
 
+def _chunk_block_body(lp, h, st, cfg: nn.ModelConfig, positions, attn):
+    """Shared per-layer body of the chunk-prefill forwards: norm -> qkv ->
+    paged chunk attention (``attn`` closure returns o [B, Hkv, G, nc, d])
+    -> output projection -> FFN residual."""
+    b, nc, _ = h.shape
+    ct = cfg.compute_dtype
+    xin = nn.rms_norm(h, lp["ln1"])
+    q, k, v = nn._qkv(lp["attn"], xin, cfg, positions)
+    o, st = attn(st, q, k[:, :, 0], v[:, :, 0])
+    o = jnp.moveaxis(o, 3, 1).reshape(b, nc, cfg.n_heads * cfg.dh)
+    h = h + o @ lp["attn"]["wo"].astype(ct)
+    xn = nn.rms_norm(h, lp["ln2"])
+    if cfg.n_experts:
+        f, _ = moe_apply(lp["moe"], xn, cfg)
+    else:
+        f = nn.swiglu_apply(lp["ffn"], xn, cfg)
+    return h + f, st
+
+
 def lm_prefill_chunk(params: Params, states, tokens: jax.Array,
                      slot: jax.Array, page_table_row: jax.Array,
                      t0: jax.Array, n_valid: jax.Array, n_train: jax.Array,
@@ -376,28 +396,71 @@ def lm_prefill_chunk(params: Params, states, tokens: jax.Array,
     pos = t0 + jnp.arange(nc)
     x = nn.embed(params["emb"], tokens[None], cfg)
     dcfg = _decode_cfg(cfg)
-    ct = cfg.compute_dtype
+
+    def attn(st, q, k, v):
+        o, st = mdec.mita_chunk_prefill(
+            st, q[0], k[0], v[0], page_table_row, slot, t0, n_valid,
+            n_train, dcfg)
+        return o[None], st
 
     def body(h, layer):
         lp, st = layer
-        xin = nn.rms_norm(h, lp["ln1"])
-        q, k, v = nn._qkv(lp["attn"], xin, cfg, pos)
-        o, st = mdec.mita_chunk_prefill(
-            st, q[0], k[0, :, 0], v[0, :, 0], page_table_row, slot,
-            t0, n_valid, n_train, dcfg)
-        o = jnp.moveaxis(o, 2, 0).reshape(1, nc, cfg.n_heads * cfg.dh)
-        h = h + o @ lp["attn"]["wo"].astype(ct)
-        xn = nn.rms_norm(h, lp["ln2"])
-        if cfg.n_experts:
-            f, _ = moe_apply(lp["moe"], xn, cfg)
-        else:
-            f = nn.swiglu_apply(lp["ffn"], xn, cfg)
-        return h + f, st
+        return _chunk_block_body(lp, h, st, cfg, pos, attn)
 
     x, new_states = jax.lax.scan(body, x, (params["blocks"], states),
                                  unroll=cfg.scan_unroll)
     x = nn.rms_norm(x, params["ln_f"])
     last = jnp.take(x[0], n_valid - 1, axis=0)
+    return nn.unembed(params["emb"], last, cfg), new_states
+
+
+def lm_prefill_chunks(params: Params, states, tokens: jax.Array,
+                      job_active: jax.Array, page_table: jax.Array,
+                      slots: jax.Array, t0: jax.Array, n_valid: jax.Array,
+                      n_train: jax.Array, cfg: nn.ModelConfig):
+    """Prefill one chunk for EVERY active prefilling slot in one program.
+
+    Rows are jobs: the engine packs the currently-prefilling slots into a
+    fixed width P (padded with distinct idle slots, ``job_active`` False),
+    so one dispatch advances them all and compute scales with P, not the
+    slot-batch width.
+
+    Args:
+      tokens:     [P, nc] int32 chunk tokens per row (zero-padded past
+                  each row's ``n_valid``; garbage for inactive rows).
+      job_active: [P] bool — which rows advance a chunk this dispatch.
+      page_table: [P, M] int32 — each row's slot's page-table row.
+      slots:      [P] int32 UNIQUE slot ids; t0/n_valid/n_train: [P] int32
+                  (see `core.mita_decode.mita_batched_chunk_prefill`).
+
+    Returns (logits [P, V] at each row's position ``t0 + n_valid - 1``,
+    updated states).  ONE compiled shape per (chunk length, row width,
+    pages-per-slot) serves every engine step — the serving engine's
+    prefill work per step is one dispatch, not one per job.  Inside, the
+    attention dispatches between the fused Pallas chunk-prefill kernel and
+    the XLA path (`kernels.ops.use_prefill_kernel` via
+    ``cfg.attn.prefill_impl``).
+    """
+    nc = tokens.shape[1]
+    pos = t0[:, None] + jnp.arange(nc)                  # [P, nc]
+    x = nn.embed(params["emb"], tokens, cfg)
+    dcfg = _decode_cfg(cfg)
+
+    def attn(st, q, k, v):
+        return mdec.mita_batched_chunk_prefill(
+            st, q, k, v, page_table, slots, t0, n_valid, n_train,
+            job_active, dcfg)
+
+    def body(h, layer):
+        lp, st = layer
+        return _chunk_block_body(lp, h, st, cfg, pos[:, None, None, :],
+                                 attn)
+
+    x, new_states = jax.lax.scan(body, x, (params["blocks"], states),
+                                 unroll=cfg.scan_unroll)
+    x = nn.rms_norm(x, params["ln_f"])
+    last = jnp.take_along_axis(
+        x, jnp.maximum(n_valid - 1, 0)[:, None, None], axis=1)[:, 0]
     return nn.unembed(params["emb"], last, cfg), new_states
 
 

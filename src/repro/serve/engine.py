@@ -7,11 +7,20 @@ state machine, and the full program inventory):
   * ``prefill+pack`` — `lm_prefill` over an admission group (same-length
     waiting requests, power-of-two sizes) packed straight into the slots'
     pages; compiled per (window-aligned prompt capacity, group size);
-  * ``chunk prefill`` — `lm_prefill_chunk`: ONE program per configured
-    chunk length that prefills any chunk of any request (chunk index,
-    resume point, and validity are data).  Enabled by
-    ``EngineConfig.prefill_chunk``; long prompts then admit incrementally,
-    interleaved with the decode batch, instead of stalling it;
+    monolithic mode (``prefill_chunk = 0``) only;
+  * ``batched chunk prefill`` — `lm_prefill_chunks`: ONE program per
+    configured chunk length that advances EVERY currently-prefilling
+    slot's chunk in a single dispatch per engine step (which slots
+    advance, chunk index, resume point, and validity are data — the
+    compiled shape is independent of how many requests are mid-prefill).
+    Enabled by ``EngineConfig.prefill_chunk``; long prompts then admit
+    incrementally, interleaved with the decode batch, instead of stalling
+    it.  Non-window-aligned prompts ride the same program (the monolithic
+    head's n//m landmark quirk is per-slot data).  Inside, the chunk
+    dispatches between the fused Pallas chunk-prefill kernel and the XLA
+    path (`kernels.ops.use_prefill_kernel`).
+    ``EngineConfig.prefill_mode = "per-job"`` keeps the PR-2 baseline
+    (`lm_prefill_chunk`, one job per step, monolithic non-aligned head);
   * ``decode``       — `lm_paged_decode_step`, ONE program for the whole
     slot batch regardless of per-request progress (per-slot positions, page
     tables, and activity are data, not shape).  The window-boundary
@@ -103,13 +112,36 @@ def _prefill_pack_fn(cfg: ModelConfig, cap: int, k: int) -> Callable:
 
 @functools.lru_cache(maxsize=None)
 def _chunk_prefill_fn(cfg: ModelConfig, chunk: int, m_slot: int) -> Callable:
-    """Chunked prefill program: ONE compiled shape per (chunk length,
-    pages-per-slot) serves every chunk of every request — resume point,
-    validity, and the training/decode semantics boundary are data."""
+    """Per-job chunked prefill program (``prefill_mode="per-job"``): ONE
+    compiled shape per (chunk length, pages-per-slot) serves every chunk of
+    every request — resume point, validity, and the training/decode
+    semantics boundary are data."""
 
     def run(p, st, toks, slot, pt_row, t0, n_valid, n_train):
         return tfm.lm_prefill_chunk(p, st, toks, slot, pt_row, t0, n_valid,
                                     n_train, cfg)
+
+    return jax.jit(run, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_chunk_prefill_fn(cfg: ModelConfig, chunk: int,
+                              m_slot: int) -> Callable:
+    """Batched chunked prefill program (``prefill_mode="batched"``, the
+    default): EVERY currently-prefilling slot advances one chunk in ONE
+    dispatch — which slots advance, their resume points, and validity are
+    data, so the engine issues exactly one prefill dispatch per step no
+    matter how many requests are mid-prefill.  Rows are packed to power-
+    of-two widths (compute scales with the number of prefilling jobs;
+    ≤ log₂(slots)+1 compiled variants, the same bound as monolithic
+    admission grouping).  Non-aligned prompts ride the same program (the
+    n//m landmark quirk is per-slot data;
+    `core.mita_decode.mita_batched_chunk_prefill`), so no monolithic
+    prefill head remains in chunked mode."""
+
+    def run(p, st, toks, job_active, pt, slots, t0, n_valid, n_train):
+        return tfm.lm_prefill_chunks(p, st, toks, job_active, pt, slots,
+                                     t0, n_valid, n_train, cfg)
 
     return jax.jit(run, donate_argnums=(1,))
 
@@ -180,7 +212,15 @@ class EngineConfig:
     PR-2 path); ``"fused"`` samples inside the decode program
     (`models.transformer.sample_tokens`) and downloads [S] int32 tokens —
     same greedy argmax, same (rid, index)-derived categorical keys, so
-    tokens are bit-identical across the two modes."""
+    tokens are bit-identical across the two modes.
+
+    ``prefill_mode`` (chunked mode only): ``"batched"`` (default) advances
+    EVERY prefilling slot one chunk per step in ONE fused dispatch (a slot
+    mask, same compiled shape regardless of how many slots are prefilling)
+    and serves non-window-aligned prompts through the same chunk program;
+    ``"per-job"`` is the PR-2 baseline — at most one job advances one
+    chunk per step in its own dispatch, non-aligned prompts take the
+    monolithic head."""
     n_slots: int = 8                # decode batch width
     n_pages: int = 64               # shared pool size (pages of `window`)
     pages_per_slot: int = 8         # max context per request, in pages
@@ -188,6 +228,7 @@ class EngineConfig:
     prefill_chunk: int = 0          # chunk length (0 = monolithic prefill)
     reserve_pages: int = 0          # appends-only page reserve
     sample_device: str = "host"     # host | fused (on-device sampling)
+    prefill_mode: str = "batched"   # batched | per-job (chunk dispatch)
 
 
 class _PageAllocator:
@@ -274,6 +315,8 @@ class ServingEngine:
             raise ValueError("reserve_pages must be >= 0")
         if ecfg.sample_device not in ("host", "fused"):
             raise ValueError(f"unknown sample_device {ecfg.sample_device!r}")
+        if ecfg.prefill_mode not in ("batched", "per-job"):
+            raise ValueError(f"unknown prefill_mode {ecfg.prefill_mode!r}")
         self.params = params
         self.cfg = dataclasses.replace(
             cfg, attn=dataclasses.replace(
@@ -312,6 +355,7 @@ class ServingEngine:
         self.steps = 0
         self.n_preemptions = 0
         self.n_chunks = 0
+        self.prefill_dispatches = 0
         self.step_times: list[float] = []
         self._seq = 0
 
@@ -335,6 +379,10 @@ class ServingEngine:
     def _chunk_fn(self) -> Callable:
         return _chunk_prefill_fn(self.cfg, self.ecfg.prefill_chunk,
                                  self.ecfg.pages_per_slot)
+
+    def _batched_chunk_fn(self) -> Callable:
+        return _batched_chunk_prefill_fn(self.cfg, self.ecfg.prefill_chunk,
+                                         self.ecfg.pages_per_slot)
 
     def _sample(self, logits: np.ndarray, req: Request, index: int) -> int:
         if req.temperature <= 0.0:
@@ -374,27 +422,47 @@ class ServingEngine:
     def warmup(self, prompt_lens: list[int]) -> None:
         """Compile every program the serving loop can hit for the given
         prompt lengths: the fused decode step, the chunk-prefill program
-        (chunked mode), and each monolithic prefill variant.  Runs on one
-        scratch engine so this engine's pool/scheduler state is untouched
-        (compile caches are shared module-wide)."""
+        variants (chunked mode: per-job has one; batched has one per
+        power-of-two row width, exercised by submitting that many probes
+        at once so they prefill concurrently), and each monolithic prefill
+        variant.  Runs on one scratch engine so this engine's
+        pool/scheduler state is untouched (compile caches are shared
+        module-wide)."""
         scratch = ServingEngine(self.params, self.cfg, self.ecfg)
-        k_max = 1 if self.ecfg.prefill_chunk else self.ecfg.n_slots
+        k_max = 1 if (self.ecfg.prefill_chunk
+                      and self.ecfg.prefill_mode == "per-job") \
+            else self.ecfg.n_slots
+        if self.ecfg.prefill_chunk and self.ecfg.prefill_mode == "batched":
+            # no compiled program depends on prompt length in batched
+            # chunked mode (length, resume point, and the n//m quirk are
+            # data) — one representative length covers every width variant
+            prompt_lens = [max(prompt_lens)] if prompt_lens else []
         for n in sorted(set(prompt_lens)):
             # probe requests claim the MINIMAL page budget a real request
             # of this length would (max_new=1), so warmup never rejects a
             # length the engine can actually serve
             gen = 2 if mdec.window_aligned(n + 2, self.w) // self.w \
                 <= self.ecfg.pages_per_slot else 1
+            sizes = []
             k = 1
             while k <= k_max:
+                sizes.append(k)
+                k *= 2
+            if sizes[-1] != k_max:
+                # non-power-of-two slot counts cap the batched prefill row
+                # width at k_max itself — compile that variant too
+                sizes.append(k_max)
+            for k in sizes:
                 scratch.run([Request(rid=-1 - i, prompt=np.zeros(n, np.int32),
                                      max_new_tokens=gen) for i in range(k)])
-                k *= 2
 
     def stats(self) -> dict[str, float]:
-        """Scheduler counters: fused steps, prefill chunks run, preemptions,
-        and the allocator's high-water / reserve accounting."""
+        """Scheduler counters: fused steps, prefill chunks run (per slot),
+        prefill dispatches issued (batched mode: ≤ 1 per step regardless of
+        how many slots are prefilling), preemptions, and the allocator's
+        high-water / reserve accounting."""
         return {"steps": self.steps, "chunks": self.n_chunks,
+                "prefill_dispatches": self.prefill_dispatches,
                 "preemptions": self.n_preemptions,
                 "pages_high_water": self.alloc.high_water,
                 "reserve_dips": self.alloc.reserve_dips}
@@ -416,8 +484,20 @@ class ServingEngine:
                 f"(max context {self.ecfg.pages_per_slot * self.w})")
         if req.rid in self._inflight:
             raise ValueError(f"request id {req.rid} is already in flight")
-        if not self.ecfg.prefill_chunk or len(req.prompt) % self.w:
-            self._check_prefill_traceable(len(req.prompt))
+        n = len(req.prompt)
+        if not self.ecfg.prefill_chunk or (
+                self.ecfg.prefill_mode == "per-job" and n % self.w):
+            self._check_prefill_traceable(n)
+        elif n % self.w:
+            # batched chunked mode serves non-aligned prompts through the
+            # chunk program, which replicates the training head's n//m
+            # landmark pooling — representable only when m divides n
+            # (pool1d's constraint, the same lengths the static path serves)
+            if n % max(1, n // self.w):
+                raise ValueError(
+                    f"prompt length {n} is not servable by the chunked "
+                    f"prefill path (window {self.w}): the training-path "
+                    f"landmark pooling needs n % (n // window) == 0")
         self._inflight.add(req.rid)
         self._seq += 1
         self._enqueue(_WaitEntry(req=req, seq=self._seq))
@@ -519,12 +599,13 @@ class ServingEngine:
 
     def _first_chunk_pages(self, entry: _WaitEntry) -> int:
         """Pages the first prefill dispatch of this request needs: one
-        chunk's worth, or the whole (window-aligned) prompt when the prompt
-        is not window-aligned and must go through the monolithic head."""
+        chunk's worth — or, in per-job mode, the whole (window-aligned)
+        prompt when the prompt is not window-aligned and must go through
+        the monolithic head (batched mode chunks every prompt)."""
         n_train = len(entry.req.prompt)
         n_total = n_train if entry.resume is None \
             else n_train + len(entry.resume[0]) - 1
-        if n_train % self.w:
+        if self.ecfg.prefill_mode == "per-job" and n_train % self.w:
             return mdec.window_aligned(n_train, self.w) // self.w
         first = min(self.ecfg.prefill_chunk, n_total)
         return mdec.window_aligned(first, self.w) // self.w
@@ -670,11 +751,81 @@ class ServingEngine:
         return True
 
     def _advance_prefill(self, now: float) -> None:
+        """Advance prefilling jobs: ONE fused dispatch per engine step.
+
+        Batched mode (default): every prefilling slot that can grow its
+        pages advances one chunk in a single `lm_prefill_chunks` dispatch
+        over a slot mask.  Per-job mode (the PR-2 baseline): only the
+        best-keyed job advances, in its own dispatch."""
+        if not self.prefilling:
+            return
+        if self.ecfg.prefill_mode == "batched":
+            self._advance_prefill_batched(now)
+        else:
+            self._advance_prefill_per_job(now)
+
+    def _advance_prefill_batched(self, now: float) -> None:
+        """One dispatch advances EVERY prefilling job one chunk.  Jobs that
+        cannot claim their next pages are masked out of the dispatch (and
+        may have been self-preempted by `_grow_pages`), not serialized.
+        Page growth runs best-key-first, so the victim order of `_grow
+        _pages` (globally worst key first) can never evict a job already
+        approved this step."""
+        chunk = self.ecfg.prefill_chunk
+        advancing: list[tuple[int, _PrefillJob, int]] = []
+        for slot, job in sorted(self.prefilling.items(),
+                                key=lambda kv: kv[1].entry.key):
+            if self.prefilling.get(slot) is not job:
+                continue              # evicted while an earlier job grew
+            t0 = job.done
+            nv = min(chunk, len(job.toks) - t0)
+            target = mdec.window_aligned(t0 + nv, self.w) // self.w
+            if not self._grow_pages(slot, target):
+                continue
+            if self.prefilling.get(slot) is job:
+                advancing.append((slot, job, nv))
+        if not advancing:
+            return
+        # rows are jobs, packed to a power-of-two width so compute scales
+        # with the number of prefilling requests (log2(slots)+1 compiled
+        # variants — the monolithic admission-grouping bound).  Padding
+        # rows borrow DISTINCT idle slot ids (inactive rows write their
+        # slot's state back bit-identically), so the state scatter never
+        # sees duplicate indices.
+        p_w = 1 << (len(advancing) - 1).bit_length() if advancing else 1
+        p_w = min(p_w, self.ecfg.n_slots)
+        used = {s for s, _, _ in advancing}
+        pads = [s for s in range(self.ecfg.n_slots) if s not in used]
+        slot_ids = [s for s, _, _ in advancing] + pads[: p_w - len(advancing)]
+        toks = np.zeros((p_w, chunk), np.int32)
+        job_active = np.zeros(p_w, bool)
+        t0s = np.zeros(p_w, np.int32)
+        nvs = np.zeros(p_w, np.int32)
+        ntr = np.ones(p_w, np.int32)
+        for i, (slot, job, nv) in enumerate(advancing):
+            toks[i, :nv] = job.toks[job.done:job.done + nv]
+            job_active[i] = True
+            t0s[i] = job.done
+            nvs[i] = nv
+            ntr[i] = job.n_train
+        logits, self.states = self._batched_chunk_fn()(
+            self.params, self.states, jnp.asarray(toks),
+            jnp.asarray(job_active),
+            jnp.asarray(self.page_table[slot_ids]),
+            jnp.asarray(slot_ids, jnp.int32).reshape(p_w),
+            jnp.asarray(t0s), jnp.asarray(nvs), jnp.asarray(ntr))
+        self.n_chunks += len(advancing)
+        self.prefill_dispatches += 1
+        logits = np.asarray(logits)
+        for i, (slot, job, nv) in enumerate(advancing):
+            job.done += nv
+            if job.done == len(job.toks):
+                self._finish_prefill(slot, job, logits[i], now)
+
+    def _advance_prefill_per_job(self, now: float) -> None:
         """Run ONE prefill dispatch (a chunk, or the monolithic head for a
         non-window-aligned prompt) for the best prefilling job — bounding
         per-step added latency to one chunk regardless of prompt length."""
-        if not self.prefilling:
-            return
         slot, job = min(self.prefilling.items(),
                         key=lambda kv: kv[1].entry.key)
         n_total = len(job.toks)
@@ -693,6 +844,7 @@ class ServingEngine:
                 jnp.asarray([self.slot_pages[slot][: cap // self.w]],
                             jnp.int32))
             job.done = n
+            self.prefill_dispatches += 1
             if job.done == n_total:
                 self._finish_prefill(slot, job, np.asarray(logits)[0], now)
             return
@@ -709,6 +861,7 @@ class ServingEngine:
             jnp.asarray(self.page_table[slot]), np.int32(t0), np.int32(nv),
             np.int32(job.n_train))
         self.n_chunks += 1
+        self.prefill_dispatches += 1
         job.done = t0 + nv
         if job.done == n_total:
             self._finish_prefill(slot, job, np.asarray(logits), now)

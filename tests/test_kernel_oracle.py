@@ -282,6 +282,182 @@ def test_gather_pages_owned_redirects_to_scratch():
         np.asarray(out)[1], np.concatenate([ref[4:8], ref[0:4]]))
 
 
+# ------------------------------------------------ fused chunk-prefill kernel --
+
+
+def _chunk_pair(s_route=1, external=True):
+    cfg_x = mdec.DecodeConfig(window=W, k=K, s=s_route, prefill_impl="xla",
+                              external_finalize=external)
+    return cfg_x, dataclasses.replace(cfg_x, prefill_impl="kernel")
+
+
+def _drive_chunks(cfg_x, cfg_k, n_trains, n_totals, chunk, m_slot=4,
+                  hkv=2, g=2, d=16, stagger=True, seed=5):
+    """Chunk-prefill the kernel and the XLA oracle side by side over a
+    shuffled page pool; slots advance on alternating steps (ragged resume
+    points + inactive rows in every dispatch).  State tensors and owned
+    pages are compared BIT-exactly after every dispatch; outputs allclose
+    on valid positions."""
+    s_n = len(n_totals)
+    key = jax.random.PRNGKey(seed)
+    n_pages = s_n * m_slot + 2
+    table = np.random.default_rng(seed).permutation(n_pages)[: s_n * m_slot]
+    pt = jnp.asarray(table.reshape(s_n, m_slot), jnp.int32)
+    nmax = max(n_totals)
+    q = jax.random.normal(key, (s_n, hkv, g, nmax, d))
+    k, v = (jax.random.normal(kk, (s_n, hkv, nmax, d))
+            for kk in jax.random.split(key, 2))
+    st_x = mdec.init_paged_state(hkv, d, n_pages, s_n, m_slot, cfg_x,
+                                 jnp.float32)
+    st_k = mdec.init_paged_state(hkv, d, n_pages, s_n, m_slot, cfg_k,
+                                 jnp.float32)
+    step = jax.jit(mdec.mita_batched_chunk_prefill, static_argnames="cfg")
+    done = np.zeros(s_n, np.int32)
+    it = 0
+    while (done < np.asarray(n_totals)).any():
+        act = done < np.asarray(n_totals)
+        if stagger and s_n > 1:
+            act = act & (np.arange(s_n) % 2 == it % 2)
+        it += 1
+        if not act.any():
+            continue
+        nv = np.where(act, np.minimum(chunk, np.asarray(n_totals) - done), 0)
+        qc = np.zeros((s_n, hkv, g, chunk, d), np.float32)
+        kc = np.zeros((s_n, hkv, chunk, d), np.float32)
+        vc = np.zeros((s_n, hkv, chunk, d), np.float32)
+        for s in range(s_n):
+            if act[s]:
+                sl = slice(done[s], done[s] + nv[s])
+                qc[s, :, :, : nv[s]] = np.asarray(q[s, :, :, sl])
+                kc[s, :, : nv[s]] = np.asarray(k[s, :, sl])
+                vc[s, :, : nv[s]] = np.asarray(v[s, :, sl])
+        args = (jnp.asarray(qc), jnp.asarray(kc), jnp.asarray(vc), pt,
+                jnp.arange(s_n, dtype=jnp.int32), jnp.asarray(done),
+                jnp.asarray(nv), jnp.asarray(n_trains, jnp.int32),
+                jnp.asarray(act))
+        o_x, st_x = step(st_x, *args, cfg=cfg_x)
+        o_k, st_k = step(st_k, *args, cfg=cfg_k)
+        o_x, o_k = np.asarray(o_x), np.asarray(o_k)
+        for s in range(s_n):
+            np.testing.assert_allclose(
+                o_k[s][:, :, : nv[s]], o_x[s][:, :, : nv[s]], atol=2e-5,
+                err_msg=f"out slot {s} step {it}")
+        for f in ("lm_q", "lm_v", "expert_idx", "expert_valid", "q_sum",
+                  "pre_lm_q", "pre_q_sum"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(st_k, f)), np.asarray(getattr(st_x, f)),
+                err_msg=f"{f} step {it}")
+        # owned pages bit-exact (the trailing scratch row soaks up write
+        # order differences between the flat scatter and the DMA loop)
+        np.testing.assert_array_equal(np.asarray(st_k.k_pool)[:-1],
+                                      np.asarray(st_x.k_pool)[:-1],
+                                      err_msg=f"k_pool step {it}")
+        np.testing.assert_array_equal(np.asarray(st_k.v_pool)[:-1],
+                                      np.asarray(st_x.v_pool)[:-1],
+                                      err_msg=f"v_pool step {it}")
+        done = done + nv
+    return st_x, st_k
+
+
+@pytest.mark.parametrize("s_route,external", [(1, True), (2, True),
+                                              (1, False)])
+def test_chunk_kernel_matches_xla_ragged(s_route, external):
+    """Kernel vs XLA over shuffled pages, ragged resume points (slots
+    advance on alternating dispatches, so every dispatch mixes active and
+    inactive rows), preemption-recompute rows (n_total > n_train replicates
+    decode-time landmark availability), multi-expert routing, and both
+    finalize modes.  All state — landmarks, expert rows, both q_sum
+    systems, owned pages — is compared bit-exactly after every dispatch."""
+    _drive_chunks(*_chunk_pair(s_route=s_route, external=external),
+                  n_trains=[32, 16, 20], n_totals=[32, 24, 28], chunk=8)
+
+
+def test_chunk_kernel_nonaligned_heads():
+    """Non-window-aligned prompts (the n//m landmark-ends quirk: w' = 10
+    for n = 20, w' = n for single-landmark prompts) through the kernel,
+    bit-identical to the XLA oracle — including a chunk length SHORTER
+    than w', which forces the eager landmark-query commit to cross a
+    dispatch before its score context exists."""
+    _drive_chunks(*_chunk_pair(), n_trains=[20, 12], n_totals=[20, 12],
+                  chunk=8)
+
+
+def test_chunk_kernel_inactive_slots_untouched():
+    """A dispatch with an inactive row leaves that slot's landmark/expert/
+    q_sum state and every owned page bit-identical (checked every dispatch
+    by the driver since slots alternate), and a fully-prefilled batch
+    matches the single-slot oracle's final state."""
+    cfg_x, cfg_k = _chunk_pair()
+    st_x, st_k = _drive_chunks(cfg_x, cfg_k, n_trains=[16, 16],
+                               n_totals=[16, 16], chunk=16)
+    # cross-check one slot against the single-slot chunk op
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (2, 2, 2, 16, 16))
+    k, v = (jax.random.normal(kk, (2, 2, 16, 16))
+            for kk in jax.random.split(key, 2))
+    n_pages = 2 * 4 + 2
+    table = np.random.default_rng(5).permutation(n_pages)[: 2 * 4]
+    pt = jnp.asarray(table.reshape(2, 4), jnp.int32)
+    st1 = mdec.init_paged_state(2, 16, n_pages, 2, 4, cfg_x, jnp.float32)
+    _, st1 = jax.jit(mdec.mita_chunk_prefill, static_argnames="cfg")(
+        st1, q[0], k[0], v[0], pt[0], 0, 0, 16, 16, cfg_x)
+    np.testing.assert_allclose(np.asarray(st_k.lm_q)[0],
+                               np.asarray(st1.lm_q)[0], atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st_k.q_sum)[0],
+                               np.asarray(st1.q_sum)[0], atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(st_k.expert_idx)[0],
+                                  np.asarray(st1.expert_idx)[0])
+
+
+def test_chunk_kernel_recompute_round_trip():
+    """Preemption recompute at the core level: build a state by chunked
+    prefill of prompt-then-generated (n_train < n_total), rebuild it from
+    scratch in one go, and require the kernel and oracle to agree
+    bit-exactly on both builds AND the two builds to agree with each other
+    (recompute-from-prompt is deterministic)."""
+    cfg_x, cfg_k = _chunk_pair()
+    st_a, _ = _drive_chunks(cfg_x, cfg_k, n_trains=[16], n_totals=[32],
+                            chunk=8, stagger=False)
+    st_b, _ = _drive_chunks(cfg_x, cfg_k, n_trains=[16], n_totals=[32],
+                            chunk=16, stagger=False)
+    for f in ("lm_q", "lm_v", "expert_idx", "expert_valid", "q_sum"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(st_a, f)), np.asarray(getattr(st_b, f)),
+            atol=2e-5, err_msg=f"{f} chunk-size invariance")
+
+
+def test_prefill_impl_dispatch(monkeypatch):
+    """`use_prefill_kernel`: tri-state impl + VMEM budget + the
+    REPRO_PREFILL_IMPL env override flip dispatch without touching
+    numerics (the XLA path IS the fallback)."""
+    shape = dict(nc=16, window=W, m=4, k_width=K, g=2, d=16, itemsize=4)
+    assert ops.use_prefill_kernel("kernel", **shape)
+    assert not ops.use_prefill_kernel("kernel", **shape, budget=64)
+    assert not ops.use_prefill_kernel("xla", **shape)
+    with pytest.raises(ValueError, match="prefill impl"):
+        ops.use_prefill_kernel("bogus", **shape)
+    monkeypatch.setenv("REPRO_PREFILL_IMPL", "xla")
+    assert not ops.use_prefill_kernel("kernel", **shape)
+    monkeypatch.setenv("REPRO_PREFILL_IMPL", "kernel")
+    assert ops.use_prefill_kernel("xla", **shape)
+    monkeypatch.delenv("REPRO_PREFILL_IMPL")
+    # an oversized "kernel" config silently runs the oracle
+    cfg_x, cfg_k = _chunk_pair()
+    cfg_tiny = dataclasses.replace(cfg_k, vmem_budget=64)
+    _drive_chunks(cfg_x, cfg_tiny, n_trains=[16], n_totals=[16], chunk=16)
+
+
+def test_paged_kernel_dma_pipeline_parity(monkeypatch):
+    """REPRO_DMA_PIPELINE=0 (serial expert-row DMAs) and =1 (double-
+    buffered) produce identical decode steps — the pipeline only reorders
+    copies into disjoint destination rows."""
+    cfg_x, cfg_k = _paged_pair(s_route=2)
+    monkeypatch.setenv("REPRO_DMA_PIPELINE", "0")
+    _drive(cfg_x, cfg_k, offs=[0, 3, 7], n_steps=12)
+    monkeypatch.setenv("REPRO_DMA_PIPELINE", "1")
+    _drive(cfg_x, cfg_k, offs=[0, 3, 7], n_steps=12)
+
+
 def test_block_q_env_default(monkeypatch):
     """REPRO_BLOCK_Q feeds `ops.default_block_q`, reachable via
     AttnConfig.block_q = 0.  Checked on the pallas routed path, which is

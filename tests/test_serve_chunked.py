@@ -128,9 +128,11 @@ def test_chunk_prefill_resumes_open_window():
 
 # ----------------------------------------------------------------- engine --
 
-def test_engine_chunked_matches_static_greedy():
+@pytest.mark.parametrize("mode", ["batched", "per-job"])
+def test_engine_chunked_matches_static_greedy(mode):
     """Chunked admission (prompt spans several chunks) emits the same greedy
-    tokens as the monolithic static baseline, per request."""
+    tokens as the monolithic static baseline, per request — in the batched
+    single-dispatch mode (default) and the per-job legacy mode."""
     cfg = _cfg()
     params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
     B, N, gen = 4, 48, 10
@@ -140,7 +142,7 @@ def test_engine_chunked_matches_static_greedy():
                              capacity=pages * W)
     eng = ServingEngine(params, cfg, EngineConfig(
         n_slots=3, pages_per_slot=pages, n_pages=3 * pages + 2,
-        prefill_chunk=2 * W))
+        prefill_chunk=2 * W, prefill_mode=mode))
     done = eng.run([Request(rid=i, prompt=np.asarray(prompts[i]),
                             max_new_tokens=gen) for i in range(B)])
     assert len(done) == B
@@ -149,9 +151,12 @@ def test_engine_chunked_matches_static_greedy():
         np.testing.assert_array_equal(f.tokens, ref[i], err_msg=f"req {i}")
 
 
-def test_engine_chunked_nonaligned_prompt_fallback():
-    """Non-window-aligned prompts take the monolithic head inside the
-    chunked engine and still match the static baseline."""
+@pytest.mark.parametrize("mode", ["batched", "per-job"])
+def test_engine_chunked_nonaligned_prompt(mode):
+    """Non-window-aligned prompts match the static baseline in both
+    modes: per-job falls back to the monolithic head, batched serves them
+    through the chunk program (the n//m landmark quirk is per-slot data —
+    there is no monolithic prefill left in batched mode)."""
     cfg = _cfg()
     params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
     N, gen = 20, 9
@@ -161,9 +166,53 @@ def test_engine_chunked_nonaligned_prompt_fallback():
                              capacity=pages * W)
     eng = ServingEngine(params, cfg, EngineConfig(
         n_slots=2, pages_per_slot=pages, n_pages=2 * pages + 2,
-        prefill_chunk=2 * W))
+        prefill_chunk=2 * W, prefill_mode=mode))
     done = eng.run([Request(rid=i, prompt=np.asarray(prompts[i]),
                             max_new_tokens=gen) for i in range(2)])
+    for i, f in enumerate(done):
+        np.testing.assert_array_equal(f.tokens, ref[i], err_msg=f"req {i}")
+    if mode == "batched":
+        # every prefill token went through the ONE chunk program
+        assert eng.stats()["chunks"] >= 2
+
+
+def test_batched_prefill_is_one_dispatch_per_step():
+    """With several requests mid-prefill simultaneously, the batched
+    engine issues EXACTLY one prefill dispatch per step (per-job issues
+    one per job per chunk), and all requests still match the static
+    baseline.  This is the compiled-program-scaling contract: prefill work
+    per step is one fixed-shape program, not O(prefilling slots)."""
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    B, N, gen = 3, 6 * W, 4
+    prompts = jax.random.randint(jax.random.PRNGKey(21), (B, N), 0,
+                                 cfg.vocab)
+    pages = (N + gen + W - 1) // W
+    ref, _ = static_generate(params, _cfg(external=True), prompts, gen,
+                             capacity=pages * W)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        n_slots=B, pages_per_slot=pages, n_pages=B * pages + 2,
+        prefill_chunk=W))
+    for i in range(B):
+        eng.submit(Request(rid=i, prompt=np.asarray(prompts[i]),
+                           max_new_tokens=gen))
+    saw_concurrent = False
+    while True:
+        before = eng.prefill_dispatches
+        n_jobs = 0
+        eng._admit(0.0)
+        n_jobs = len(eng.prefilling)
+        if not eng.step():
+            break
+        saw_concurrent |= n_jobs > 1
+        assert eng.prefill_dispatches - before <= 1, \
+            f"{n_jobs} prefilling jobs took >1 dispatch in one step"
+        if n_jobs > 1:
+            # all jobs advanced in that single dispatch
+            assert all(j.done > 0 for j in eng.prefilling.values())
+    assert saw_concurrent, "scenario never had concurrent prefills"
+    done = sorted(eng.finished, key=lambda f: f.rid)
+    assert len(done) == B
     for i, f in enumerate(done):
         np.testing.assert_array_equal(f.tokens, ref[i], err_msg=f"req {i}")
 
@@ -201,6 +250,39 @@ def test_preemption_round_trip_identical_tokens():
     assert len(done) == 3
     assert eng.n_preemptions >= 1, "scenario no longer triggers preemption"
     assert done[0].preemptions >= 1
+    np.testing.assert_array_equal(done[0].tokens, ref)
+
+
+def test_preemption_round_trip_nonaligned_prompt():
+    """Preemption recompute of a NON-window-aligned prompt (n = 20, the
+    n//m quirk head) through the batched chunk program — no monolithic
+    head exists anymore, so the rebuilt A-system (prompt positions) and
+    B-system (recomputed generated positions, decode availability) must
+    reproduce the victim's unpreempted tokens exactly."""
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    N, gen = 20, 24
+    victim = np.asarray(jax.random.randint(jax.random.PRNGKey(4), (N,),
+                                           0, cfg.vocab))
+    ecfg = EngineConfig(n_slots=2, pages_per_slot=6, n_pages=8,
+                        prefill_chunk=2 * W)
+    ref = ServingEngine(params, cfg, ecfg).run(
+        [Request(rid=0, prompt=victim, max_new_tokens=gen)])[0].tokens
+
+    eng = ServingEngine(params, cfg, ecfg)
+    eng.submit(Request(rid=0, prompt=victim, max_new_tokens=gen, priority=0))
+    for _ in range(6):                   # prefill + decode a few tokens
+        eng.step()
+    hp = jax.random.randint(jax.random.PRNGKey(6), (2, 16), 0, cfg.vocab)
+    eng.submit(Request(rid=1, prompt=np.asarray(hp[0]), max_new_tokens=24,
+                       priority=5))
+    eng.submit(Request(rid=2, prompt=np.asarray(hp[1]), max_new_tokens=24,
+                       priority=5))
+    while eng.step():
+        pass
+    done = sorted(eng.finished, key=lambda f: f.rid)
+    assert len(done) == 3
+    assert eng.n_preemptions >= 1, "scenario no longer triggers preemption"
     np.testing.assert_array_equal(done[0].tokens, ref)
 
 
