@@ -18,6 +18,7 @@ ALL = [
     ("fig5", tables.fig5_inference_throughput),
     ("serve", serve_bench.serve_poisson),
     ("serve_interference", serve_bench.serve_interference),
+    ("serve_arch", serve_bench.serve_arch),
     ("decode", decode_bench.decode_bench),
     ("prefill", prefill_bench.prefill_bench),
 ]

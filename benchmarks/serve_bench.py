@@ -1,6 +1,6 @@
 """Serving benchmarks: continuous-batching paged engine vs baselines.
 
-Two traces:
+Three cells:
   * `serve_poisson` — engine vs static batching on a Poisson arrival trace
     with mixed prompt/generation lengths (PR-1 regression cell);
   * `serve_interference` — a decode-heavy short-request stream with long
@@ -11,11 +11,17 @@ Two traces:
     class and overall, aggregate tokens/sec for both engines, and gates:
     chunked short-class TTFT p99 strictly lower, tokens/sec within 5%,
     greedy tokens per request identical to the static baseline.
+  * `serve_arch` — the cross-BACKEND matrix: the same generic scheduler
+    over the paged MiTA backend, the Mamba2 (SSD) backend, and the RG-LRU
+    hybrid backend (`serve.backends`), one mixed-length Poisson trace
+    each, gating greedy bit-parity vs each backend's static reference and
+    emitting per-backend rows to ``BENCH_serve_arch.json``.
 
 Emits (via benchmarks.common.emit) throughput, latency percentiles, and a
 greedy-parity bit per trace.
 
-Run:  PYTHONPATH=src python -m benchmarks.run serve
+Run:  PYTHONPATH=src python -m benchmarks.run serve serve_arch
+      PYTHONPATH=src python -m benchmarks.serve_bench --smoke --backend all
 """
 
 from __future__ import annotations
@@ -250,3 +256,104 @@ def serve_interference(n_short: int = 48, n_long: int = 3,
     emit("serve_interference_gates", 0.0,
          f"greedy_match={match} short_p99_better={p99_better} "
          f"tps_ratio={tps_ratio:.3f} tps_within_5pct={abs(tps_ratio - 1) <= 0.05}")
+
+
+# ----------------------------------------------------- cross-backend matrix --
+
+BACKENDS = ("mita", "mamba2", "rglru")
+
+
+def _arch_cell(name: str):
+    """(model cfg, params, backend factory) for one matrix cell — the MiTA
+    cell at the tiny-LM scale of `serve_poisson`, the recurrent cells as
+    the registry smoke variants (the same configs `launch.serve --arch
+    mamba2-370m --smoke` serves)."""
+    from repro.serve import backends
+
+    if name == "mita":
+        cfg = tiny_lm_cfg("mita_ref", m=8, k=16, layers=2, d=64, seq=128)
+        params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+        return cfg, params, lambda ecfg: backends.resolve(params, cfg, ecfg)
+    from repro.configs.registry import arch_params, get_arch
+    arch = get_arch("mamba2-370m" if name == "mamba2"
+                    else "recurrentgemma-9b", smoke=True)
+    params = arch_params(arch, jax.random.PRNGKey(0))
+    return arch.model, params, \
+        lambda ecfg: backends.for_arch(arch, params, ecfg)
+
+
+def serve_arch(which: str = "all", n_req: int = 10,
+               out: str = "BENCH_serve_arch.json") -> dict:
+    """Backend matrix on a mixed-length Poisson trace (queued up front —
+    max-throughput mode keeps the row deterministic): one row per backend
+    with tok/s, scheduler counters, the backend's own dispatch counts, and
+    the greedy-parity gate vs its static reference.  Chunked mode with a
+    tight pool so admission pressure (and the preemption machinery) is
+    exercised on every backend.  Raises if any backend loses bit-parity.
+    """
+    import json
+
+    rng_gens = dict(mita=(2, 17), mamba2=(2, 13), rglru=(2, 13))
+    results = {}
+    for name in (BACKENDS if which in ("all", None) else (which,)):
+        cfg, params, mk = _arch_cell(name)
+        w = cfg.attn.window
+        rng = np.random.default_rng(3)
+        lo, hi = rng_gens[name]
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab, size=int(
+                            rng.choice([w, 2 * w]))).astype(np.int32),
+                        max_new_tokens=int(rng.integers(lo, hi)))
+                for i in range(n_req)]
+        total = sum(r.max_new_tokens for r in reqs)
+        pages = window_aligned(2 * w + hi, w) // w
+        ecfg = EngineConfig(n_slots=4, pages_per_slot=pages,
+                            n_pages=4 * pages + 2, prefill_chunk=w)
+        eng = ServingEngine(params, cfg, ecfg, backend=mk(ecfg))
+        t0 = time.perf_counter()
+        done = eng.run(reqs)
+        dt = time.perf_counter() - t0
+        ref_backend = mk(ecfg)
+        match = all(
+            np.array_equal(f.tokens, ref_backend.static_reference(
+                r.prompt[None], r.max_new_tokens)[0])
+            for f, r in zip(done, reqs))
+        st = eng.stats()
+        results[name] = dict(
+            tok_s=total / dt, greedy_match=bool(match),
+            steps=st["steps"], chunks=st["chunks"],
+            prefill_dispatches=st["prefill_dispatches"],
+            decode_dispatches=st["decode_dispatches"],
+            preemptions=st["preemptions"],
+            prefill_kernel_fallbacks=st["prefill_kernel_fallbacks"])
+        emit(f"serve_arch_{name}", dt * 1e6 / total,
+             f"{total / dt:.1f} tok/s | greedy_match={match} | "
+             f"chunks={st['chunks']} in {st['prefill_dispatches']} "
+             f"dispatches, decode_dispatches={st['decode_dispatches']}, "
+             f"preempt={st['preemptions']}, "
+             f"kernel_fallbacks={st['prefill_kernel_fallbacks']}")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    bad = [n for n, r in results.items() if not r["greedy_match"]]
+    if bad:
+        raise SystemExit(f"greedy parity lost for backend(s): {bad}")
+    return results
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: fewer requests")
+    ap.add_argument("--backend", default="all",
+                    choices=("all",) + BACKENDS)
+    ap.add_argument("--out", default="BENCH_serve_arch.json")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    serve_arch(args.backend, n_req=6 if args.smoke else 10, out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

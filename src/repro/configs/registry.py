@@ -77,6 +77,26 @@ def get_arch(arch_id: str, *, smoke: bool = False,
     return arch
 
 
+def arch_params(arch: ArchConfig, rng) -> "object":
+    """Registry-routed parameter construction for the servable families —
+    the single place `launch.serve` (and anything else that wants to serve
+    an arbitrary registry architecture) resolves family → init function,
+    so smoke variants like ``mamba2-370m`` or ``recurrentgemma-9b`` serve
+    without bespoke wiring.  Lazy imports keep config modules light."""
+    if arch.family in ("dense", "moe", "vlm"):
+        from repro.models import transformer as tfm
+        return tfm.lm_init(rng, arch.model)
+    if arch.family == "ssm":
+        from repro.models.mamba2 import mamba_init
+        return mamba_init(rng, arch.model)
+    if arch.family == "hybrid":
+        from repro.models.rglru import rg_init
+        return rg_init(rng, arch.model)
+    raise ValueError(
+        f"family {arch.family!r} has no servable parameter constructor "
+        "(whisper's enc-dec decode is driven from examples/, not serve)")
+
+
 def production_dtypes(cfg: ModelConfig) -> ModelConfig:
     return dataclasses.replace(cfg, param_dtype=jnp.float32,
                                compute_dtype=jnp.bfloat16, remat=True)

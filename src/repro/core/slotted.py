@@ -1,0 +1,65 @@
+"""Slot-addressed pytree helpers for constant-size decode states.
+
+The recurrent serving backends (`repro.serve.backends.recurrent`) keep one
+state pytree per model whose leaves are stacked ``[L, S, ...]`` — layer
+axis first (the models scan over it), request-slot axis second.  Unlike the
+paged MiTA cache, these states are constant-size per slot, so "paging" needs
+no indirection: a slot is an index, and the scheduler's page accounting is
+pure admission-control currency (docs/serving.md, backend protocol).
+
+These helpers are the whole ownership contract:
+
+  * a slot's state is touched only through its slot index;
+  * `zero_slot` at admission gives chunked prefill a clean accumulator;
+  * `where_slots` masks per-token updates inside chunk scans so a row whose
+    chunk is shorter than the compiled shape (or inactive) keeps its state
+    bit-identical — the property preemption-recompute exactness rests on.
+
+All helpers are shape-polymorphic over leaf rank: masks broadcast from the
+leading slot axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def where_slots(mask: jax.Array, new: Any, old: Any, axis: int = 0) -> Any:
+    """Per-slot select between two state pytrees.
+
+    ``mask``: [S] bool over the slot axis of every leaf — axis 0 inside a
+    per-layer body (leaves [S, ...]), axis 1 on a whole stacked state
+    (leaves [L, S, ...]).  Scalar-per-slot leaves (e.g. a vmapped cache's
+    per-slot ``t`` of shape [..., S]) work unchanged.
+    """
+
+    def sel(a, b):
+        m = mask.reshape((1,) * axis + (-1,) + (1,) * (a.ndim - axis - 1))
+        return jnp.where(m, a, b)
+
+    return jax.tree.map(sel, new, old)
+
+
+def zero_slot(states: Any, slot) -> Any:
+    """Zero one slot across every leaf of a stacked [L, S, ...] state."""
+    return jax.tree.map(
+        lambda a: a.at[:, slot].set(jnp.zeros_like(a[:, slot])), states)
+
+
+def set_slot(states: Any, sub: Any, slot) -> Any:
+    """Write a single-request state (leaves [L, 1, ...]) into ``slot``."""
+    return jax.tree.map(lambda a, b: a.at[:, slot].set(b[:, 0]), states, sub)
+
+
+def gather_slots(states: Any, ids: jax.Array) -> Any:
+    """Gather a row-packed sub-state ([L, P, ...]) by slot ids [P]."""
+    return jax.tree.map(lambda a: a[:, ids], states)
+
+
+def scatter_slots(states: Any, ids: jax.Array, sub: Any) -> Any:
+    """Scatter a row-packed sub-state back; ``ids`` must be unique (the
+    serving engine pads prefill rows with DISTINCT idle slots)."""
+    return jax.tree.map(lambda a, b: a.at[:, ids].set(b), states, sub)

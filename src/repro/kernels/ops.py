@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import math
 import os
+import warnings
 from typing import Optional
 
 import jax
@@ -215,6 +216,21 @@ def chunk_prefill_vmem_bytes(nc: int, window: int, m: int, k_width: int,
     return tiles * itemsize + (scores + onehot) * 4 + tables
 
 
+# A dispatch decision that WANTED the fused chunk-prefill kernel but fell
+# back to XLA because the working set exceeded the VMEM budget.  Counted at
+# trace time (one decision per compiled shape, not per dispatch) — at
+# production G·nc·ctx shapes the fallback used to be silent, so an engine
+# could run an order of magnitude slower with no signal.  The serving
+# engine surfaces the count as ``stats()["prefill_kernel_fallbacks"]``.
+_PREFILL_KERNEL_FALLBACKS = 0
+_PREFILL_FALLBACK_WARNED = False
+
+
+def prefill_kernel_fallbacks() -> int:
+    """Process-wide count of chunk-prefill kernel→XLA VMEM fallbacks."""
+    return _PREFILL_KERNEL_FALLBACKS
+
+
 def use_prefill_kernel(impl: str, *, nc: int, window: int, m: int,
                        k_width: int, g: int, d: int, itemsize: int = 4,
                        budget: int = 0) -> bool:
@@ -224,15 +240,33 @@ def use_prefill_kernel(impl: str, *, nc: int, window: int, m: int,
     with a process-wide override via ``REPRO_PREFILL_IMPL`` — the serving
     engine never retraces on an impl flip because the choice is made at
     trace time.
+
+    A "no" that is due to the VMEM budget (rather than impl="xla" or
+    running off-TPU in auto mode) increments `prefill_kernel_fallbacks`
+    and warns once per process — production shapes that silently degrade
+    to the XLA path are an observability bug, not a preference.
     """
+    global _PREFILL_KERNEL_FALLBACKS, _PREFILL_FALLBACK_WARNED
     impl = os.environ.get("REPRO_PREFILL_IMPL", impl)
     if impl == "xla":
         return False
     if impl not in ("auto", "kernel"):
         raise ValueError(f"unknown prefill impl {impl!r}")
-    fits = chunk_prefill_vmem_bytes(nc, window, m, k_width, g, d,
-                                    itemsize) <= (budget
-                                                  or vmem_budget_bytes())
+    need = chunk_prefill_vmem_bytes(nc, window, m, k_width, g, d, itemsize)
+    have = budget or vmem_budget_bytes()
+    fits = need <= have
+    if not fits and (impl == "kernel" or on_tpu()):
+        _PREFILL_KERNEL_FALLBACKS += 1
+        if not _PREFILL_FALLBACK_WARNED:
+            _PREFILL_FALLBACK_WARNED = True
+            warnings.warn(
+                f"chunk-prefill kernel working set {need} B exceeds the "
+                f"VMEM budget {have} B (nc={nc}, m={m}, window={window}); "
+                "dispatching to the XLA path — raise "
+                "REPRO_VMEM_BUDGET_BYTES / DecodeConfig.vmem_budget or "
+                "shrink the chunk to keep the fused kernel "
+                "(further fallbacks are counted, not warned)",
+                RuntimeWarning, stacklevel=2)
     if impl == "kernel":
         return fits
     return on_tpu() and fits

@@ -1,13 +1,18 @@
-"""Serving driver: static batch or the continuous-batching paged engine.
+"""Serving driver: static batch or the continuous-batching engine.
 
 Two paths over the same model/step functions:
 
   * ``--engine static``      — prefill a fixed batch of equal-length prompts,
     decode everyone for ``--gen`` steps (the PR-0 baseline; also the oracle
     the engine's greedy outputs are pinned against).
-  * ``--engine continuous``  — `repro.serve.ServingEngine`: a paged
-    KV/landmark/expert pool, per-request page tables, and a scheduler that
-    admits/retires requests every step so the fused decode batch stays full.
+  * ``--engine continuous``  — `repro.serve.ServingEngine`: the generic
+    scheduler over a `DecodeBackend` resolved from the registry
+    architecture (`serve.backends.for_arch`) — the paged MiTA backend for
+    attention LMs, constant-state recurrent backends for ssm/hybrid — so
+    ANY registry architecture with a decode state is servable:
+
+      PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m \\
+          --smoke --engine continuous
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
@@ -143,22 +148,35 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch, smoke=args.smoke)
-    if arch.family not in ("dense", "moe", "vlm"):
-        raise SystemExit("serve.py drives decoder LMs; use examples/ for "
-                         "whisper/ssm serving")
+    if arch.family not in ("dense", "moe", "vlm", "ssm", "hybrid"):
+        raise SystemExit("serve.py drives decoder LMs (attention, ssm, "
+                         "hybrid); use examples/ for whisper serving")
     cfg = arch.model
     if args.prefill_impl != "auto":
         import dataclasses
         cfg = dataclasses.replace(cfg, attn=dataclasses.replace(
             cfg.attn, prefill_impl=args.prefill_impl))
+        arch = dataclasses.replace(arch, model=cfg)
     w = cfg.attn.window
 
-    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    # registry-routed construction: family -> init fn -> DecodeBackend,
+    # so every servable architecture rides the same driver
+    from repro.configs.registry import arch_params
+    from repro.serve import EngineConfig, Request, ServingEngine, backends
+
+    params = arch_params(arch, jax.random.PRNGKey(0))
     dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.prompt_len,
                       global_batch=max(args.batch, args.requests or 1))
     prompts = np.asarray(synthetic_batch(dcfg, 0)["tokens"])
+    pages = mdec.window_aligned(args.prompt_len + args.gen, w) // w
+    ecfg = EngineConfig(n_slots=args.batch, pages_per_slot=pages,
+                        n_pages=2 * args.batch * pages,
+                        prefill_chunk=args.prefill_chunk,
+                        reserve_pages=args.reserve_pages,
+                        sample_device=args.sample_device,
+                        prefill_mode=args.prefill_mode)
 
-    if args.engine == "static":
+    if args.engine == "static" and arch.family in ("dense", "moe", "vlm"):
         gen, tm = static_generate(params, cfg,
                                   jnp.asarray(prompts[: args.batch]),
                                   args.gen, temperature=args.temperature)
@@ -168,17 +186,20 @@ def main(argv=None):
         print(f"decode:  {args.gen - 1} steps, {tm['decode_s']:.3f}s "
               f"({tps:.1f} tok/s, batch={args.batch})")
         sample = gen
+    elif args.engine == "static":
+        backend = backends.for_arch(arch, params, ecfg)
+        t0 = time.perf_counter()
+        gen = backend.static_reference(prompts[: args.batch], args.gen,
+                                       temperature=args.temperature)
+        dt = time.perf_counter() - t0
+        print(f"static ({backend.name}): {args.batch}x{args.prompt_len}"
+              f"+{args.gen} in {dt:.3f}s "
+              f"({args.batch * args.gen / dt:.1f} tok/s)")
+        sample = gen
     else:
-        from repro.serve import EngineConfig, Request, ServingEngine
         n_req = args.requests or 2 * args.batch
-        pages = mdec.window_aligned(args.prompt_len + args.gen, w) // w
-        eng = ServingEngine(params, cfg, EngineConfig(
-            n_slots=args.batch, pages_per_slot=pages,
-            n_pages=2 * args.batch * pages,
-            prefill_chunk=args.prefill_chunk,
-            reserve_pages=args.reserve_pages,
-            sample_device=args.sample_device,
-            prefill_mode=args.prefill_mode))
+        eng = ServingEngine(params, cfg, ecfg,
+                            backend=backends.for_arch(arch, params, ecfg))
         reqs = [Request(rid=i, prompt=prompts[i % len(prompts)],
                         max_new_tokens=args.gen,
                         temperature=args.temperature,
@@ -189,13 +210,15 @@ def main(argv=None):
         dt = time.perf_counter() - t0
         total = sum(len(f.tokens) for f in done)
         st = eng.stats()
-        print(f"continuous: {n_req} requests ({args.prompt_len}+{args.gen}) "
+        print(f"continuous[{st['backend']}]: {n_req} requests "
+              f"({args.prompt_len}+{args.gen}) "
               f"in {dt:.3f}s — {total / dt:.1f} tok/s, "
               f"{eng.steps} fused steps, batch={args.batch}, "
               f"chunks={st['chunks']} in "
               f"{st['prefill_dispatches']} dispatches, "
               f"preemptions={st['preemptions']}, "
-              f"pages_hw={st['pages_high_water']}")
+              f"pages_hw={st['pages_high_water']}, "
+              f"kernel_fallbacks={st['prefill_kernel_fallbacks']}")
         sample = np.stack([done[b].tokens for b in range(min(2, len(done)))])
     print("sample generations (token ids):")
     for b in range(min(2, sample.shape[0])):

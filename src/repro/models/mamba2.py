@@ -231,3 +231,66 @@ def mamba_decode_step(params: Params, states, token: jax.Array,
                                  unroll=cfg.scan_unroll)
     logits = nn.unembed(params["emb"], nn.rms_norm(x, params["ln_f"]), cfg)
     return logits, new_states
+
+
+# ------------------------------------------------------ slot-addressed ops --
+#
+# Serving entry points (repro.serve.backends.recurrent).  The SSD state is
+# the paper-taxonomy compressed fast-weight module: CONSTANT size per
+# request, so a "slot" is just an index into the batch axis — no paging
+# indirection.  Three ops give the continuous-batching scheduler everything
+# it needs: zero a slot at admission (`core.slotted.zero_slot`), advance a
+# fixed-shape chunk of prompt for any subset of slots
+# (`mamba_prefill_chunk`), and step the whole slot batch
+# (`mamba_decode_step` — lanes are independent, so a slot's tokens never
+# depend on its neighbours).  Preemption recompute = re-running the same
+# chunk scans over prompt + emitted tokens: the per-token update below IS
+# the decode-step update, so the rebuilt state is bit-identical.
+
+def mamba_slot_states(cfg: nn.ModelConfig, n_slots: int):
+    """Stacked per-layer slot states (leaves [L, S, ...])."""
+    return mamba_init_decode_states(cfg, n_slots, 0)
+
+
+def mamba_prefill_chunk(params: Params, states, tokens: jax.Array,
+                        t0: jax.Array, n_valid: jax.Array,
+                        cfg: nn.ModelConfig):
+    """Scan one fixed-shape chunk of prompt into a subset of slots.
+
+    tokens: [S, nc] int32 (rows with n_valid == 0 are untouched);
+    t0: [S] int32 resume points (unused by the position-free SSD recurrence;
+    kept for signature parity with the hybrid model); n_valid: [S] int32
+    valid tokens per row.  The chunk is a sequential `lax.scan` of the
+    EXACT `mamba_block_decode` update, masked per token by validity — a
+    row's state after its chunks equals the state the decode path would
+    have built token-by-token, which is what makes recompute-from-prompt
+    preemption exact.  ONE compiled shape per chunk length serves every
+    chunk of every request at any resume point.
+
+    Returns (logits [S, V] at each row's last valid position, states).
+    """
+    del t0
+    from repro.core import slotted
+
+    _, nc = tokens.shape
+    x = nn.embed(params["emb"], tokens, cfg)              # [S, nc, D]
+    valid = jnp.arange(nc)[None, :] < n_valid[:, None]    # [S, nc]
+
+    def body(h, layer):
+        bp, st = layer
+
+        def tstep(st, inp):
+            xj, vj = inp
+            y, st_new = mamba_block_decode(bp, xj, st, cfg)
+            return slotted.where_slots(vj, st_new, st), y
+
+        st, ys = jax.lax.scan(tstep, st,
+                              (jnp.moveaxis(h, 0, 1), valid.T))
+        return jnp.moveaxis(ys, 0, 1), st
+
+    x, new_states = jax.lax.scan(body, x, (params["blocks"], states),
+                                 unroll=cfg.scan_unroll)
+    x = nn.rms_norm(x, params["ln_f"])
+    last = jnp.take_along_axis(
+        x, jnp.maximum(n_valid - 1, 0)[:, None, None], axis=1)[:, 0]
+    return nn.unembed(params["emb"], last, cfg), new_states

@@ -208,3 +208,92 @@ def rg_decode_step(params: Params, states, token: jax.Array, pos: jax.Array,
                                  unroll=cfg.scan_unroll)
     logits = nn.unembed(params["emb"], nn.rms_norm(x, params["ln_f"]), cfg)
     return logits, new_states
+
+
+# ------------------------------------------------------ slot-addressed ops --
+#
+# Serving entry points (repro.serve.backends.recurrent).  The RG-LRU
+# recurrence and conv history are constant-size per slot; the super-block's
+# attention layer keeps a bounded per-slot monolithic cache with its OWN
+# per-slot position (`tfm.init_slot_attn_state` / `block_decode_slots`
+# vmap), so one program serves slots at independent progress.  The per-
+# token update of `rg_prefill_chunk` is EXACTLY the decode-step update,
+# which is what makes recompute-from-prompt preemption bit-exact.
+
+def _super_block_step(sp: Params, x: jax.Array, st: RGSuperState,
+                      cfg: nn.ModelConfig, pos: jax.Array):
+    """One token through one super-block with per-slot positions.
+    x: [S, D]; pos: [S]."""
+    h, r1 = rglru_block_decode(sp["rec1"], x, st.rec1, cfg)
+    h = h + nn.swiglu_apply(sp["ffn1"], nn.rms_norm(h, sp["ln_f1"]), cfg)
+    h, r2 = rglru_block_decode(sp["rec2"], h, st.rec2, cfg)
+    h, a = tfm.block_decode_slots(sp["attn_blk"], h, st.attn, cfg, pos)
+    return h, RGSuperState(rec1=r1, rec2=r2, attn=a)
+
+
+def rg_slot_states(cfg: nn.ModelConfig, n_slots: int, capacity: int):
+    """Stacked per-super-block slot states: RG-LRU leaves [NS, S, ...],
+    attention leaves [NS, S, 1, ...] with per-slot ``t`` of shape [NS, S]
+    (each slot a B == 1 monolithic cache of ``capacity`` tokens)."""
+    n_super = max(1, cfg.n_layers // 3)
+    one = RGSuperState(rec1=rglru_init_state(n_slots, cfg.d_model),
+                       rec2=rglru_init_state(n_slots, cfg.d_model),
+                       attn=tfm.init_slot_attn_state(cfg, n_slots, capacity))
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_super,) + a.shape),
+                        one)
+
+
+def rg_slot_decode_step(params: Params, states, token: jax.Array,
+                        pos: jax.Array, cfg: nn.ModelConfig):
+    """One token for the whole slot batch at PER-SLOT positions.
+    token: [S] int32; pos: [S] int32.  Returns (logits [S, V], states)."""
+    x = nn.embed(params["emb"], token, cfg)
+
+    def body(h, layer):
+        sp, st = layer
+        return _super_block_step(sp, h, st, cfg, pos)
+
+    x, new_states = jax.lax.scan(body, x, (params["supers"], states),
+                                 unroll=cfg.scan_unroll)
+    logits = nn.unembed(params["emb"], nn.rms_norm(x, params["ln_f"]), cfg)
+    return logits, new_states
+
+
+def rg_prefill_chunk(params: Params, states, tokens: jax.Array,
+                     t0: jax.Array, n_valid: jax.Array, cfg: nn.ModelConfig):
+    """Scan one fixed-shape chunk of prompt into a subset of slots.
+
+    tokens: [S, nc] int32; t0: [S] int32 resume points (rotary positions
+    continue at t0 + j); n_valid: [S] int32 valid tokens per row (0 leaves
+    the row's state untouched).  Sequential `lax.scan` of the exact
+    decode-step update, masked per token by validity — one compiled shape
+    per chunk length serves every chunk of every request at any resume
+    point, so preemption recompute stays exact.
+
+    Returns (logits [S, V] at each row's last valid position, states).
+    """
+    from repro.core import slotted
+
+    _, nc = tokens.shape
+    x = nn.embed(params["emb"], tokens, cfg)              # [S, nc, D]
+    valid = jnp.arange(nc)[None, :] < n_valid[:, None]    # [S, nc]
+    pos = t0[:, None] + jnp.arange(nc)                    # [S, nc]
+
+    def body(h, layer):
+        sp, st = layer
+
+        def tstep(st, inp):
+            xj, vj, pj = inp
+            y, st_new = _super_block_step(sp, xj, st, cfg, pj)
+            return slotted.where_slots(vj, st_new, st), y
+
+        st, ys = jax.lax.scan(
+            tstep, st, (jnp.moveaxis(h, 0, 1), valid.T, pos.T))
+        return jnp.moveaxis(ys, 0, 1), st
+
+    x, new_states = jax.lax.scan(body, x, (params["supers"], states),
+                                 unroll=cfg.scan_unroll)
+    x = nn.rms_norm(x, params["ln_f"])
+    last = jnp.take_along_axis(
+        x, jnp.maximum(n_valid - 1, 0)[:, None, None], axis=1)[:, 0]
+    return nn.unembed(params["emb"], last, cfg), new_states

@@ -175,6 +175,72 @@ def block_decode(params: Params, x: jax.Array, state, cfg: nn.ModelConfig,
     return x + f, state
 
 
+def init_slot_attn_state(cfg: nn.ModelConfig, n_slots: int, capacity: int):
+    """ONE layer's per-slot monolithic attention decode state: leaves
+    [S, 1, ...] with per-slot ``t`` of shape [S] — each slot is a B == 1
+    monolithic cache, so slots advance at independent positions under
+    `attention_decode_slots`' vmap.  The slot-addressed analogue of
+    `mdec.init_paged_state` for models whose attention context is bounded
+    per request (hybrid RG-LRU blocks) rather than pooled."""
+    if cfg.attn.backend in ("mita", "mita_ref"):
+        one = mdec.init_decode_state(1, cfg.n_kv, cfg.dh, capacity,
+                                     _decode_cfg(cfg),
+                                     dtype=cfg.compute_dtype)
+    else:
+        one = mdec.init_full_state(
+            1, cfg.n_kv, cfg.dh, min(capacity, cfg.attn.local_window),
+            dtype=cfg.compute_dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n_slots,) + a.shape), one)
+
+
+def attention_decode_slots(params: Params, x: jax.Array, state,
+                           cfg: nn.ModelConfig, pos: jax.Array):
+    """One-token attention with PER-SLOT positions over per-slot monolithic
+    caches.  x: [S, D]; pos: [S]; state leaves [S, 1, ...] with per-slot
+    ``t`` — `mita_decode_step` / `full_decode_step` vmapped over the slot
+    axis, so one program serves slots at arbitrary, independent progress
+    (the serving engine's recurrent backend decode path)."""
+    s, _ = x.shape
+    kv, g, dh = cfg.n_kv, cfg.group, cfg.dh
+    ct = cfg.compute_dtype
+    q = (x @ params["wq"].astype(ct)).reshape(s, kv, g, dh)
+    k = (x @ params["wk"].astype(ct)).reshape(s, kv, dh)
+    v = (x @ params["wv"].astype(ct)).reshape(s, kv, dh)
+    if cfg.qk_norm:
+        q = nn.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = nn.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = nn.rope(q[..., None, :], pos[:, None, None, None],
+                cfg.rope_theta)[..., 0, :]
+    k = nn.rope(k[..., None, :], pos[:, None, None], cfg.rope_theta)[..., 0, :]
+
+    dcfg = _decode_cfg(cfg)
+    if cfg.attn.backend in ("mita", "mita_ref"):
+        step = lambda st, qs, ks, vs: mdec.mita_decode_step(
+            st, qs[None], ks[None], vs[None], dcfg)
+    else:
+        step = lambda st, qs, ks, vs: mdec.full_decode_step(
+            st, qs[None], ks[None], vs[None])
+    o, state = jax.vmap(step)(state, q, k, v)             # o: [S, 1, Hkv, G, d]
+    o = o[:, 0].reshape(s, cfg.n_heads * dh)
+    return o @ params["wo"].astype(ct), state
+
+
+def block_decode_slots(params: Params, x: jax.Array, state,
+                       cfg: nn.ModelConfig, pos: jax.Array):
+    """`block_decode` with per-slot positions (`attention_decode_slots`)."""
+    h, state = attention_decode_slots(
+        params["attn"], nn.rms_norm(x, params["ln1"]), state, cfg, pos)
+    x = x + h
+    xn = nn.rms_norm(x, params["ln2"])
+    if cfg.n_experts:
+        f, _ = moe_apply(params["moe"], xn[:, None, :], cfg)
+        f = f[:, 0]
+    else:
+        f = nn.swiglu_apply(params["ffn"], xn, cfg)
+    return x + f, state
+
+
 def lm_decode_step(params: Params, states, token: jax.Array,
                    pos: jax.Array, cfg: nn.ModelConfig):
     """token: [B] int32; pos: scalar. Returns (logits [B, V], states)."""

@@ -1,19 +1,26 @@
-"""Continuous-batching MiTA serving engine (paged decode cache).
+"""Continuous-batching serving engine (backend-agnostic scheduler).
 
 Public surface:
   * `Request` / `FinishedRequest` — one generation job (with a priority
     class) and its result.
   * `EngineConfig` — slot/page budget and scheduling knobs, including
     chunked prefill (`prefill_chunk`) and the append-only page reserve.
-  * `ServingEngine` — admits requests into a paged, fused decode batch;
-    with chunking enabled it also preempts low-priority requests under
-    page pressure and rebuilds them by recompute-from-prompt.
+  * `ServingEngine` — admits requests into a fused decode batch; with
+    chunking enabled it also preempts low-priority requests under page
+    pressure and rebuilds them by recompute-from-prompt.
+  * `backends` — the `DecodeBackend` protocol plus the paged MiTA backend
+    and the constant-state recurrent backends (Mamba2, RG-LRU); the same
+    scheduler serves the whole fast-weight spectrum
+    (`backends.for_arch(arch, params, ecfg)` builds one from a registry
+    `ArchConfig`).
 
-docs/serving.md documents the request lifecycle, the page-pool layout, and
-every compiled program shape the engine can dispatch.
+docs/serving.md documents the request lifecycle, the backend protocol, the
+page-pool layout, and every compiled program shape the engine can dispatch.
 """
 
+from repro.serve import backends
 from repro.serve.engine import (EngineConfig, FinishedRequest, Request,
                                 ServingEngine)
 
-__all__ = ["EngineConfig", "FinishedRequest", "Request", "ServingEngine"]
+__all__ = ["EngineConfig", "FinishedRequest", "Request", "ServingEngine",
+           "backends"]

@@ -1,0 +1,168 @@
+"""Serving backends: the `DecodeBackend` protocol behind the scheduler.
+
+`repro.serve.engine.ServingEngine` is a GENERIC continuous-batching
+scheduler: admission, the priority queue, preemption, chunked-prefill
+pacing, page accounting, sampling bookkeeping, and stats never mention a
+model family — every device-side operation goes through a `DecodeBackend`.
+A backend owns the model parameters, the per-slot decode state, its device
+mirrors, and every compiled program; the engine owns requests, slots,
+pages, and time.
+
+Page semantics are backend-defined: the MiTA backend's pages are real pool
+rows (a page = ``window`` KV/landmark rows, named by per-slot page tables);
+the recurrent backends' states are constant-size per slot, so pages are
+pure admission-control currency — ``pages_needed`` still meters context
+budget, which keeps priority preemption and the allocator's fairness
+ordering meaningful across the whole fast-weight spectrum (the paper's
+framing: routing → compression; docs/serving.md §Backend protocol).
+
+Protocol (duck-typed; `BackendBase` supplies the defaults):
+
+  * ``fresh()``                 — new instance, zeroed state (warmup scratch).
+  * ``pages_needed(n)``         — pages covering an ``n``-token context.
+  * ``chunkable(n, batched)``   — can the chunk program serve a fresh
+                                  ``n``-token prompt (False → the engine
+                                  routes it through ``prefill_group``)?
+  * ``validate_prompt(n, path)``— raise at SUBMIT time if the path
+                                  ("monolithic" | "chunked") cannot lower
+                                  this length; nothing may be mutated.
+  * ``alloc_slot(slot)``        — a slot was assigned: prepare its state
+                                  (recurrent backends zero the accumulator).
+  * ``prefill_group(...)``      — monolithic prefill+pack of an admission
+                                  group, one dispatch.
+  * ``prefill_chunk(...)``      — advance ONE job one chunk (per-job mode).
+  * ``prefill_chunks(...)``     — advance EVERY packed job row one chunk in
+                                  one dispatch (batched mode).
+  * ``slot_filled(slot, n, snapshot)`` — the slot enters the decode batch
+                                  with ``n`` tokens of context.
+  * ``decode_step(...)``        — one fused step for the whole slot batch;
+                                  returns [S, V] logits (host sampling) or
+                                  [S] sampled tokens (fused sampling).
+  * ``retire(slot)``            — the slot left the decode batch.
+  * ``preempt_snapshot(slot)``  — capture what re-admission needs beyond
+                                  recompute-from-prompt (None for both
+                                  current families: recompute is exact).
+  * ``invalidate()``            — host copies of scheduler tensors changed;
+                                  re-upload device mirrors next step.
+  * ``stats()``                 — per-backend counters (dispatches,
+                                  kernel fallbacks) merged into
+                                  ``ServingEngine.stats()``.
+  * ``static_reference(...)``   — the backend's static/full-forward oracle;
+                                  engine greedy tokens must be bit-identical.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mita_decode import window_aligned
+
+
+def sample_host(logits, rid: int, index: int, temperature: float,
+                key) -> int:
+    """THE host-side sampling rule, shared by the engine's hot loop and
+    every backend's `static_reference` so the engine==reference parity
+    gates compare one recipe, not three copies: greedy first-index argmax,
+    or a categorical keyed by fold_in(fold_in(key, rid), index) with the
+    same 1e-6 temperature floor as the fused on-device sampler
+    (`models.transformer.sample_tokens`) — tokens are therefore identical
+    across host/fused sampling and invariant to batching, slot placement,
+    and preemption schedule."""
+    if temperature <= 0.0:
+        return int(np.argmax(logits))
+    k = jax.random.fold_in(jax.random.fold_in(key, rid), index)
+    return int(jax.random.categorical(
+        k, jnp.asarray(logits) / max(temperature, 1e-6)))
+
+
+class BackendBase:
+    """Shared defaults: window-quantized page math, no-op lifecycle hooks.
+
+    Subclasses must set ``name``, ``window``, and implement the prefill /
+    decode entry points; ``model_cfg``/``params``/``ecfg`` are kept so
+    ``fresh()`` can rebuild an identically-configured instance (compiled
+    programs are cached module-wide, so a fresh instance recompiles
+    nothing)."""
+
+    name = "backend"
+
+    def __init__(self, params: Any, cfg: Any, ecfg: Any):
+        self.params = params
+        self.model_cfg = cfg
+        self.ecfg = ecfg
+        self.decode_dispatches = 0
+        self._dirty = True
+
+    def fresh(self) -> "BackendBase":
+        return type(self)(self.params, self.model_cfg, self.ecfg)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return window_aligned(n_tokens, self.window) // self.window
+
+    def chunkable(self, n_train: int, batched: bool) -> bool:
+        return True
+
+    def validate_prompt(self, n: int, path: str) -> None:
+        pass
+
+    def alloc_slot(self, slot: int) -> None:
+        pass
+
+    def slot_filled(self, slot: int, n_tokens: int,
+                    snapshot: Any = None) -> None:
+        pass
+
+    def retire(self, slot: int) -> None:
+        pass
+
+    def preempt_snapshot(self, slot: int) -> Any:
+        return None
+
+    def invalidate(self) -> None:
+        self._dirty = True
+
+    def stats(self) -> dict:
+        # the fallback counter is process-global and MiTA-kernel-specific;
+        # backends that never dispatch the chunk-prefill kernel report 0
+        # rather than inheriting another engine's trace-time fallbacks
+        return {"decode_dispatches": self.decode_dispatches,
+                "prefill_kernel_fallbacks": 0}
+
+
+def resolve(params: Any, cfg: Any, ecfg: Any) -> BackendBase:
+    """Default backend for a bare `ModelConfig` (the engine's ctor path
+    when no backend is passed): the paged MiTA backend.  Recurrent
+    architectures carry no marker on `ModelConfig` alone — build them via
+    `for_arch` (the registry's family field decides)."""
+    attn = getattr(getattr(cfg, "attn", None), "backend", None)
+    if attn in ("mita", "mita_ref"):
+        from repro.serve.backends.mita import MiTABackend
+        return MiTABackend(params, cfg, ecfg)
+    raise ValueError(
+        f"no default serving backend for attention backend {attn!r}: "
+        "ServingEngine drives MiTA paged decode caches unless a backend is "
+        "passed — ssm/hybrid architectures serve through "
+        "serve.backends.for_arch (constant-size recurrent slot states)")
+
+
+def for_arch(arch: Any, params: Any, ecfg: Any) -> BackendBase:
+    """Backend for a registry `ArchConfig` — any architecture with a decode
+    state is servable through the same scheduler."""
+    if arch.family in ("dense", "moe", "vlm"):
+        from repro.serve.backends.mita import MiTABackend
+        return MiTABackend(params, arch.model, ecfg)
+    if arch.family == "ssm":
+        from repro.serve.backends.recurrent import Mamba2Backend
+        return Mamba2Backend(params, arch.model, ecfg)
+    if arch.family == "hybrid":
+        from repro.serve.backends.recurrent import RGLRUBackend
+        return RGLRUBackend(params, arch.model, ecfg)
+    raise ValueError(f"family {arch.family!r} has no serving backend "
+                     "(encdec decode is capacity-448 native; see registry)")
+
+
+__all__ = ["BackendBase", "resolve", "for_arch", "sample_host"]

@@ -1,0 +1,321 @@
+"""Paged MiTA serving backend — the engine's original device-side path.
+
+Everything the PR-1..4 engine knew about MiTA lives here now, behavior-
+unchanged and pinned by the existing greedy-bit-parity tests: the paged
+KV/landmark/expert pools (`core.mita_decode.PagedMiTAState`), the fused
+whole-batch decode step (window-boundary landmark finalize behind a scalar
+`lax.cond`, optional fused sampling), the monolithic prefill+pack program,
+the per-job and batched chunk-prefill programs (fused Pallas kernel vs XLA
+dispatch inside, `kernels.ops.use_prefill_kernel`), and the per-slot
+``m_done`` finalize bookkeeping with its device mirrors.
+
+The scheduler sees none of it: it talks the `DecodeBackend` protocol
+(`serve.backends`), and this module translates protocol calls into the
+compiled programs documented in docs/serving.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mita_decode as mdec
+from repro.models import transformer as tfm
+from repro.models.modules import ModelConfig
+from repro.serve.backends import BackendBase
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_fn(cfg: ModelConfig, fused_finalize: bool,
+               fused_sampling: bool) -> Callable:
+    """Fused whole-batch decode step, cached at module level so every
+    backend instance with the same model config shares compiled code.
+
+    Scheduler tensors (t, m_done, sample index) advance ON DEVICE: the hot
+    loop uploads only the fed-back tokens — page tables, activity,
+    positions, and per-request (rid, temperature) are re-uploaded solely
+    when admission/retire changes them.  With ``fused_sampling`` the step
+    also samples inside the program (`tfm.sample_tokens`) and returns [S]
+    int32 tokens; otherwise it returns the [S, V] logits for the host
+    sampler."""
+    w = cfg.attn.window
+
+    def step(p, st, tok, t, m_done, pt, ac, rid, si, temp, key):
+        due = None
+        if fused_finalize:
+            due = ac & (t % w == 0) & (t // w > m_done)
+            m_done = jnp.where(due, t // w, m_done)
+        sample = (rid, si, temp, key) if fused_sampling else None
+        out, st = tfm.lm_paged_decode_step(p, st, tok, t, pt, ac, cfg,
+                                           due=due, sample=sample)
+        adv = ac.astype(t.dtype)
+        return out, st, t + adv, m_done, si + adv
+
+    return jax.jit(step, donate_argnums=(1, 3, 4, 8))
+
+
+@functools.lru_cache(maxsize=None)
+def _prefill_pack_fn(cfg: ModelConfig, cap: int, k: int) -> Callable:
+    """Fused batched prefill + pack-into-slots: one dispatch admits ``k``
+    same-length requests (compiled per window-aligned capacity and group
+    size).  Prefill rows are independent, so batching admissions does not
+    change any request's tokens."""
+
+    def prefill_pack(p, st, toks, slots, pages):
+        logits, pre = tfm.lm_prefill(p, toks, cfg, cap)
+        for i in range(k):
+            pre_i = jax.tree.map(
+                lambda a: a[:, i:i + 1] if a.ndim >= 2 else a, pre)
+            st = tfm.pack_prefill_into_states(st, pre_i, slots[i], pages[i],
+                                              cfg)
+        return logits, st
+
+    return jax.jit(prefill_pack, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_prefill_fn(cfg: ModelConfig, chunk: int, m_slot: int) -> Callable:
+    """Per-job chunked prefill program (``prefill_mode="per-job"``): ONE
+    compiled shape per (chunk length, pages-per-slot) serves every chunk of
+    every request — resume point, validity, and the training/decode
+    semantics boundary are data."""
+
+    def run(p, st, toks, slot, pt_row, t0, n_valid, n_train):
+        return tfm.lm_prefill_chunk(p, st, toks, slot, pt_row, t0, n_valid,
+                                    n_train, cfg)
+
+    return jax.jit(run, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_chunk_prefill_fn(cfg: ModelConfig, chunk: int,
+                              m_slot: int) -> Callable:
+    """Batched chunked prefill program (``prefill_mode="batched"``, the
+    default): EVERY currently-prefilling slot advances one chunk in ONE
+    dispatch — which slots advance, their resume points, and validity are
+    data, so the engine issues exactly one prefill dispatch per step no
+    matter how many requests are mid-prefill.  Rows are packed to power-
+    of-two widths; non-aligned prompts ride the same program (the n//m
+    landmark quirk is per-slot data;
+    `core.mita_decode.mita_batched_chunk_prefill`)."""
+
+    def run(p, st, toks, job_active, pt, slots, t0, n_valid, n_train):
+        return tfm.lm_prefill_chunks(p, st, toks, job_active, pt, slots,
+                                     t0, n_valid, n_train, cfg)
+
+    return jax.jit(run, donate_argnums=(1,))
+
+
+class MiTABackend(BackendBase):
+    """Paged MiTA decode caches behind the `DecodeBackend` protocol."""
+
+    name = "mita"
+
+    def __init__(self, params: Any, cfg: ModelConfig, ecfg: Any):
+        from repro.kernels import ops
+        super().__init__(params, cfg, ecfg)
+        if cfg.attn.backend not in ("mita", "mita_ref"):
+            raise ValueError("MiTABackend drives MiTA decode caches "
+                             f"(got attention backend {cfg.attn.backend!r})")
+        # chunk-prefill kernel→XLA VMEM fallbacks are counted process-wide
+        # at trace time; this backend reports the delta since it was built
+        self._fallback_base = ops.prefill_kernel_fallbacks()
+        self.cfg = dataclasses.replace(
+            cfg, attn=dataclasses.replace(
+                cfg.attn, external_finalize=ecfg.finalize == "external"))
+        self.window = cfg.attn.window
+        s = ecfg.n_slots
+        self.states = tfm.init_paged_states(self.cfg, s, ecfg.n_pages,
+                                            ecfg.pages_per_slot)
+        self.m_done = np.zeros(s, np.int32)   # finalized landmarks per slot
+        # window-boundary landmark finalize fused behind a lax.cond —
+        # off-boundary steps skip the O(context) work inside ONE program
+        self._decode = _decode_fn(self.cfg, ecfg.finalize == "external",
+                                  ecfg.sample_device == "fused")
+        # device mirrors of the scheduler tensors (uploaded on change)
+        self._t_dev = self._md_dev = self._pt_dev = self._ac_dev = None
+        self._rid_dev = self._tp_dev = self._si_dev = None
+        self._traceable: set[int] = set()     # validated prompt lengths
+
+    # ------------------------------------------------------------ sizing --
+
+    def chunkable(self, n_train: int, batched: bool) -> bool:
+        """The batched chunk program serves any prompt (the n//m landmark
+        quirk is per-slot data); the per-job program needs window-aligned
+        prompts — the engine routes the rest through the monolithic head."""
+        return batched or n_train % self.window == 0
+
+    def validate_prompt(self, n: int, path: str) -> None:
+        if path == "monolithic":
+            self._check_prefill_traceable(n)
+        elif n % self.window:
+            # the chunk program replicates the training head's n//m
+            # landmark pooling — representable only when m divides n
+            # (pool1d's constraint, the same lengths the static path serves)
+            if n % max(1, n // self.window):
+                raise ValueError(
+                    f"prompt length {n} is not servable by the chunked "
+                    f"prefill path (window {self.window}): the training-"
+                    "path landmark pooling needs n % (n // window) == 0")
+
+    def _check_prefill_traceable(self, n: int) -> None:
+        """Reject prompt lengths the prefill path cannot lower (e.g. the
+        sorted-mita block_q divisibility constraint) at SUBMIT time, with
+        abstract tracing only — a length that failed inside admission after
+        scheduler state was mutated would leak the slot and its pages."""
+        if n in self._traceable:
+            return
+        cap = mdec.window_aligned(n, self.window)
+        mdl = self.cfg
+        try:
+            jax.eval_shape(
+                lambda p, tok: tfm.lm_prefill(p, tok, mdl, cap),
+                self.params,
+                jax.ShapeDtypeStruct((1, n), jnp.int32))
+        except Exception as e:
+            raise ValueError(
+                f"prompt length {n} is not servable by the "
+                f"{mdl.attn.backend!r} prefill path (window {self.window}):"
+                f" {e}") from e
+        self._traceable.add(n)
+
+    # ----------------------------------------------------------- prefill --
+
+    def prefill_group(self, prompts: np.ndarray, slots: list[int],
+                      pages_list: list[list[int]]) -> np.ndarray:
+        k, n = prompts.shape
+        cap = mdec.window_aligned(n, self.window)
+        logits, self.states = _prefill_pack_fn(self.cfg, cap, k)(
+            self.params, self.states, jnp.asarray(prompts, jnp.int32),
+            jnp.asarray(slots, jnp.int32),
+            jnp.asarray(np.stack(
+                [pg[: cap // self.window] for pg in pages_list]), jnp.int32))
+        return np.asarray(logits)
+
+    def prefill_chunk(self, slot: int, pt_row: np.ndarray, toks: np.ndarray,
+                      t0: int, n_valid: int, n_train: int) -> np.ndarray:
+        fn = _chunk_prefill_fn(self.cfg, self.ecfg.prefill_chunk,
+                               self.ecfg.pages_per_slot)
+        logits, self.states = fn(
+            self.params, self.states, jnp.asarray(toks), np.int32(slot),
+            jnp.asarray(pt_row), np.int32(t0), np.int32(n_valid),
+            np.int32(n_train))
+        return np.asarray(logits)
+
+    def prefill_chunks(self, slot_ids: list[int], toks: np.ndarray,
+                       job_active: np.ndarray, page_table: np.ndarray,
+                       t0: np.ndarray, n_valid: np.ndarray,
+                       n_train: np.ndarray) -> np.ndarray:
+        fn = _batched_chunk_prefill_fn(self.cfg, self.ecfg.prefill_chunk,
+                                       self.ecfg.pages_per_slot)
+        logits, self.states = fn(
+            self.params, self.states, jnp.asarray(toks),
+            jnp.asarray(job_active), jnp.asarray(page_table),
+            jnp.asarray(slot_ids, jnp.int32).reshape(len(slot_ids)),
+            jnp.asarray(t0), jnp.asarray(n_valid), jnp.asarray(n_train))
+        return np.asarray(logits)
+
+    # ------------------------------------------------------ slot lifecycle --
+
+    def slot_filled(self, slot: int, n_tokens: int,
+                    snapshot: Any = None) -> None:
+        self.m_done[slot] = n_tokens // self.window
+        self._dirty = True
+
+    def preempt_snapshot(self, slot: int) -> Any:
+        # recompute-from-prompt rebuilds the paged state bit-exactly
+        # (`mita_chunk_prefill` replicates decode-time landmark
+        # availability past the original prompt) — nothing to save
+        return None
+
+    # ------------------------------------------------------------- decode --
+
+    def decode_step(self, tokens_in: np.ndarray, t: np.ndarray,
+                    active: np.ndarray, page_table: np.ndarray,
+                    rid: np.ndarray, temperature: np.ndarray,
+                    sample_idx: np.ndarray, key: jax.Array) -> np.ndarray:
+        if self._dirty:
+            self._t_dev = jnp.asarray(t)
+            self._md_dev = jnp.asarray(self.m_done)
+            self._pt_dev = jnp.asarray(page_table)
+            self._ac_dev = jnp.asarray(active)
+            self._rid_dev = jnp.asarray(rid)
+            self._tp_dev = jnp.asarray(temperature)
+            self._si_dev = jnp.asarray(sample_idx)
+            self._dirty = False
+        # host mirror of the device-side due/m_done transition
+        w = self.window
+        due = active & (t % w == 0) & (t // w > self.m_done)
+        self.m_done = np.where(due, t // w, self.m_done)
+
+        out, self.states, self._t_dev, self._md_dev, self._si_dev = \
+            self._decode(self.params, self.states, jnp.asarray(tokens_in),
+                         self._t_dev, self._md_dev, self._pt_dev,
+                         self._ac_dev, self._rid_dev, self._si_dev,
+                         self._tp_dev, key)
+        self.decode_dispatches += 1
+        # fused sampling downloads [S] int32 tokens; the host path the
+        # whole [S, V] logits (docs/serving.md, host-transfer budget)
+        return np.asarray(out)
+
+    def stats(self) -> dict:
+        from repro.kernels import ops
+        s = super().stats()
+        s["prefill_kernel_fallbacks"] = (ops.prefill_kernel_fallbacks()
+                                         - self._fallback_base)
+        return s
+
+    # ------------------------------------------------------------- oracle --
+
+    def static_reference(self, prompts: np.ndarray, max_new: int,
+                         temperature: float = 0.0,
+                         rids: Optional[list[int]] = None,
+                         sample_key: Optional[jax.Array] = None
+                         ) -> np.ndarray:
+        """Static fixed-batch baseline at the slot capacity — the oracle
+        the engine's greedy tokens are pinned against.  Greedy delegates
+        to `launch.serve.static_generate` (the historical pin);
+        ``temperature`` > 0 drives the same static programs step-by-step
+        but samples with the engine's (rid, index)-keyed rule
+        (`serve.backends.sample_host`), so tempered parity checks mean the
+        same thing on every backend."""
+        from repro.launch.serve import _static_fns, static_generate
+        capacity = self.ecfg.pages_per_slot * self.window
+        if temperature <= 0.0:
+            gen, _ = static_generate(
+                self.params, self.cfg, jnp.asarray(prompts, jnp.int32),
+                max_new, capacity=capacity)
+            return gen
+        from repro.serve.backends import sample_host
+        if sample_key is None:
+            sample_key = jax.random.PRNGKey(0)
+        b, n = prompts.shape
+        rids = list(rids) if rids is not None else list(range(b))
+        w = self.window
+        prefill, decode, finalize = _static_fns(
+            self.cfg, mdec.window_aligned(capacity, w))
+        logits, states = prefill(self.params,
+                                 jnp.asarray(prompts, jnp.int32))
+        logits = np.asarray(logits)
+        out = [[sample_host(logits[row], rids[row], 0, temperature,
+                            sample_key)] for row in range(b)]
+        m_done = n // w
+        for i in range(1, max_new):
+            pos = n + i - 1
+            if self.cfg.attn.external_finalize and pos % w == 0 \
+                    and pos // w > m_done:
+                states = finalize(states)
+                m_done = pos // w
+            tok = jnp.asarray([o[-1] for o in out], jnp.int32)
+            logits, states = decode(self.params, states, tok,
+                                    jnp.asarray(pos))
+            logits = np.asarray(logits)
+            for row in range(b):
+                out[row].append(sample_host(logits[row], rids[row], i,
+                                            temperature, sample_key))
+        return np.asarray(out, np.int32)

@@ -1,45 +1,41 @@
-"""Continuous-batching engine over the paged MiTA decode cache.
+"""Continuous-batching serving engine — a backend-agnostic scheduler.
 
-The scheduler is plain host Python; everything device-side is one of three
-jitted programs (docs/serving.md has the page layout, the request-lifecycle
-state machine, and the full program inventory):
+The scheduler is plain host Python and never touches a device tensor:
+admission, the priority queue, preemption, chunked-prefill pacing, page
+accounting, sampling bookkeeping, and stats are generic over the
+`DecodeBackend` protocol (`repro.serve.backends`).  A backend owns the
+model parameters, the per-slot decode state, its device mirrors, and every
+compiled program; the engine owns requests, slots, pages, and time.
+docs/serving.md documents the protocol, the request lifecycle, and each
+backend's program inventory.
 
-  * ``prefill+pack`` — `lm_prefill` over an admission group (same-length
-    waiting requests, power-of-two sizes) packed straight into the slots'
-    pages; compiled per (window-aligned prompt capacity, group size);
-    monolithic mode (``prefill_chunk = 0``) only;
-  * ``batched chunk prefill`` — `lm_prefill_chunks`: ONE program per
-    configured chunk length that advances EVERY currently-prefilling
-    slot's chunk in a single dispatch per engine step (which slots
-    advance, chunk index, resume point, and validity are data — the
-    compiled shape is independent of how many requests are mid-prefill).
-    Enabled by ``EngineConfig.prefill_chunk``; long prompts then admit
-    incrementally, interleaved with the decode batch, instead of stalling
-    it.  Non-window-aligned prompts ride the same program (the monolithic
-    head's n//m landmark quirk is per-slot data).  Inside, the chunk
-    dispatches between the fused Pallas chunk-prefill kernel and the XLA
-    path (`kernels.ops.use_prefill_kernel`).
-    ``EngineConfig.prefill_mode = "per-job"`` keeps the PR-2 baseline
-    (`lm_prefill_chunk`, one job per step, monolithic non-aligned head);
-  * ``decode``       — `lm_paged_decode_step`, ONE program for the whole
-    slot batch regardless of per-request progress (per-slot positions, page
-    tables, and activity are data, not shape).  The window-boundary
-    landmark finalize is fused behind a scalar `lax.cond`, the per-slot
-    position/finalize/sampling counters advance on device, and with
-    ``EngineConfig.sample_device == "fused"`` sampling runs inside the
-    program too — the hot loop then uploads and downloads [S] int32
-    tokens instead of downloading [S, V] logits (docs/serving.md has the
-    transfer budget).  Inside the program, the paged attention dispatches
-    between the fused Pallas kernel and the XLA gather path
-    (`kernels.ops.use_paged_kernel`).
+Per engine step the backend is asked for at most three dispatches:
+
+  * ``prefill_group``   — monolithic prefill of an admission group packed
+    straight into the group's slots (``prefill_chunk = 0``);
+  * ``prefill_chunks``  — ONE program advancing EVERY currently-prefilling
+    slot's chunk per step (batched mode; ``prefill_chunk`` > 0); long
+    prompts then admit incrementally, interleaved with the decode batch,
+    instead of stalling it.  ``prefill_mode = "per-job"`` keeps the legacy
+    one-job-per-step dispatch (``prefill_chunk``);
+  * ``decode_step``     — ONE program for the whole slot batch regardless
+    of per-request progress (per-slot positions, page tables, and activity
+    are data, not shape).  With ``sample_device == "fused"`` sampling runs
+    inside the program and the hot loop downloads [S] int32 tokens instead
+    of [S, V] logits.
+
+Pages are the scheduler's admission-control currency; whether a page is a
+real pool region (the paged-attention backend) or pure context-budget
+accounting (constant-size recurrent states) is the backend's business.
 
 Chunked mode also enables priority preemption: under page pressure the
 scheduler evicts the lowest-priority victim (releasing its pages) and later
 rebuilds it by chunk-prefilling prompt + generated-so-far — recompute-from-
 prompt, vLLM-style.  A preempted request emits the same greedy tokens it
-would have emitted unpreempted (`tests/test_serve_chunked.py` pins this).
+would have emitted unpreempted (`tests/test_serve_chunked.py` and
+`tests/test_serve_backends.py` pin this per backend).
 
-Greedy sampling is exact w.r.t. the static `launch.serve` path: a request
+Greedy sampling is exact w.r.t. each backend's static reference: a request
 decoded by the engine emits the same tokens it would emit in a fixed batch
 (`tests/test_serve.py` pins this).  Temperature sampling derives its key
 from (request id, token index) so results are batching-invariant too.
@@ -49,101 +45,13 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-import functools
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mita_decode as mdec
-from repro.models import transformer as tfm
-from repro.models.modules import ModelConfig
-
-
-@functools.lru_cache(maxsize=None)
-def _decode_fn(cfg: ModelConfig, fused_finalize: bool,
-               fused_sampling: bool) -> Callable:
-    """Fused whole-batch decode step, cached at module level so every
-    engine instance with the same model config shares compiled code.
-
-    Scheduler tensors (t, m_done, sample index) advance ON DEVICE: the hot
-    loop uploads only the fed-back tokens — page tables, activity,
-    positions, and per-request (rid, temperature) are re-uploaded solely
-    when admission/retire changes them.  With ``fused_sampling`` the step
-    also samples inside the program (`tfm.sample_tokens`) and returns [S]
-    int32 tokens; otherwise it returns the [S, V] logits for the host
-    sampler."""
-    w = cfg.attn.window
-
-    def step(p, st, tok, t, m_done, pt, ac, rid, si, temp, key):
-        due = None
-        if fused_finalize:
-            due = ac & (t % w == 0) & (t // w > m_done)
-            m_done = jnp.where(due, t // w, m_done)
-        sample = (rid, si, temp, key) if fused_sampling else None
-        out, st = tfm.lm_paged_decode_step(p, st, tok, t, pt, ac, cfg,
-                                           due=due, sample=sample)
-        adv = ac.astype(t.dtype)
-        return out, st, t + adv, m_done, si + adv
-
-    return jax.jit(step, donate_argnums=(1, 3, 4, 8))
-
-
-@functools.lru_cache(maxsize=None)
-def _prefill_pack_fn(cfg: ModelConfig, cap: int, k: int) -> Callable:
-    """Fused batched prefill + pack-into-slots: one dispatch admits ``k``
-    same-length requests (compiled per window-aligned capacity and group
-    size).  Prefill rows are independent, so batching admissions does not
-    change any request's tokens."""
-
-    def prefill_pack(p, st, toks, slots, pages):
-        logits, pre = tfm.lm_prefill(p, toks, cfg, cap)
-        for i in range(k):
-            pre_i = jax.tree.map(
-                lambda a: a[:, i:i + 1] if a.ndim >= 2 else a, pre)
-            st = tfm.pack_prefill_into_states(st, pre_i, slots[i], pages[i],
-                                              cfg)
-        return logits, st
-
-    return jax.jit(prefill_pack, donate_argnums=(1,))
-
-
-@functools.lru_cache(maxsize=None)
-def _chunk_prefill_fn(cfg: ModelConfig, chunk: int, m_slot: int) -> Callable:
-    """Per-job chunked prefill program (``prefill_mode="per-job"``): ONE
-    compiled shape per (chunk length, pages-per-slot) serves every chunk of
-    every request — resume point, validity, and the training/decode
-    semantics boundary are data."""
-
-    def run(p, st, toks, slot, pt_row, t0, n_valid, n_train):
-        return tfm.lm_prefill_chunk(p, st, toks, slot, pt_row, t0, n_valid,
-                                    n_train, cfg)
-
-    return jax.jit(run, donate_argnums=(1,))
-
-
-@functools.lru_cache(maxsize=None)
-def _batched_chunk_prefill_fn(cfg: ModelConfig, chunk: int,
-                              m_slot: int) -> Callable:
-    """Batched chunked prefill program (``prefill_mode="batched"``, the
-    default): EVERY currently-prefilling slot advances one chunk in ONE
-    dispatch — which slots advance, their resume points, and validity are
-    data, so the engine issues exactly one prefill dispatch per step no
-    matter how many requests are mid-prefill.  Rows are packed to power-
-    of-two widths (compute scales with the number of prefilling jobs;
-    ≤ log₂(slots)+1 compiled variants, the same bound as monolithic
-    admission grouping).  Non-aligned prompts ride the same program (the
-    n//m landmark quirk is per-slot data;
-    `core.mita_decode.mita_batched_chunk_prefill`), so no monolithic
-    prefill head remains in chunked mode."""
-
-    def run(p, st, toks, job_active, pt, slots, t0, n_valid, n_train):
-        return tfm.lm_prefill_chunks(p, st, toks, job_active, pt, slots,
-                                     t0, n_valid, n_train, cfg)
-
-    return jax.jit(run, donate_argnums=(1,))
+from repro.serve import backends as _backends
 
 
 @dataclasses.dataclass(eq=False)
@@ -192,9 +100,8 @@ class EngineConfig:
 
     Invariants enforced at construction: the pool minus the reserve still
     fits one slot's maximum context (otherwise admission could deadlock),
-    and ``prefill_chunk`` is a positive multiple of the landmark window
-    (pages and landmarks are window-aligned, so chunk boundaries must be
-    too).
+    and ``prefill_chunk`` is a positive multiple of the backend's window
+    (pages are window-quantized, so chunk boundaries must be too).
 
     ``prefill_chunk`` = 0 (default) keeps the monolithic prefill path:
     full page budget up front, no preemption — exactly the PR-1 engine.
@@ -207,24 +114,28 @@ class EngineConfig:
     dip into them, which is what keeps running requests running when a
     burst of admissions would otherwise drain the pool.
 
+    ``finalize``: backend-interpreted decode-time bookkeeping mode.  For
+    the paged-attention backend, "external" runs the window-boundary
+    summary update as part of the fused step only when due (the default)
+    and "inline" folds it into every step; constant-size recurrent
+    backends have no deferred work and ignore it.
+
     ``sample_device``: where decode-time sampling runs.  ``"host"``
-    downloads the [S, V] logits every step and samples in Python (the
-    PR-2 path); ``"fused"`` samples inside the decode program
-    (`models.transformer.sample_tokens`) and downloads [S] int32 tokens —
-    same greedy argmax, same (rid, index)-derived categorical keys, so
-    tokens are bit-identical across the two modes.
+    downloads the [S, V] logits every step and samples in Python;
+    ``"fused"`` samples inside the decode program and downloads [S] int32
+    tokens — same greedy argmax, same (rid, index)-derived categorical
+    keys, so tokens are bit-identical across the two modes.
 
     ``prefill_mode`` (chunked mode only): ``"batched"`` (default) advances
     EVERY prefilling slot one chunk per step in ONE fused dispatch (a slot
-    mask, same compiled shape regardless of how many slots are prefilling)
-    and serves non-window-aligned prompts through the same chunk program;
-    ``"per-job"`` is the PR-2 baseline — at most one job advances one
-    chunk per step in its own dispatch, non-aligned prompts take the
-    monolithic head."""
+    mask, same compiled shape regardless of how many slots are prefilling);
+    ``"per-job"`` is the legacy baseline — at most one job advances one
+    chunk per step in its own dispatch, and prompts the backend's chunk
+    program cannot start from scratch take the monolithic path."""
     n_slots: int = 8                # decode batch width
     n_pages: int = 64               # shared pool size (pages of `window`)
     pages_per_slot: int = 8         # max context per request, in pages
-    finalize: str = "external"      # external | inline (see core.mita_decode)
+    finalize: str = "external"      # external | inline (backend-specific)
     prefill_chunk: int = 0          # chunk length (0 = monolithic prefill)
     reserve_pages: int = 0          # appends-only page reserve
     sample_device: str = "host"     # host | fused (on-device sampling)
@@ -271,11 +182,14 @@ class _PageAllocator:
 class _WaitEntry:
     """Queue entry: (priority desc, submit order) defines admission order.
     ``resume`` holds (tokens, times, meta) for a preempted request awaiting
-    its recompute-from-prompt re-admission; ``evictions`` counts every
-    preemption the request has suffered (mid-prefill restarts included)."""
+    its recompute-from-prompt re-admission; ``snapshot`` is the backend's
+    opaque `preempt_snapshot` payload handed back at `slot_filled`;
+    ``evictions`` counts every preemption the request has suffered
+    (mid-prefill restarts included)."""
     req: Request
     seq: int
     resume: Optional[tuple] = None
+    snapshot: Any = None
     evictions: int = 0
 
     @property
@@ -297,37 +211,35 @@ class _PrefillJob:
 class ServingEngine:
     """Admit/evict requests each step; keep the fused decode batch full."""
 
-    def __init__(self, params: Any, cfg: ModelConfig,
+    def __init__(self, params: Any, cfg: Any,
                  ecfg: EngineConfig = EngineConfig(),
-                 sample_key: jax.Array | None = None):
-        if cfg.attn.backend not in ("mita", "mita_ref"):
-            raise ValueError("ServingEngine drives MiTA decode caches")
+                 sample_key: jax.Array | None = None,
+                 backend: Optional[Any] = None):
         if ecfg.finalize not in ("external", "inline"):
             raise ValueError(f"unknown finalize mode {ecfg.finalize!r}")
         if ecfg.n_pages - ecfg.reserve_pages < ecfg.pages_per_slot:
             raise ValueError("pool minus reserve smaller than one slot's "
                              "max context — admission could deadlock")
-        if ecfg.prefill_chunk and (ecfg.prefill_chunk < 0
-                                   or ecfg.prefill_chunk % cfg.attn.window):
-            raise ValueError("prefill_chunk must be a positive multiple of "
-                             f"the landmark window ({cfg.attn.window})")
         if ecfg.reserve_pages < 0:
             raise ValueError("reserve_pages must be >= 0")
         if ecfg.sample_device not in ("host", "fused"):
             raise ValueError(f"unknown sample_device {ecfg.sample_device!r}")
         if ecfg.prefill_mode not in ("batched", "per-job"):
             raise ValueError(f"unknown prefill_mode {ecfg.prefill_mode!r}")
+        self.backend = (backend if backend is not None
+                        else _backends.resolve(params, cfg, ecfg))
         self.params = params
-        self.cfg = dataclasses.replace(
-            cfg, attn=dataclasses.replace(
-                cfg.attn, external_finalize=ecfg.finalize == "external"))
+        self.cfg = cfg
         self.ecfg = ecfg
-        self.w = cfg.attn.window
+        self.w = self.backend.window
+        if ecfg.prefill_chunk and (ecfg.prefill_chunk < 0
+                                   or ecfg.prefill_chunk % self.w):
+            raise ValueError("prefill_chunk must be a positive multiple of "
+                             f"the backend window ({self.w})")
         self._key = (jax.random.PRNGKey(0) if sample_key is None
                      else sample_key)
 
         s, m = ecfg.n_slots, ecfg.pages_per_slot
-        self.states = tfm.init_paged_states(self.cfg, s, ecfg.n_pages, m)
         self.alloc = _PageAllocator(ecfg.n_pages, ecfg.reserve_pages)
 
         # host-owned scheduler state
@@ -335,7 +247,6 @@ class ServingEngine:
         self.t = np.zeros(s, np.int32)
         self.active = np.zeros(s, bool)
         self.tokens_in = np.zeros(s, np.int32)
-        self.m_done = np.zeros(s, np.int32)   # finalized landmarks per slot
         # per-slot sampling inputs for the fused on-device sampler
         self.slot_rid = np.zeros(s, np.int32)
         self.slot_temp = np.zeros(s, np.float32)
@@ -358,66 +269,20 @@ class ServingEngine:
         self.prefill_dispatches = 0
         self.step_times: list[float] = []
         self._seq = 0
-
-        # window-boundary landmark finalize fused behind a lax.cond —
-        # off-boundary steps skip the O(context) work inside ONE program
-        self._decode = _decode_fn(self.cfg, ecfg.finalize == "external",
-                                  ecfg.sample_device == "fused")
-        # device mirrors of the scheduler tensors (uploaded on change)
-        self._dirty = True
-        self._t_dev = self._md_dev = self._pt_dev = self._ac_dev = None
-        self._rid_dev = self._tp_dev = self._si_dev = None
-        self._traceable: set[int] = set()   # validated prompt lengths
         self._inflight: set[int] = set()    # rids waiting or active
 
     # ------------------------------------------------------------ plumbing --
 
-    def _prefill_fn(self, n: int, k: int) -> Callable:
-        cap = mdec.window_aligned(n, self.w)
-        return _prefill_pack_fn(self.cfg, cap, k)
-
-    def _chunk_fn(self) -> Callable:
-        return _chunk_prefill_fn(self.cfg, self.ecfg.prefill_chunk,
-                                 self.ecfg.pages_per_slot)
-
-    def _batched_chunk_fn(self) -> Callable:
-        return _batched_chunk_prefill_fn(self.cfg, self.ecfg.prefill_chunk,
-                                         self.ecfg.pages_per_slot)
-
     def _sample(self, logits: np.ndarray, req: Request, index: int) -> int:
-        if req.temperature <= 0.0:
-            return int(np.argmax(logits))
-        key = jax.random.fold_in(jax.random.fold_in(self._key, req.rid), index)
-        # temperature floor matches the fused sampler exactly
-        # (`tfm.sample_tokens`) so host/fused tokens stay bit-identical
-        # even for degenerate near-zero temperatures
-        return int(jax.random.categorical(
-            key, jnp.asarray(logits) / max(req.temperature, 1e-6)))
+        # ONE host sampling rule shared with every backend's
+        # static_reference (and bit-matched by the fused on-device
+        # sampler) — the parity gates compare a single recipe
+        return _backends.sample_host(logits, req.rid, index,
+                                     req.temperature, self._key)
 
     def pages_needed(self, req: Request) -> int:
-        cap = len(req.prompt) + req.max_new_tokens
-        return mdec.window_aligned(cap, self.w) // self.w
-
-    def _check_prefill_traceable(self, n: int) -> None:
-        """Reject prompt lengths the prefill path cannot lower (e.g. the
-        sorted-mita block_q divisibility constraint) at SUBMIT time, with
-        abstract tracing only — a length that failed inside admission after
-        scheduler state was mutated would leak the slot and its pages."""
-        if n in self._traceable:
-            return
-        cap = mdec.window_aligned(n, self.w)
-        mdl = self.cfg
-        try:
-            jax.eval_shape(
-                lambda p, tok: tfm.lm_prefill(p, tok, mdl, cap),
-                self.params,
-                jax.ShapeDtypeStruct((1, n), jnp.int32))
-        except Exception as e:
-            raise ValueError(
-                f"prompt length {n} is not servable by the "
-                f"{mdl.attn.backend!r} prefill path (window {self.w}): {e}"
-            ) from e
-        self._traceable.add(n)
+        return self.backend.pages_needed(len(req.prompt)
+                                         + req.max_new_tokens)
 
     def warmup(self, prompt_lens: list[int]) -> None:
         """Compile every program the serving loop can hit for the given
@@ -428,20 +293,21 @@ class ServingEngine:
         variant.  Runs on one scratch engine so this engine's
         pool/scheduler state is untouched (compile caches are shared
         module-wide)."""
-        scratch = ServingEngine(self.params, self.cfg, self.ecfg)
+        scratch = ServingEngine(self.params, self.cfg, self.ecfg,
+                                backend=self.backend.fresh())
         k_max = 1 if (self.ecfg.prefill_chunk
                       and self.ecfg.prefill_mode == "per-job") \
             else self.ecfg.n_slots
         if self.ecfg.prefill_chunk and self.ecfg.prefill_mode == "batched":
             # no compiled program depends on prompt length in batched
-            # chunked mode (length, resume point, and the n//m quirk are
-            # data) — one representative length covers every width variant
+            # chunked mode (length and resume point are data) — one
+            # representative length covers every width variant
             prompt_lens = [max(prompt_lens)] if prompt_lens else []
         for n in sorted(set(prompt_lens)):
             # probe requests claim the MINIMAL page budget a real request
             # of this length would (max_new=1), so warmup never rejects a
             # length the engine can actually serve
-            gen = 2 if mdec.window_aligned(n + 2, self.w) // self.w \
+            gen = 2 if self.backend.pages_needed(n + 2) \
                 <= self.ecfg.pages_per_slot else 1
             sizes = []
             k = 1
@@ -456,16 +322,20 @@ class ServingEngine:
                 scratch.run([Request(rid=-1 - i, prompt=np.zeros(n, np.int32),
                                      max_new_tokens=gen) for i in range(k)])
 
-    def stats(self) -> dict[str, float]:
+    def stats(self) -> dict[str, Any]:
         """Scheduler counters: fused steps, prefill chunks run (per slot),
         prefill dispatches issued (batched mode: ≤ 1 per step regardless of
         how many slots are prefilling), preemptions, and the allocator's
-        high-water / reserve accounting."""
-        return {"steps": self.steps, "chunks": self.n_chunks,
-                "prefill_dispatches": self.prefill_dispatches,
-                "preemptions": self.n_preemptions,
-                "pages_high_water": self.alloc.high_water,
-                "reserve_dips": self.alloc.reserve_dips}
+        high-water / reserve accounting — merged with the backend's own
+        counters (decode dispatches, kernel fallbacks)."""
+        s = {"backend": self.backend.name,
+             "steps": self.steps, "chunks": self.n_chunks,
+             "prefill_dispatches": self.prefill_dispatches,
+             "preemptions": self.n_preemptions,
+             "pages_high_water": self.alloc.high_water,
+             "reserve_dips": self.alloc.reserve_dips}
+        s.update(self.backend.stats())
+        return s
 
     # ----------------------------------------------------------- scheduler --
 
@@ -485,19 +355,23 @@ class ServingEngine:
         if req.rid in self._inflight:
             raise ValueError(f"request id {req.rid} is already in flight")
         n = len(req.prompt)
-        if not self.ecfg.prefill_chunk or (
-                self.ecfg.prefill_mode == "per-job" and n % self.w):
-            self._check_prefill_traceable(n)
-        elif n % self.w:
-            # batched chunked mode serves non-aligned prompts through the
-            # chunk program, which replicates the training head's n//m
-            # landmark pooling — representable only when m divides n
-            # (pool1d's constraint, the same lengths the static path serves)
-            if n % max(1, n // self.w):
-                raise ValueError(
-                    f"prompt length {n} is not servable by the chunked "
-                    f"prefill path (window {self.w}): the training-path "
-                    f"landmark pooling needs n % (n // window) == 0")
+        batched = self.ecfg.prefill_mode == "batched"
+        if not self.ecfg.prefill_chunk:
+            self.backend.validate_prompt(n, "monolithic")
+        elif self.backend.chunkable(n, batched):
+            self.backend.validate_prompt(n, "chunked")
+        elif batched:
+            # batched chunked mode has no monolithic route — reject now
+            # rather than feed the chunk program a prompt the backend
+            # said it cannot start (unreachable for the current backends,
+            # which chunk everything in batched mode)
+            raise ValueError(
+                f"prompt length {n} is not servable: the "
+                f"{self.backend.name} backend cannot start it through the "
+                "batched chunk program (use prefill_mode='per-job' or "
+                "monolithic prefill)")
+        else:
+            self.backend.validate_prompt(n, "monolithic")
         self._inflight.add(req.rid)
         self._seq += 1
         self._enqueue(_WaitEntry(req=req, seq=self._seq))
@@ -525,7 +399,8 @@ class ServingEngine:
         # fast path (sample_tokens conds on "any slot tempered")
         self.slot_temp[slot] = 0.0
         self.free_slots.append(slot)
-        self._dirty = True
+        self.backend.retire(slot)
+        self.backend.invalidate()
         self._inflight.discard(req.rid)
         self.finished.append(FinishedRequest(
             rid=req.rid, tokens=np.asarray(out, np.int32),
@@ -552,9 +427,9 @@ class ServingEngine:
 
     def _preempt(self, slot: int) -> None:
         """Evict ``slot``: release its pages and requeue its request.  A
-        decoding victim keeps its emitted tokens/stamps and is rebuilt by
-        recompute-from-prompt; a prefilling victim simply restarts (it has
-        emitted nothing)."""
+        decoding victim keeps its emitted tokens/stamps (plus the backend's
+        snapshot) and is rebuilt by recompute-from-prompt; a prefilling
+        victim simply restarts (it has emitted nothing)."""
         self.n_preemptions += 1
         self.alloc.release(self.slot_pages.pop(slot))
         self.page_table[slot] = 0
@@ -570,10 +445,11 @@ class ServingEngine:
             meta = self.slot_meta.pop(slot)
             self.slot_npre.pop(slot)
             entry.resume = (out, times, meta)
+            entry.snapshot = self.backend.preempt_snapshot(slot)
             self.active[slot] = False
             self.t[slot] = 0
             self.slot_temp[slot] = 0.0
-            self._dirty = True
+            self.backend.invalidate()
         entry.evictions += 1
         self.free_slots.append(slot)
         self._enqueue(entry)
@@ -599,16 +475,17 @@ class ServingEngine:
 
     def _first_chunk_pages(self, entry: _WaitEntry) -> int:
         """Pages the first prefill dispatch of this request needs: one
-        chunk's worth — or, in per-job mode, the whole (window-aligned)
-        prompt when the prompt is not window-aligned and must go through
-        the monolithic head (batched mode chunks every prompt)."""
+        chunk's worth — or the whole (window-aligned) prompt when the
+        backend's chunk program cannot start this prompt in per-job mode
+        and it must go through the monolithic path."""
         n_train = len(entry.req.prompt)
         n_total = n_train if entry.resume is None \
             else n_train + len(entry.resume[0]) - 1
-        if self.ecfg.prefill_mode == "per-job" and n_train % self.w:
-            return mdec.window_aligned(n_train, self.w) // self.w
+        if self.ecfg.prefill_mode == "per-job" \
+                and not self.backend.chunkable(n_train, batched=False):
+            return self.backend.pages_needed(n_train)
         first = min(self.ecfg.prefill_chunk, n_total)
-        return mdec.window_aligned(first, self.w) // self.w
+        return self.backend.pages_needed(first)
 
     def _admit_chunked(self, now: float) -> None:
         """Chunked admission: one request at a time, first-chunk pages only.
@@ -634,13 +511,14 @@ class ServingEngine:
             self.prefilling[slot] = _PrefillJob(
                 entry=entry, toks=toks, n_train=len(entry.req.prompt),
                 admit_time=now)
+            self.backend.alloc_slot(slot)
             # claim the first dispatch's pages NOW so concurrent admissions
             # never overcommit the same free pages
             pages = self.alloc.alloc(first)
             self.slot_pages[slot] = pages
             self.page_table[slot] = 0
             self.page_table[slot, : len(pages)] = pages
-            self._dirty = True
+            self.backend.invalidate()
             self._seq += 1
             self.slot_seq[slot] = self._seq
 
@@ -676,17 +554,12 @@ class ServingEngine:
             slots = [self.free_slots.pop() for _ in group]
             pages_list = [self.alloc.alloc(self.pages_needed(e.req))
                           for e in group]
-            cap_pre = mdec.window_aligned(n, self.w)
+            for slot in slots:
+                self.backend.alloc_slot(slot)
 
-            logits, self.states = self._prefill_fn(n, len(group))(
-                self.params, self.states,
-                jnp.asarray(np.stack([e.req.prompt for e in group]),
-                            jnp.int32),
-                jnp.asarray(slots, jnp.int32),
-                jnp.asarray(np.stack(
-                    [pg[: cap_pre // self.w] for pg in pages_list]),
-                    jnp.int32))
-            logits = np.asarray(logits)
+            logits = self.backend.prefill_group(
+                np.stack([e.req.prompt for e in group]).astype(np.int32),
+                slots, pages_list)
 
             for i, (entry, slot, pages) in enumerate(
                     zip(group, slots, pages_list)):
@@ -702,10 +575,10 @@ class ServingEngine:
                 self.page_table[slot] = 0
                 self.page_table[slot, : len(pages)] = pages
                 self.t[slot] = n
-                self.m_done[slot] = n // self.w
                 self.active[slot] = True
                 self.slot_rid[slot] = req.rid
                 self.slot_temp[slot] = req.temperature
+                self.backend.slot_filled(slot, n)
                 first = self._sample(logits[i], req, 0)
                 self.sample_idx[slot] = 1
                 self.slot_meta[slot] = (now, time.perf_counter())
@@ -713,7 +586,7 @@ class ServingEngine:
                 self.tokens_in[slot] = first
                 if req.max_new_tokens == 1:
                     self._retire(slot, time.perf_counter())
-            self._dirty = True
+            self.backend.invalidate()
 
     # ------------------------------------------------------ chunked prefill --
 
@@ -747,15 +620,15 @@ class ServingEngine:
         for i, p in enumerate(pages):
             self.page_table[slot, base + i] = p
         self.slot_pages[slot].extend(pages)
-        self._dirty = True
+        self.backend.invalidate()
         return True
 
     def _advance_prefill(self, now: float) -> None:
         """Advance prefilling jobs: ONE fused dispatch per engine step.
 
         Batched mode (default): every prefilling slot that can grow its
-        pages advances one chunk in a single `lm_prefill_chunks` dispatch
-        over a slot mask.  Per-job mode (the PR-2 baseline): only the
+        pages advances one chunk in a single `prefill_chunks` dispatch
+        over a slot mask.  Per-job mode (the legacy baseline): only the
         best-keyed job advances, in its own dispatch."""
         if not self.prefilling:
             return
@@ -779,7 +652,7 @@ class ServingEngine:
                 continue              # evicted while an earlier job grew
             t0 = job.done
             nv = min(chunk, len(job.toks) - t0)
-            target = mdec.window_aligned(t0 + nv, self.w) // self.w
+            target = self.backend.pages_needed(t0 + nv)
             if not self._grow_pages(slot, target):
                 continue
             if self.prefilling.get(slot) is job:
@@ -808,63 +681,53 @@ class ServingEngine:
             t0s[i] = job.done
             nvs[i] = nv
             ntr[i] = job.n_train
-        logits, self.states = self._batched_chunk_fn()(
-            self.params, self.states, jnp.asarray(toks),
-            jnp.asarray(job_active),
-            jnp.asarray(self.page_table[slot_ids]),
-            jnp.asarray(slot_ids, jnp.int32).reshape(p_w),
-            jnp.asarray(t0s), jnp.asarray(nvs), jnp.asarray(ntr))
+        logits = self.backend.prefill_chunks(
+            slot_ids, toks, job_active, self.page_table[slot_ids],
+            t0s, nvs, ntr)
         self.n_chunks += len(advancing)
         self.prefill_dispatches += 1
-        logits = np.asarray(logits)
         for i, (slot, job, nv) in enumerate(advancing):
             job.done += nv
             if job.done == len(job.toks):
                 self._finish_prefill(slot, job, logits[i], now)
 
     def _advance_prefill_per_job(self, now: float) -> None:
-        """Run ONE prefill dispatch (a chunk, or the monolithic head for a
-        non-window-aligned prompt) for the best prefilling job — bounding
-        per-step added latency to one chunk regardless of prompt length."""
+        """Run ONE prefill dispatch (a chunk, or the monolithic path for a
+        prompt the chunk program cannot start) for the best prefilling job
+        — bounding per-step added latency to one chunk regardless of
+        prompt length."""
         slot, job = min(self.prefilling.items(),
                         key=lambda kv: kv[1].entry.key)
         n_total = len(job.toks)
-        if job.done == 0 and job.n_train % self.w:
-            # monolithic head: the training-path prefill program this prompt
-            # length would have used unchunked (non-aligned prompts keep the
-            # quirkless monolithic semantics; see docs/serving.md)
+        if job.done == 0 and not self.backend.chunkable(job.n_train,
+                                                        batched=False):
+            # monolithic path: the program this prompt length would have
+            # used unchunked (see docs/serving.md)
             n = job.n_train
-            cap = mdec.window_aligned(n, self.w)
-            if not self._grow_pages(slot, cap // self.w):
+            if not self._grow_pages(slot, self.backend.pages_needed(n)):
                 return
-            logits, self.states = self._prefill_fn(n, 1)(
-                self.params, self.states,
-                jnp.asarray(job.toks[None, :n], jnp.int32),
-                jnp.asarray([slot], jnp.int32),
-                jnp.asarray([self.slot_pages[slot][: cap // self.w]],
-                            jnp.int32))
+            logits = self.backend.prefill_group(
+                job.toks[None, :n].astype(np.int32), [slot],
+                [self.slot_pages[slot]])
             job.done = n
             self.prefill_dispatches += 1
             if job.done == n_total:
-                self._finish_prefill(slot, job, np.asarray(logits)[0], now)
+                self._finish_prefill(slot, job, logits[0], now)
             return
         chunk = self.ecfg.prefill_chunk
         t0 = job.done
         nv = min(chunk, n_total - t0)
-        target = mdec.window_aligned(t0 + nv, self.w) // self.w
-        if not self._grow_pages(slot, target):
+        if not self._grow_pages(slot, self.backend.pages_needed(t0 + nv)):
             return
         toks = np.zeros(chunk, np.int32)
         toks[:nv] = job.toks[t0:t0 + nv]
-        logits, self.states = self._chunk_fn()(
-            self.params, self.states, jnp.asarray(toks), np.int32(slot),
-            jnp.asarray(self.page_table[slot]), np.int32(t0), np.int32(nv),
-            np.int32(job.n_train))
+        logits = self.backend.prefill_chunk(
+            slot, self.page_table[slot], toks, t0, nv, job.n_train)
         self.n_chunks += 1
         self.prefill_dispatches += 1
         job.done = t0 + nv
         if job.done == n_total:
-            self._finish_prefill(slot, job, np.asarray(logits), now)
+            self._finish_prefill(slot, job, logits, now)
 
     def _finish_prefill(self, slot: int, job: _PrefillJob,
                         logits: np.ndarray, now: float) -> None:
@@ -879,9 +742,10 @@ class ServingEngine:
         self.slot_req[slot] = req
         self.slot_entry[slot] = entry
         self.t[slot] = n_total
-        self.m_done[slot] = n_total // self.w
         self.active[slot] = True
-        self._dirty = True
+        self.backend.slot_filled(slot, n_total, snapshot=entry.snapshot)
+        entry.snapshot = None
+        self.backend.invalidate()
         self.slot_npre[slot] = entry.evictions
         self.slot_rid[slot] = req.rid
         self.slot_temp[slot] = req.temperature
@@ -929,7 +793,7 @@ class ServingEngine:
             page = self.alloc.alloc(1, reserved=True)[0]
             self.slot_pages[slot].append(page)
             self.page_table[slot, need_idx] = page
-            self._dirty = True
+            self.backend.invalidate()
 
     # ---------------------------------------------------------------- step --
 
@@ -945,31 +809,13 @@ class ServingEngine:
         if not self.active.any():
             return bool(self.waiting or self.prefilling)
 
-        if self._dirty:
-            self._t_dev = jnp.asarray(self.t)
-            self._md_dev = jnp.asarray(self.m_done)
-            self._pt_dev = jnp.asarray(self.page_table)
-            self._ac_dev = jnp.asarray(self.active)
-            self._rid_dev = jnp.asarray(self.slot_rid)
-            self._tp_dev = jnp.asarray(self.slot_temp)
-            self._si_dev = jnp.asarray(self.sample_idx)
-            self._dirty = False
-        # host mirror of the device-side due/m_done transition
-        due = self.active & (self.t % self.w == 0) & (self.t // self.w
-                                                      > self.m_done)
-        self.m_done = np.where(due, self.t // self.w, self.m_done)
-
         fused_sampling = self.ecfg.sample_device == "fused"
         t0 = time.perf_counter()
-        out, self.states, self._t_dev, self._md_dev, self._si_dev = \
-            self._decode(self.params, self.states,
-                         jnp.asarray(self.tokens_in), self._t_dev,
-                         self._md_dev, self._pt_dev, self._ac_dev,
-                         self._rid_dev, self._si_dev, self._tp_dev,
-                         self._key)
         # fused sampling downloads [S] int32 tokens; the host path the
         # whole [S, V] logits (docs/serving.md, host-transfer budget)
-        out = np.asarray(out)
+        out = self.backend.decode_step(
+            self.tokens_in, self.t, self.active, self.page_table,
+            self.slot_rid, self.slot_temp, self.sample_idx, self._key)
         self.step_times.append(time.perf_counter() - t0)
         self.steps += 1
 

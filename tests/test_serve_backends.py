@@ -1,0 +1,288 @@
+"""Backend-agnostic serving core: the `DecodeBackend` protocol.
+
+Contract layers:
+  * scheduler: `serve/engine.py` contains NO backend-specific types or
+    branches — it talks only to the protocol (pinned by a source grep);
+  * recurrent backends (Mamba2 SSD, RG-LRU hybrid): engine greedy tokens
+    are bit-identical to each backend's static/full-forward reference —
+    chunked and monolithic admission, slot reuse, fused sampling, AND
+    recompute-from-prompt preemption (the victim re-emits identical
+    tokens);
+  * scheduler regressions re-run under a recurrent backend: the
+    equal-priority livelock scenario must still converge;
+  * observability: chunk-prefill kernel→XLA VMEM fallbacks are counted
+    (`kernels.ops.prefill_kernel_fallbacks`) and warned once, and
+    `stats()` reports per-backend dispatch counts.
+"""
+
+import dataclasses
+import inspect
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.models import mamba2 as m2
+from repro.models import rglru as rglru_mod
+from repro.models.modules import AttnConfig, ModelConfig
+from repro.serve import EngineConfig, Request, ServingEngine, backends
+from repro.serve.backends.recurrent import Mamba2Backend, RGLRUBackend
+
+W = 8
+
+
+def _mamba_cfg():
+    # d_model=32 -> d_inner=64 -> one 64-dim SSD head; attn unused except
+    # as the window/page quantum
+    return ModelConfig(n_layers=2, d_model=32, n_heads=1, n_kv=1, d_ff=0,
+                       vocab=97, attn=AttnConfig(window=W, backend="full"))
+
+
+def _rg_cfg():
+    # one (RG-LRU, RG-LRU, attention) super-block with MiTA attention
+    return ModelConfig(n_layers=3, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+                       vocab=97,
+                       attn=AttnConfig(window=W, k=W, backend="mita_ref"))
+
+
+def _setup(family):
+    if family == "mamba2":
+        cfg = _mamba_cfg()
+        params = m2.mamba_init(jax.random.PRNGKey(0), cfg)
+        mk = Mamba2Backend
+    else:
+        cfg = _rg_cfg()
+        params = rglru_mod.rg_init(jax.random.PRNGKey(0), cfg)
+        mk = RGLRUBackend
+    return cfg, params, lambda ecfg: mk(params, cfg, ecfg)
+
+
+def _engine(cfg, params, mk, ecfg):
+    return ServingEngine(params, cfg, ecfg, backend=mk(ecfg))
+
+
+def _requests(vocab, n, lens, gens, seed=7, temperature=0.0):
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(21)
+    reqs = []
+    for i in range(n):
+        ln = int(rng.choice(lens))
+        p = np.asarray(jax.random.randint(jax.random.fold_in(key, i), (ln,),
+                                          0, vocab))
+        reqs.append(Request(rid=i, prompt=p,
+                            max_new_tokens=int(rng.choice(gens)),
+                            temperature=temperature))
+    return reqs
+
+
+# ---------------------------------------------------------- scheduler core --
+
+def test_engine_module_is_backend_agnostic():
+    """The acceptance grep: the scheduler has no backend-specific types or
+    branches — every device-side operation goes through the protocol."""
+    import repro.serve.engine as eng
+    src = inspect.getsource(eng)
+    assert "PagedMiTAState" not in src
+    assert "mita" not in src
+
+
+def test_resolve_requires_explicit_backend_for_recurrent():
+    cfg = _mamba_cfg()
+    params = m2.mamba_init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="MiTA"):
+        ServingEngine(params, cfg, EngineConfig())
+
+
+def test_for_arch_rejects_encdec():
+    from repro.configs.registry import get_arch
+    arch = get_arch("whisper-tiny", smoke=True)
+    with pytest.raises(ValueError, match="family"):
+        backends.for_arch(arch, {}, EngineConfig())
+
+
+# ----------------------------------------------------- greedy bit-parity ---
+
+@pytest.mark.parametrize("family", ["mamba2", "rglru"])
+def test_engine_chunked_matches_reference(family):
+    """Chunked admission through the recurrent backend: every request's
+    greedy tokens == the backend's static reference (time-major full-prompt
+    scan + single-token decode), with slot reuse mid-trace, and stats()
+    reports the backend's dispatch counts."""
+    cfg, params, mk = _setup(family)
+    reqs = _requests(cfg.vocab, 6, lens=[W, 2 * W, 3 * W], gens=[2, 5, 9])
+    ecfg = EngineConfig(n_slots=3, pages_per_slot=5, n_pages=12,
+                        prefill_chunk=W)
+    eng = _engine(cfg, params, mk, ecfg)
+    done = eng.run(reqs)
+    assert len(done) == len(reqs)
+    ref_backend = mk(ecfg)
+    for f, r in zip(done, reqs):
+        ref = ref_backend.static_reference(r.prompt[None], r.max_new_tokens)
+        np.testing.assert_array_equal(f.tokens, ref[0],
+                                      err_msg=f"{family} req {f.rid}")
+    st = eng.stats()
+    assert st["backend"] == family
+    assert st["decode_dispatches"] == eng.steps
+    assert st["chunks"] >= sum(-(-len(r.prompt) // W) for r in reqs) - 1
+
+
+@pytest.mark.parametrize("family", ["mamba2", "rglru"])
+def test_engine_monolithic_matches_reference(family):
+    """Unchunked (grouped) admission rides the backend's `prefill_group`
+    path; tokens still match the reference, and fused on-device sampling
+    is bit-identical to host sampling under mixed temperatures."""
+    cfg, params, mk = _setup(family)
+    reqs = _requests(cfg.vocab, 4, lens=[2 * W], gens=[6])
+    for r in reqs[::2]:
+        r.temperature = 0.8
+    ecfg = EngineConfig(n_slots=2, pages_per_slot=5, n_pages=12)
+    host = _engine(cfg, params, mk, ecfg).run(reqs)
+    fused = _engine(cfg, params, mk, dataclasses.replace(
+        ecfg, sample_device="fused")).run(reqs)
+    ref_backend = mk(ecfg)
+    for h, f, r in zip(host, fused, reqs):
+        np.testing.assert_array_equal(h.tokens, f.tokens,
+                                      err_msg=f"{family} host!=fused "
+                                              f"req {h.rid}")
+        if r.temperature == 0.0:
+            ref = ref_backend.static_reference(r.prompt[None],
+                                               r.max_new_tokens)
+            np.testing.assert_array_equal(h.tokens, ref[0],
+                                          err_msg=f"{family} req {h.rid}")
+        else:
+            ref = ref_backend.static_reference(
+                r.prompt[None], r.max_new_tokens,
+                temperature=r.temperature, rids=[r.rid])
+            np.testing.assert_array_equal(h.tokens, ref[0],
+                                          err_msg=f"{family} tempered "
+                                                  f"req {h.rid}")
+
+
+# ----------------------------------------------------------- preemption ----
+
+@pytest.mark.parametrize("family", ["mamba2", "rglru"])
+def test_preemption_recompute_bit_parity(family):
+    """A low-priority victim evicted mid-decode by high-priority arrivals
+    is rebuilt by re-scanning prompt + generated-so-far through the chunk
+    program — the constant-size state recompute is exact, so the victim
+    re-emits identical greedy tokens."""
+    cfg, params, mk = _setup(family)
+    N, gen = 2 * W, 20
+    victim = np.asarray(jax.random.randint(jax.random.PRNGKey(3), (N,),
+                                           0, cfg.vocab))
+    ecfg = EngineConfig(n_slots=2, pages_per_slot=6, n_pages=8,
+                        prefill_chunk=2 * W)
+    ref = _engine(cfg, params, mk, ecfg).run(
+        [Request(rid=0, prompt=victim, max_new_tokens=gen)])[0].tokens
+
+    eng = _engine(cfg, params, mk, ecfg)
+    eng.submit(Request(rid=0, prompt=victim, max_new_tokens=gen, priority=0))
+    for _ in range(6):
+        eng.step()
+    hp = jax.random.randint(jax.random.PRNGKey(5), (2, 2 * W), 0, cfg.vocab)
+    eng.submit(Request(rid=1, prompt=np.asarray(hp[0]), max_new_tokens=20,
+                       priority=5))
+    eng.submit(Request(rid=2, prompt=np.asarray(hp[1]), max_new_tokens=20,
+                       priority=5))
+    while eng.step():
+        owned = [p for pages in eng.slot_pages.values() for p in pages]
+        assert len(owned) == len(set(owned)), "page double-booked"
+        assert len(owned) + len(eng.alloc.free) == ecfg.n_pages, "page leak"
+    done = sorted(eng.finished, key=lambda f: f.rid)
+    assert len(done) == 3
+    assert eng.n_preemptions >= 1, "scenario no longer triggers preemption"
+    assert done[0].preemptions >= 1
+    np.testing.assert_array_equal(done[0].tokens, ref)
+
+
+def test_equal_priority_jobs_never_livelock_recurrent():
+    """The PR-2 livelock regression re-run under the mamba2 backend: two
+    equal-priority long prompts whose chunked prefills together exceed the
+    pool must converge via the strict (priority, seniority) order."""
+    cfg, params, mk = _setup("mamba2")
+    N = 8 * W
+    prompts = jax.random.randint(jax.random.PRNGKey(13), (2, N), 0,
+                                 cfg.vocab)
+    eng = _engine(cfg, params, mk, EngineConfig(
+        n_slots=2, pages_per_slot=9, n_pages=9, prefill_chunk=2 * W))
+    for i in range(2):
+        eng.submit(Request(rid=i, prompt=np.asarray(prompts[i]),
+                           max_new_tokens=1))
+    for _ in range(400):
+        if not eng.step():
+            break
+    else:
+        raise AssertionError("engine livelocked: no progress in 400 steps")
+    done = sorted(eng.finished, key=lambda f: f.rid)
+    assert [f.rid for f in done] == [0, 1]
+    assert all(len(f.tokens) == 1 for f in done)
+
+
+# -------------------------------------------------------- observability ----
+
+def test_prefill_kernel_fallback_counted_and_warned_once():
+    """A VMEM-budget 'no' when the kernel was requested increments the
+    process-wide fallback counter and warns exactly once; off-TPU auto
+    mode (kernel never requested) does not count."""
+    shapes = dict(nc=16, window=W, m=8, k_width=8, g=2, d=16)
+    base = ops.prefill_kernel_fallbacks()
+    ops._PREFILL_FALLBACK_WARNED = False
+    with pytest.warns(RuntimeWarning, match="VMEM budget"):
+        assert not ops.use_prefill_kernel("kernel", budget=1, **shapes)
+    assert ops.prefill_kernel_fallbacks() == base + 1
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # further fallbacks stay silent
+        assert not ops.use_prefill_kernel("kernel", budget=1, **shapes)
+    assert ops.prefill_kernel_fallbacks() == base + 2
+    if not ops.on_tpu():
+        assert not ops.use_prefill_kernel("auto", budget=1, **shapes)
+        assert ops.prefill_kernel_fallbacks() == base + 2
+    # impl="xla" is a choice, not a fallback
+    assert not ops.use_prefill_kernel("xla", budget=1, **shapes)
+    assert ops.prefill_kernel_fallbacks() == base + 2
+
+
+def test_stats_surface_fallback_counter():
+    """The MiTA backend's `stats()["prefill_kernel_fallbacks"]` reports
+    the delta since the backend was built; recurrent backends (which never
+    dispatch the chunk-prefill kernel) always report 0 instead of
+    inheriting another engine's process-global fallbacks."""
+    mita_cfg = ModelConfig(
+        n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=97,
+        attn=AttnConfig(window=W, k=W, backend="mita_ref"))
+    from repro.models import transformer as tfm
+    mita_eng = ServingEngine(tfm.lm_init(jax.random.PRNGKey(0), mita_cfg),
+                             mita_cfg, EngineConfig(
+                                 n_slots=2, pages_per_slot=4, n_pages=8))
+    cfg, params, mk = _setup("mamba2")
+    rec_eng = _engine(cfg, params, mk, EngineConfig(
+        n_slots=2, pages_per_slot=4, n_pages=8))
+    assert mita_eng.stats()["prefill_kernel_fallbacks"] == 0
+    ops._PREFILL_KERNEL_FALLBACKS += 3       # simulate trace-time fallbacks
+    try:
+        assert mita_eng.stats()["prefill_kernel_fallbacks"] == 3
+        assert rec_eng.stats()["prefill_kernel_fallbacks"] == 0
+    finally:
+        ops._PREFILL_KERNEL_FALLBACKS -= 3
+
+
+def test_mita_static_reference_tempered_matches_engine():
+    """The MiTA backend's `static_reference` honours the protocol's
+    tempered-oracle contract: (rid, index)-keyed sampling identical to the
+    engine's, so tempered parity checks mean the same thing on every
+    backend."""
+    cfg = ModelConfig(
+        n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=97,
+        attn=AttnConfig(window=W, k=W, backend="mita_ref"))
+    from repro.models import transformer as tfm
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    ecfg = EngineConfig(n_slots=2, pages_per_slot=4, n_pages=8)
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (2 * W,),
+                                           0, cfg.vocab))
+    req = Request(rid=7, prompt=prompt, max_new_tokens=6, temperature=0.8)
+    done = ServingEngine(params, cfg, ecfg).run([req])
+    ref = backends.resolve(params, cfg, ecfg).static_reference(
+        prompt[None], 6, temperature=0.8, rids=[7])
+    np.testing.assert_array_equal(done[0].tokens, ref[0])

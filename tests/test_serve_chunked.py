@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.core import mita as mref
 from repro.core import mita_decode as mdec
@@ -345,6 +346,43 @@ def test_allocator_reserve_and_high_water():
     assert al.reserve_dips == 1 and al.high_water == 7
     al.release(got)
     assert al.in_use == 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 16), st.integers(0, 8), st.integers(0, 2**32 - 1))
+def test_allocator_reserve_high_water_property(n_pages, reserve, seed):
+    """Property: under ANY interleaving of alloc/release/reserved-alloc,
+    (1) pages in use never exceed the pool, (2) ordinary allocations never
+    eat into the reserve, (3) the high-water mark is monotone and equals
+    the max in-use ever seen, (4) releases restore exact accounting."""
+    reserve = min(reserve, n_pages)
+    al = _PageAllocator(n_pages, reserve=reserve)
+    rng = np.random.default_rng(seed)
+    held: list[list[int]] = []
+    seen_hw = 0
+    for _ in range(50):
+        op = rng.integers(3)
+        if op == 0 or (op == 2 and not held):       # ordinary alloc
+            n = int(rng.integers(0, n_pages + 2))
+            if al.can_alloc(n):
+                held.append(al.alloc(n))
+                assert len(al.free) >= al.reserve, "reserve invaded"
+            else:
+                assert n > len(al.free) - al.reserve
+        elif op == 1:                               # reserved (append) alloc
+            if al.can_alloc(1, reserved=True):
+                held.append(al.alloc(1, reserved=True))
+        else:                                       # release
+            al.release(held.pop(int(rng.integers(len(held)))))
+        in_use = sum(len(h) for h in held)
+        assert al.in_use == in_use, "accounting drift"
+        assert in_use <= n_pages, "pool overcommitted"
+        seen_hw = max(seen_hw, in_use)
+        # the max is always attained right after an alloc, so the mark is
+        # exactly the running max (and therefore monotone)
+        assert al.high_water == seen_hw, "high-water drift"
+        assert sorted(al.free + [p for h in held for p in h]) \
+            == list(range(n_pages)), "page leaked or duplicated"
 
 
 def test_engine_rejects_bad_chunk_and_reserve():
