@@ -89,6 +89,7 @@ def _engine_compare(vocab: int, n_req: int, n_slots: int,
         # per-step host<->device traffic of the hot loop: tokens up, and
         # logits ([S, V] f32) or sampled tokens ([S] i32) down
         down = n_slots * (vocab * 4 if name == "host" else 4)
+        st = eng.stats()
         out[name] = {
             "tok_s": total_tokens / dt,
             "step_ms_p50": float(np.percentile(steps, 50) * 1e3),
@@ -96,6 +97,9 @@ def _engine_compare(vocab: int, n_req: int, n_slots: int,
             "steps": int(eng.steps),
             "bytes_down_per_step": down,
             "bytes_up_per_step": n_slots * 4,
+            "prefill_kernel_fallbacks": int(st["prefill_kernel_fallbacks"]),
+            "prefix_cache_hits": int(st["prefix_cache_hits"]),
+            "pages_shared": int(st["pages_shared"]),
         }
         emit(f"decode_engine_{name}", dt * 1e6 / total_tokens,
              f"{out[name]['tok_s']:.1f} tok/s | step p50 "

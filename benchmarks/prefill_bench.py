@@ -93,6 +93,9 @@ def _engine_compare(n_short: int, n_long: int, n_slots: int,
             "dispatches_per_chunk": (st["prefill_dispatches"]
                                      / max(st["chunks"], 1)),
             "preemptions": int(st["preemptions"]),
+            "prefill_kernel_fallbacks": int(st["prefill_kernel_fallbacks"]),
+            "prefix_cache_hits": int(st["prefix_cache_hits"]),
+            "pages_shared": int(st["pages_shared"]),
         }
         emit(f"prefill_engine_{name}", dt * 1e6 / total_tokens,
              f"{out[name]['tok_s']:.1f} tok/s | short ttft "

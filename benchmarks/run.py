@@ -6,7 +6,8 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [tab2 tab5 ...]
 
 import sys
 
-from benchmarks import decode_bench, prefill_bench, serve_bench, tables
+from benchmarks import (decode_bench, prefill_bench, prefix_bench,
+                        serve_bench, tables)
 
 
 ALL = [
@@ -21,6 +22,7 @@ ALL = [
     ("serve_arch", serve_bench.serve_arch),
     ("decode", decode_bench.decode_bench),
     ("prefill", prefill_bench.prefill_bench),
+    ("prefix", prefix_bench.run_prefix),
 ]
 
 

@@ -325,7 +325,9 @@ def serve_arch(which: str = "all", n_req: int = 10,
             prefill_dispatches=st["prefill_dispatches"],
             decode_dispatches=st["decode_dispatches"],
             preemptions=st["preemptions"],
-            prefill_kernel_fallbacks=st["prefill_kernel_fallbacks"])
+            prefill_kernel_fallbacks=st["prefill_kernel_fallbacks"],
+            prefix_cache_hits=st["prefix_cache_hits"],
+            pages_shared=st["pages_shared"])
         emit(f"serve_arch_{name}", dt * 1e6 / total,
              f"{total / dt:.1f} tok/s | greedy_match={match} | "
              f"chunks={st['chunks']} in {st['prefill_dispatches']} "

@@ -348,9 +348,14 @@ class PagedMiTAState(NamedTuple):
 
     Ownership contract: per-slot progress (t), page tables, and activity
     live on the host and are passed into each step — the scheduler owns
-    them and guarantees a page belongs to at most one slot, so every write
-    issued on behalf of a slot lands in rows no other slot can read
-    (docs/serving.md, invariant 1)."""
+    them and guarantees every page a step may WRITE (prefill rows at
+    t >= the chunk's resume point, the decode append row at t) is
+    referenced by exactly one slot.  Pages may be read-shared (the prefix
+    cache attaches one page to many slots' tables, ref-counted), but a
+    shared page is always a fully-committed prompt window that no program
+    writes again: appends land past every slot's shared prefix, and the
+    fused kernels' in-place aliasing only ever targets the writing slot's
+    exclusively-owned page (docs/serving.md, invariant 1)."""
 
     k_pool: jax.Array
     v_pool: jax.Array

@@ -145,7 +145,14 @@ def main(argv=None):
                     help="chunk-prefill backend: fused Pallas kernel when "
                          "it fits the VMEM budget (auto/kernel) or the XLA "
                          "oracle; REPRO_PREFILL_IMPL overrides")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="continuous+chunked: radix cache of committed "
+                         "window-aligned prompt prefixes — repeated "
+                         "prompts attach cached pages by reference and "
+                         "skip straight to the first unshared chunk")
     args = ap.parse_args(argv)
+    if args.prefix_cache and not args.prefill_chunk:
+        ap.error("--prefix-cache requires --prefill-chunk > 0")
 
     arch = get_arch(args.arch, smoke=args.smoke)
     if arch.family not in ("dense", "moe", "vlm", "ssm", "hybrid"):
@@ -174,7 +181,8 @@ def main(argv=None):
                         prefill_chunk=args.prefill_chunk,
                         reserve_pages=args.reserve_pages,
                         sample_device=args.sample_device,
-                        prefill_mode=args.prefill_mode)
+                        prefill_mode=args.prefill_mode,
+                        prefix_cache=args.prefix_cache)
 
     if args.engine == "static" and arch.family in ("dense", "moe", "vlm"):
         gen, tm = static_generate(params, cfg,
@@ -218,7 +226,9 @@ def main(argv=None):
               f"{st['prefill_dispatches']} dispatches, "
               f"preemptions={st['preemptions']}, "
               f"pages_hw={st['pages_high_water']}, "
-              f"kernel_fallbacks={st['prefill_kernel_fallbacks']}")
+              f"kernel_fallbacks={st['prefill_kernel_fallbacks']}, "
+              f"prefix_hits={st['prefix_cache_hits']}, "
+              f"pages_shared={st['pages_shared']}")
         sample = np.stack([done[b].tokens for b in range(min(2, len(done)))])
     print("sample generations (token ids):")
     for b in range(min(2, sample.shape[0])):

@@ -49,6 +49,19 @@ Protocol (duck-typed; `BackendBase` supplies the defaults):
                                   ``ServingEngine.stats()``.
   * ``static_reference(...)``   — the backend's static/full-forward oracle;
                                   engine greedy tokens must be bit-identical.
+  * ``supports_prefix_cache``   — True if pages hold real per-token context
+                                  a prefix cache can share by reference
+                                  (False → the engine silently runs
+                                  cache-off; recurrent states fold the
+                                  whole prefix into one accumulator, so
+                                  there is nothing page-resident to reuse).
+  * ``prefix_snapshot(slot, m)``— host copies of the slot's first ``m``
+                                  per-window summary payloads, stored in
+                                  the radix cache next to the page ids.
+  * ``attach_prefix(slot, payloads)`` — install cached payloads so the
+                                  slot's state is exactly what prefilling
+                                  those windows itself would have produced
+                                  (the pages attach via the page table).
 """
 
 from __future__ import annotations
@@ -89,6 +102,7 @@ class BackendBase:
     nothing)."""
 
     name = "backend"
+    supports_prefix_cache = False
 
     def __init__(self, params: Any, cfg: Any, ecfg: Any):
         self.params = params
@@ -121,6 +135,14 @@ class BackendBase:
 
     def preempt_snapshot(self, slot: int) -> Any:
         return None
+
+    def prefix_snapshot(self, slot: int, n_windows: int) -> list:
+        raise NotImplementedError(
+            f"{self.name} backend does not support the prefix cache")
+
+    def attach_prefix(self, slot: int, payloads: list) -> None:
+        raise NotImplementedError(
+            f"{self.name} backend does not support the prefix cache")
 
     def invalidate(self) -> None:
         self._dirty = True

@@ -111,10 +111,39 @@ def _batched_chunk_prefill_fn(cfg: ModelConfig, chunk: int,
     return jax.jit(run, donate_argnums=(1,))
 
 
+@functools.lru_cache(maxsize=None)
+def _attach_prefix_fn(cfg: ModelConfig) -> Callable:
+    """Install cached prefix summary rows into one slot: landmark
+    queries/values, global expert rows and their validity, with both
+    running query sums zeroed (a window-aligned resume point closes every
+    window, so the cold engine's sums are exactly zero there too) and the
+    prompt-side landmark queries mirroring the committed ones (for
+    window-aligned prompts the two landmark systems share one grid —
+    which is precisely why only aligned prefixes are cached).  One
+    compiled shape per model config: the slot is data and rows beyond the
+    attached prefix are zeros, masked by landmark availability exactly
+    like a retired slot's stale rows."""
+
+    def attach(st, slot, lm_q, lm_v, ei, ev):
+        zero = jnp.zeros(st.q_sum.shape[:1] + st.q_sum.shape[2:],
+                         st.q_sum.dtype)
+        return st._replace(
+            lm_q=st.lm_q.at[:, slot].set(lm_q),
+            lm_v=st.lm_v.at[:, slot].set(lm_v),
+            expert_idx=st.expert_idx.at[:, slot].set(ei),
+            expert_valid=st.expert_valid.at[:, slot].set(ev),
+            pre_lm_q=st.pre_lm_q.at[:, slot].set(lm_q),
+            q_sum=st.q_sum.at[:, slot].set(zero),
+            pre_q_sum=st.pre_q_sum.at[:, slot].set(zero))
+
+    return jax.jit(attach, donate_argnums=(0,))
+
+
 class MiTABackend(BackendBase):
     """Paged MiTA decode caches behind the `DecodeBackend` protocol."""
 
     name = "mita"
+    supports_prefix_cache = True
 
     def __init__(self, params: Any, cfg: ModelConfig, ecfg: Any):
         from repro.kernels import ops
@@ -232,6 +261,46 @@ class MiTABackend(BackendBase):
         # (`mita_chunk_prefill` replicates decode-time landmark
         # availability past the original prompt) — nothing to save
         return None
+
+    # --------------------------------------------------------- prefix cache --
+
+    def prefix_snapshot(self, slot: int, n_windows: int) -> list:
+        """Host copies of the slot's first ``n_windows`` per-window summary
+        rows — one (lm_q, lm_v, expert_idx, expert_valid) tuple per window,
+        each [L, Hkv, ...] (the per-layer stack).  The expert rows are
+        GLOBAL pool rows into the prefix's own pages, so they stay valid
+        for every future holder of those pages — the radix cache's path
+        invariant guarantees a node's pages outlive the node."""
+        st = self.states
+        lm_q, lm_v, ei, ev = jax.device_get(
+            (st.lm_q[:, slot], st.lm_v[:, slot],
+             st.expert_idx[:, slot], st.expert_valid[:, slot]))
+        return [(lm_q[:, :, i].copy(), lm_v[:, :, i].copy(),
+                 ei[:, :, i].copy(), ev[:, :, i].copy())
+                for i in range(n_windows)]
+
+    def attach_prefix(self, slot: int, payloads: list) -> None:
+        """Make ``slot`` look exactly as if it had chunk-prefilled the
+        cached windows itself: summary rows installed, query sums zeroed
+        (window-aligned resume), pages arrive via the page table.  Padded
+        to the full per-slot landmark capacity on the host so one jitted
+        program (slot and rows are data) serves every hit."""
+        st = self.states
+        _, _, hkv, m_cap, d = st.lm_q.shape
+        n_layers = st.lm_q.shape[0]
+        k_w = st.expert_idx.shape[-1]
+        lm_q = np.zeros((n_layers, hkv, m_cap, d), st.lm_q.dtype)
+        lm_v = np.zeros((n_layers, hkv, m_cap, d), st.lm_v.dtype)
+        ei = np.zeros((n_layers, hkv, m_cap, k_w), st.expert_idx.dtype)
+        ev = np.zeros((n_layers, hkv, m_cap, k_w), bool)
+        for i, (q_i, v_i, ei_i, ev_i) in enumerate(payloads):
+            lm_q[:, :, i] = q_i
+            lm_v[:, :, i] = v_i
+            ei[:, :, i] = ei_i
+            ev[:, :, i] = ev_i
+        self.states = _attach_prefix_fn(self.cfg)(
+            self.states, np.int32(slot), jnp.asarray(lm_q),
+            jnp.asarray(lm_v), jnp.asarray(ei), jnp.asarray(ev))
 
     # ------------------------------------------------------------- decode --
 

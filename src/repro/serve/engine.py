@@ -83,7 +83,12 @@ class Request:
 class FinishedRequest:
     """``arrival`` is trace-relative (copied from the Request); all other
     stamps are absolute `time.perf_counter` values.  ``preemptions`` counts
-    how many times the request was evicted and rebuilt."""
+    how many times the request was evicted and rebuilt.
+
+    ``cancelled``: the request was killed by `ServingEngine.cancel` —
+    ``tokens`` holds whatever was emitted before the kill (possibly
+    nothing), and a request cancelled while still waiting carries zeroed
+    admission/TTFT stamps."""
     rid: int
     tokens: np.ndarray              # [max_new_tokens] generated ids
     arrival: float
@@ -92,6 +97,7 @@ class FinishedRequest:
     finished: float
     token_times: list[float] = dataclasses.field(default_factory=list)
     preemptions: int = 0
+    cancelled: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,7 +137,18 @@ class EngineConfig:
     mask, same compiled shape regardless of how many slots are prefilling);
     ``"per-job"`` is the legacy baseline — at most one job advances one
     chunk per step in its own dispatch, and prompts the backend's chunk
-    program cannot start from scratch take the monolithic path."""
+    program cannot start from scratch take the monolithic path.
+
+    ``prefix_cache`` (chunked mode only): keep a radix cache of committed
+    window-aligned prompt prefixes, keyed by token content.  An incoming
+    prompt whose leading windows match a cached prefix attaches those
+    pages by reference (ref-counted, read-only) plus the per-window
+    summary rows the backend snapshotted when the prefix was first
+    computed, and its chunked prefill skips straight to the first
+    unshared chunk — TTFT collapses for shared-system-prompt traffic.
+    Backends that do not store per-token context in pages have nothing to
+    reuse and silently run cache-off.  Cached pages are reclaimed, LRU
+    leaf first, before the scheduler resorts to preempting live work."""
     n_slots: int = 8                # decode batch width
     n_pages: int = 64               # shared pool size (pages of `window`)
     pages_per_slot: int = 8         # max context per request, in pages
@@ -140,10 +157,20 @@ class EngineConfig:
     reserve_pages: int = 0          # appends-only page reserve
     sample_device: str = "host"     # host | fused (on-device sampling)
     prefill_mode: str = "batched"   # batched | per-job (chunk dispatch)
+    prefix_cache: bool = False      # shared-prefix reuse (chunked only)
 
 
 class _PageAllocator:
-    """Free-list over the shared pool.  A page belongs to ≤ 1 active slot.
+    """Ref-counted free-list over the shared pool.
+
+    A page leaves the free list with one reference (`alloc`); additional
+    holders `retain` it (prefix sharing: a cached prefix node and every
+    slot reading it each hold one reference) and every holder `release`s
+    it — the page returns to the free list only when the LAST reference
+    drops.  Releasing a free or never-retained page, or the same page
+    twice in one call, is a hard error: with shared pages a silent
+    double-free would hand one holder's live page to a new owner, which is
+    state corruption, not mis-accounting.
 
     ``reserve`` pages are invisible to ordinary allocations (admission,
     prefill chunks) and only served when ``reserved=True`` (decode appends)
@@ -154,12 +181,21 @@ class _PageAllocator:
         self.n_pages = n_pages
         self.reserve = reserve
         self.free: list[int] = list(range(n_pages))
+        self.refs: dict[int, int] = {}  # page id -> live reference count
         self.high_water = 0             # max pages ever in use
         self.reserve_dips = 0           # appends served from the reserve
 
     @property
     def in_use(self) -> int:
         return self.n_pages - len(self.free)
+
+    def refcount(self, page: int) -> int:
+        return self.refs.get(page, 0)
+
+    @property
+    def shared_pages(self) -> int:
+        """Pages currently held by more than one reference."""
+        return sum(1 for c in self.refs.values() if c > 1)
 
     def can_alloc(self, n: int, reserved: bool = False) -> bool:
         avail = len(self.free) if reserved else len(self.free) - self.reserve
@@ -171,11 +207,37 @@ class _PageAllocator:
         if reserved and len(self.free) - n < self.reserve:
             self.reserve_dips += 1
         pages, self.free = self.free[:n], self.free[n:]
+        for p in pages:
+            self.refs[p] = 1
         self.high_water = max(self.high_water, self.in_use)
         return pages
 
+    def retain(self, pages: list[int]) -> None:
+        """Add one reference to each (already-allocated) page."""
+        for p in pages:
+            if self.refs.get(p, 0) < 1:
+                raise RuntimeError(
+                    f"retain of page {p} which is not allocated")
+        for p in pages:
+            self.refs[p] += 1
+
     def release(self, pages: list[int]) -> None:
-        self.free.extend(pages)
+        """Drop one reference per page; free pages whose count hits zero.
+
+        Validates the whole batch before mutating anything, so a raising
+        call never half-applies."""
+        if len(set(pages)) != len(pages):
+            raise RuntimeError(
+                f"release with duplicate page ids: {sorted(pages)}")
+        for p in pages:
+            if self.refs.get(p, 0) < 1:
+                raise RuntimeError(
+                    f"double-free: page {p} has no live reference")
+        for p in pages:
+            self.refs[p] -= 1
+            if self.refs[p] == 0:
+                del self.refs[p]
+                self.free.append(p)
 
 
 @dataclasses.dataclass(eq=False)
@@ -185,12 +247,17 @@ class _WaitEntry:
     its recompute-from-prompt re-admission; ``snapshot`` is the backend's
     opaque `preempt_snapshot` payload handed back at `slot_filled`;
     ``evictions`` counts every preemption the request has suffered
-    (mid-prefill restarts included)."""
+    (mid-prefill restarts included).  ``first_admit`` is the stamp of the
+    FIRST admission — a preempted victim (mid-prefill ones included, which
+    carry no ``resume``) must report its original admission time, not the
+    re-admission's, or TTFT under-reports queueing delay for exactly the
+    requests that suffered most."""
     req: Request
     seq: int
     resume: Optional[tuple] = None
     snapshot: Any = None
     evictions: int = 0
+    first_admit: Optional[float] = None
 
     @property
     def key(self):
@@ -226,6 +293,10 @@ class ServingEngine:
             raise ValueError(f"unknown sample_device {ecfg.sample_device!r}")
         if ecfg.prefill_mode not in ("batched", "per-job"):
             raise ValueError(f"unknown prefill_mode {ecfg.prefill_mode!r}")
+        if ecfg.prefix_cache and not ecfg.prefill_chunk:
+            raise ValueError("prefix_cache requires chunked prefill "
+                             "(prefill_chunk > 0): cache hits resume the "
+                             "chunk program at the first unshared chunk")
         self.backend = (backend if backend is not None
                         else _backends.resolve(params, cfg, ecfg))
         self.params = params
@@ -270,6 +341,19 @@ class ServingEngine:
         self.step_times: list[float] = []
         self._seq = 0
         self._inflight: set[int] = set()    # rids waiting or active
+
+        # prefix cache (opt-in; silently off for backends with nothing
+        # page-resident to reuse) + its counters, zero when disabled
+        self.cache = None
+        if ecfg.prefix_cache and getattr(self.backend,
+                                         "supports_prefix_cache", False):
+            from repro.serve.prefix_cache import RadixPrefixCache
+            self.cache = RadixPrefixCache(self.alloc, self.w)
+        self.n_prefix_hits = 0
+        self.n_prefix_misses = 0
+        self.n_pages_shared = 0           # pages attached by reference
+        self.n_prefix_tokens_reused = 0   # prompt tokens never re-prefilled
+        self.prefix_hits: dict[int, int] = {}  # rid -> tokens reused
 
     # ------------------------------------------------------------ plumbing --
 
@@ -333,7 +417,15 @@ class ServingEngine:
              "prefill_dispatches": self.prefill_dispatches,
              "preemptions": self.n_preemptions,
              "pages_high_water": self.alloc.high_water,
-             "reserve_dips": self.alloc.reserve_dips}
+             "reserve_dips": self.alloc.reserve_dips,
+             "prefix_cache_hits": self.n_prefix_hits,
+             "prefix_cache_misses": self.n_prefix_misses,
+             "pages_shared": self.n_pages_shared,
+             "prefix_tokens_reused": self.n_prefix_tokens_reused,
+             "prefix_cache_pages": (self.cache.n_pages
+                                    if self.cache is not None else 0),
+             "prefix_cache_evictions": (self.cache.evictions
+                                        if self.cache is not None else 0)}
         s.update(self.backend.stats())
         return s
 
@@ -383,7 +475,7 @@ class ServingEngine:
         self.slot_out[slot].append(tok)
         self.slot_times[slot].append(now)
 
-    def _retire(self, slot: int, now: float) -> None:
+    def _retire(self, slot: int, now: float, cancelled: bool = False) -> None:
         req = self.slot_req.pop(slot)
         self.slot_entry.pop(slot)
         out = self.slot_out.pop(slot)
@@ -405,7 +497,55 @@ class ServingEngine:
         self.finished.append(FinishedRequest(
             rid=req.rid, tokens=np.asarray(out, np.int32),
             arrival=req.arrival, admitted=admitted, first_token=ttft,
-            finished=now, token_times=times, preemptions=npre))
+            finished=now, token_times=times, preemptions=npre,
+            cancelled=cancelled))
+
+    def cancel(self, rid: int) -> bool:
+        """Kill an in-flight request in ANY state — waiting (fresh or
+        preempted-awaiting-readmission), mid-chunked-prefill, or decoding —
+        releasing its slot and page references immediately and emitting a
+        ``cancelled`` FinishedRequest carrying whatever tokens were already
+        out.  Returns False if the rid is not in flight (already finished,
+        never submitted, or cancelled twice)."""
+        now = time.perf_counter()
+        for entry in self.waiting:
+            if entry.req.rid == rid:
+                self.waiting.remove(entry)
+                out, times, meta = entry.resume or \
+                    ([], [], (entry.first_admit or 0.0, 0.0))
+                self._inflight.discard(rid)
+                self.finished.append(FinishedRequest(
+                    rid=rid, tokens=np.asarray(out, np.int32),
+                    arrival=entry.req.arrival, admitted=meta[0],
+                    first_token=meta[1], finished=now,
+                    token_times=list(times), preemptions=entry.evictions,
+                    cancelled=True))
+                return True
+        for slot, job in self.prefilling.items():
+            if job.entry.req.rid != rid:
+                continue
+            entry = job.entry
+            del self.prefilling[slot]
+            self.alloc.release(self.slot_pages.pop(slot))
+            self.slot_seq.pop(slot)
+            self.page_table[slot] = 0
+            self.free_slots.append(slot)
+            self.backend.retire(slot)
+            self.backend.invalidate()
+            self._inflight.discard(rid)
+            out, times, meta = entry.resume or \
+                ([], [], (job.admit_time, 0.0))
+            self.finished.append(FinishedRequest(
+                rid=rid, tokens=np.asarray(out, np.int32),
+                arrival=entry.req.arrival, admitted=meta[0],
+                first_token=meta[1], finished=now, token_times=list(times),
+                preemptions=entry.evictions, cancelled=True))
+            return True
+        for slot, req in self.slot_req.items():
+            if req.rid == rid:
+                self._retire(slot, now, cancelled=True)
+                return True
+        return False
 
     # ---------------------------------------------------------- preemption --
 
@@ -454,16 +594,31 @@ class ServingEngine:
         self.free_slots.append(slot)
         self._enqueue(entry)
 
+    def _reclaim_cache(self, pages: int, reserved: bool = False) -> None:
+        """Drop cached prefix nodes (LRU leaf first) until ``pages`` are
+        allocatable or the cache is empty.  Runs BEFORE any preemption
+        path considers live victims: cached pages are spare capacity, and
+        a cache-only reference is always cheaper to sacrifice than a
+        running request's recompute."""
+        if self.cache is None:
+            return
+        while (not self.alloc.can_alloc(pages, reserved)
+               and self.cache.evict_one()):
+            pass
+
     def _preempt_for(self, priority: int, pages: int,
                      need_slot: bool = False) -> None:
         """Evict strictly-lower-priority victims until ``pages`` are
-        allocatable (and a slot is free, if requested) or none remain."""
+        allocatable (and a slot is free, if requested) or none remain.
+        Cached prefix pages are reclaimed before any victim is touched."""
+        self._reclaim_cache(pages)
         while ((need_slot and not self.free_slots)
                or not self.alloc.can_alloc(pages)):
             victim = self._pick_victim(below=priority)
             if victim is None:
                 return
             self._preempt(victim)
+            self._reclaim_cache(pages)
 
     # ----------------------------------------------------------- admission --
 
@@ -473,30 +628,77 @@ class ServingEngine:
         else:
             self._admit_grouped(now)
 
-    def _first_chunk_pages(self, entry: _WaitEntry) -> int:
-        """Pages the first prefill dispatch of this request needs: one
+    def _entry_total(self, entry: _WaitEntry) -> int:
+        """Tokens the prefill of this entry must pack: the prompt, plus
+        (for a preempted victim's recompute) everything it had emitted
+        short of the last token, which re-enters through decode."""
+        n_train = len(entry.req.prompt)
+        return n_train if entry.resume is None \
+            else n_train + len(entry.resume[0]) - 1
+
+    def _match_prefix(self, entry: _WaitEntry) -> list:
+        """Radix-cache nodes whose pages this entry can attach: longest
+        cached prefix of the prompt, quantized DOWN to a prefill-chunk
+        boundary.  Chunk quantization is what makes cache hits bit-exact
+        against a cold run: every remaining chunk then covers the same
+        [t0, t0+nv) span the cold engine's schedule would, so the float
+        reduction order of every summary-row sum and mixing output is
+        identical.  Only fully window-aligned prompt prefixes are cached
+        at all (see `_finish_prefill`), and at least one token is always
+        left to prefill — the final chunk's logits seed sampling."""
+        if self.cache is None:
+            return []
+        n_train = len(entry.req.prompt)
+        if n_train % self.w:
+            # only window-aligned prompts share summary rows: a prompt
+            # whose length is not a multiple of the window trains its
+            # summaries on a different (n//m-derived) grid, so cached
+            # w-aligned rows would be wrong for it
+            return []
+        if self.ecfg.prefill_mode == "per-job" \
+                and not self.backend.chunkable(n_train, batched=False):
+            return []               # monolithic path packs from zero
+        limit = min(n_train, self._entry_total(entry) - 1) // self.w
+        if limit <= 0:
+            return []
+        nodes = self.cache.match(entry.req.prompt, limit)
+        chunk_w = self.ecfg.prefill_chunk // self.w
+        return nodes[: (len(nodes) // chunk_w) * chunk_w]
+
+    def _first_chunk_pages(self, entry: _WaitEntry,
+                           shared_pages: int = 0) -> int:
+        """NEW pages the first prefill dispatch of this request needs
+        beyond ``shared_pages`` attached from the prefix cache: one
         chunk's worth — or the whole (window-aligned) prompt when the
         backend's chunk program cannot start this prompt in per-job mode
         and it must go through the monolithic path."""
         n_train = len(entry.req.prompt)
-        n_total = n_train if entry.resume is None \
-            else n_train + len(entry.resume[0]) - 1
         if self.ecfg.prefill_mode == "per-job" \
                 and not self.backend.chunkable(n_train, batched=False):
             return self.backend.pages_needed(n_train)
-        first = min(self.ecfg.prefill_chunk, n_total)
-        return self.backend.pages_needed(first)
+        t0 = shared_pages * self.w
+        first = min(self.ecfg.prefill_chunk, self._entry_total(entry) - t0)
+        return self.backend.pages_needed(t0 + first) - shared_pages
 
     def _admit_chunked(self, now: float) -> None:
         """Chunked admission: one request at a time, first-chunk pages only.
         A higher-priority arrival preempts the lowest strictly-lower victim
         when slots or pages run short (invariant 2 becomes priority-ordered
-        head-of-line blocking)."""
+        head-of-line blocking).  With the prefix cache on, the prompt is
+        matched against the radix tree first: matched pages attach by
+        reference (one retained ref per page), the backend installs the
+        cached per-window summary rows, and the prefill job starts at the
+        first unshared chunk instead of zero."""
         while self.waiting:
             entry = self.waiting[0]
-            first = self._first_chunk_pages(entry)
+            nodes = self._match_prefix(entry)
+            first = self._first_chunk_pages(entry, len(nodes))
             if not self.free_slots or not self.alloc.can_alloc(first):
                 self._preempt_for(entry.req.priority, first, need_slot=True)
+                # pressure relief may have evicted matched cache nodes —
+                # re-match before attaching anything
+                nodes = self._match_prefix(entry)
+                first = self._first_chunk_pages(entry, len(nodes))
                 if not self.free_slots or not self.alloc.can_alloc(first):
                     return
             self.waiting.pop(0)
@@ -508,13 +710,31 @@ class ServingEngine:
                 toks = np.concatenate([
                     np.asarray(entry.req.prompt, np.int32),
                     np.asarray(out[:-1], np.int32)])
+            if entry.first_admit is None:
+                entry.first_admit = now
+            shared = len(nodes) * self.w
             self.prefilling[slot] = _PrefillJob(
                 entry=entry, toks=toks, n_train=len(entry.req.prompt),
-                admit_time=now)
+                admit_time=entry.first_admit, done=shared)
             self.backend.alloc_slot(slot)
+            shared_pages = [nd.page for nd in nodes]
+            if shared_pages:
+                # attach by reference: the slot becomes one more holder of
+                # each page; the cached summary rows make the backend's
+                # state look exactly as if it had prefilled those windows
+                self.alloc.retain(shared_pages)
+                self.backend.attach_prefix(
+                    slot, [nd.payload for nd in nodes])
+                self.n_prefix_hits += 1
+                self.n_pages_shared += len(shared_pages)
+                self.n_prefix_tokens_reused += shared
+                self.prefix_hits[entry.req.rid] = shared
+            elif self.cache is not None:
+                self.n_prefix_misses += 1
+                self.prefix_hits.setdefault(entry.req.rid, 0)
             # claim the first dispatch's pages NOW so concurrent admissions
             # never overcommit the same free pages
-            pages = self.alloc.alloc(first)
+            pages = shared_pages + self.alloc.alloc(first)
             self.slot_pages[slot] = pages
             self.page_table[slot] = 0
             self.page_table[slot, : len(pages)] = pages
@@ -605,11 +825,13 @@ class ServingEngine:
         delta = target - len(self.slot_pages[slot])
         if delta <= 0:
             return True
+        self._reclaim_cache(delta)
         while not self.alloc.can_alloc(delta):
             victim = self._pick_victim()
             if victim is None or victim == slot:
                 break
             self._preempt(victim)
+            self._reclaim_cache(delta)
         if not self.alloc.can_alloc(delta):
             occupied = len(self.prefilling) + len(self.slot_req)
             if occupied > 1 and self._pick_victim() == slot:
@@ -746,6 +968,18 @@ class ServingEngine:
         self.backend.slot_filled(slot, n_total, snapshot=entry.snapshot)
         entry.snapshot = None
         self.backend.invalidate()
+        if self.cache is not None and job.n_train % self.w == 0:
+            # commit this prompt's windows to the radix cache: each new
+            # node retains one reference on its page; the snapshot of the
+            # per-window summary rows is taken lazily (only if the walk
+            # actually adds nodes).  Shared-then-extended prompts deepen
+            # an existing path; physically-diverging duplicates add
+            # nothing (a node's rows must only reference pages on its own
+            # root-anchored path)
+            m = job.n_train // self.w
+            self.cache.insert(
+                job.toks, m, self.slot_pages[slot][:m],
+                lambda: self.backend.prefix_snapshot(slot, m))
         self.slot_npre[slot] = entry.evictions
         self.slot_rid[slot] = req.rid
         self.slot_temp[slot] = req.temperature
@@ -781,16 +1015,24 @@ class ServingEngine:
             need_idx = int(self.t[slot]) // self.w
             if need_idx < len(self.slot_pages[slot]):
                 continue
+            self._reclaim_cache(1, reserved=True)
             while not self.alloc.can_alloc(1, reserved=True):
                 victim = self._pick_victim()
                 if victim is None:
                     break
                 self._preempt(victim)
+                self._reclaim_cache(1, reserved=True)
                 if victim == slot:
                     break
             if not self.active[slot]:
                 continue
             page = self.alloc.alloc(1, reserved=True)[0]
+            # a decode append writes the page in place (the fused step's
+            # aliased scatter), so its target must never be shared: fresh
+            # allocations carry exactly one reference, and append pages
+            # are never inserted into the prefix cache (inserts cover
+            # prompt windows only, which precede every append index)
+            assert self.alloc.refcount(page) == 1
             self.slot_pages[slot].append(page)
             self.page_table[slot, need_idx] = page
             self.backend.invalidate()

@@ -244,6 +244,49 @@ def test_paged_kernel_scratch_row_append():
     np.testing.assert_array_equal(after[mask], before[mask])
 
 
+def test_paged_kernel_shared_prefix_pages_append_isolation():
+    """Two slots whose page tables alias the same prefix pages (the prefix
+    cache's read-sharing): a decode step writes ONLY each slot's exclusive
+    append row, in both the fused kernel and the XLA path — a shared page
+    never takes the in-place append, so read-only sharing needs no copy."""
+    cfg_x, cfg_k = _paged_pair()
+    b, hkv, g, d, m = 2, 2, 1, 16, 3
+    n_pages = 5
+    table = np.asarray([[0, 1, 2], [0, 1, 3]], np.int32)  # pages 0,1 shared
+    page_table = jnp.asarray(table)
+    kq, kk, kv, kp = jax.random.split(jax.random.PRNGKey(7), 4)
+    qi = jax.random.normal(kq, (b, hkv, g, d))
+    ki = jax.random.normal(kk, (b, hkv, d))
+    vi = jax.random.normal(kv, (b, hkv, d))
+    pool = jax.random.normal(kp, (n_pages * W + 1, hkv, d))
+    t = jnp.asarray([2 * W + 1, 2 * W + 3], jnp.int32)
+    act = jnp.asarray([True, True])
+    states = {}
+    for name, cfg in (("kernel", cfg_k), ("xla", cfg_x)):
+        st = mdec.init_paged_state(hkv, d, n_pages, b, m, cfg, jnp.float32)
+        st = st._replace(k_pool=pool, v_pool=pool + 1.0)
+        out, st2 = jax.jit(lambda s, *a, c=cfg: mdec.mita_paged_decode_step(
+            s, *a, c))(st, qi, ki, vi, page_table, t, act)
+        states[name] = (np.asarray(out), st2)
+    np.testing.assert_allclose(states["kernel"][0], states["xla"][0],
+                               atol=2e-5)
+    rows = [int(table[0, 2]) * W + 1, int(table[1, 2]) * W + 3]
+    before_k, before_v = np.asarray(pool), np.asarray(pool) + 1.0
+    for name, st2 in ((n, s) for n, (_, s) in states.items()):
+        for pname, after, src, base in (
+                ("k_pool", np.asarray(st2.k_pool), np.asarray(ki), before_k),
+                ("v_pool", np.asarray(st2.v_pool), np.asarray(vi), before_v)):
+            np.testing.assert_array_equal(after[rows[0]], src[0],
+                                          err_msg=f"{name} {pname} slot0")
+            np.testing.assert_array_equal(after[rows[1]], src[1],
+                                          err_msg=f"{name} {pname} slot1")
+            mask = np.ones(after.shape[0], bool)
+            mask[rows] = False
+            np.testing.assert_array_equal(
+                after[mask], base[mask],
+                err_msg=f"{name} {pname} shared pages mutated")
+
+
 def test_paged_kernel_vmem_budget_dispatch(monkeypatch):
     """Dispatch flips to the XLA fallback when the VMEM budget shrinks —
     via the DecodeConfig field and via REPRO_VMEM_BUDGET_BYTES — and the

@@ -1,0 +1,375 @@
+"""Prefix-cache parity + page-lifecycle suite (PR 6 tentpole).
+
+Contract layers:
+  * cache: the radix trie's physical-match insert walk and leaf-only LRU
+    eviction preserve the path invariant (a node's rows only reference
+    pages on its own root-anchored path) and exact ref-counting;
+  * engine: cache-hit requests emit BIT-identical greedy tokens to a
+    cold-cache run (chunk-quantized skip keeps every remaining dispatch's
+    reduction order equal to the cold schedule's), retiring or preempting
+    one sharer never frees or mutates a page another sharer still reads,
+    and pressure reclaims cached pages (LRU leaves) before touching live
+    work;
+  * backend: an attached prefix plus the recomputed tail reproduce the
+    cold engine's landmark/expert/pool state bit-exactly (the COW tail
+    page is a fresh allocation whose contents the resumed chunk program
+    rebuilds).
+"""
+
+import numpy as np
+import jax
+
+from repro.models import transformer as tfm
+from repro.models.modules import AttnConfig, ModelConfig
+from repro.serve import EngineConfig, Request, ServingEngine
+from repro.serve.engine import _PageAllocator
+from repro.serve.prefix_cache import RadixPrefixCache
+
+W, K = 8, 8
+
+
+def _cfg():
+    return ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+                       vocab=97,
+                       attn=AttnConfig(window=W, k=K, backend="mita_ref",
+                                       external_finalize=False))
+
+
+def _params():
+    return tfm.lm_init(jax.random.PRNGKey(0), _cfg())
+
+
+def _shared_trace(n_req, shared_w=4, tail_w=2, gen=6, seed=0):
+    """Requests sharing a `shared_w`-window system prompt + unique tails."""
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, 97, size=shared_w * W).astype(np.int32)
+    return [Request(rid=i,
+                    prompt=np.concatenate([
+                        sys_prompt,
+                        rng.integers(0, 97,
+                                     size=tail_w * W).astype(np.int32)]),
+                    max_new_tokens=gen)
+            for i in range(n_req)]
+
+
+def _ecfg(cache=True, **kw):
+    base = dict(n_slots=3, pages_per_slot=8, n_pages=40,
+                prefill_chunk=2 * W, prefix_cache=cache)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+# -------------------------------------------------------------------- trie --
+
+def test_radix_trie_insert_match_refcounts():
+    al = _PageAllocator(16)
+    cache = RadixPrefixCache(al, W)
+    toks = np.arange(4 * W, dtype=np.int32)
+    pages = al.alloc(4)
+    payloads = [f"w{i}" for i in range(4)]
+    added = cache.insert(toks, 4, pages, lambda: payloads)
+    assert added == 4 and cache.n_pages == 4
+    assert all(al.refcount(p) == 2 for p in pages)   # holder + trie
+    # full and partial matches walk the path in window order
+    nodes = cache.match(toks, 4)
+    assert [nd.page for nd in nodes] == pages
+    assert [nd.payload for nd in nodes] == payloads
+    assert [nd.page for nd in cache.match(toks, 2)] == pages[:2]
+    other = toks.copy()
+    other[W] += 1                                    # diverge in window 1
+    assert [nd.page for nd in cache.match(other, 4)] == pages[:1]
+    # releasing the original holder keeps trie-held pages alive
+    al.release(pages)
+    assert al.in_use == 4 and not set(pages) & set(al.free)
+
+
+def test_radix_trie_physical_divergence_stops_insert():
+    """A duplicate prefill (same tokens, different pages) must not graft
+    its pages under the incumbent path — nodes below a physical mismatch
+    would reference pages not on their own path."""
+    al = _PageAllocator(16)
+    cache = RadixPrefixCache(al, W)
+    toks = np.arange(3 * W, dtype=np.int32)
+    first = al.alloc(3)
+    cache.insert(toks, 3, first, lambda: list("abc"))
+    dup = al.alloc(3)
+    calls = []
+    added = cache.insert(toks, 3, dup, lambda: calls.append(1) or list("xyz"))
+    assert added == 0 and not calls, \
+        "divergent insert added nodes or snapshotted needlessly"
+    assert all(al.refcount(p) == 1 for p in dup)
+    # extending the INCUMBENT path with fresh pages is fine
+    ext = np.concatenate([toks, np.full(W, 90, np.int32)])
+    tail = al.alloc(1)
+    assert cache.insert(ext, 4, first + tail, lambda: list("abcd")) == 1
+    assert [nd.page for nd in cache.match(ext, 4)] == first + tail
+
+
+def test_radix_trie_evicts_lru_leaf_only():
+    al = _PageAllocator(16)
+    cache = RadixPrefixCache(al, W)
+    toks = np.arange(3 * W, dtype=np.int32)
+    pages = al.alloc(3)
+    cache.insert(toks, 3, pages, lambda: list("abc"))
+    al.release(pages)                    # trie is now the only holder
+    assert cache.evict_one()
+    # deepest node (the only leaf) went first, its page freed
+    assert pages[2] in al.free and pages[1] not in al.free
+    assert [nd.page for nd in cache.match(toks, 3)] == pages[:2]
+    assert cache.evict_one() and cache.evict_one()
+    assert not cache.evict_one() and al.in_use == 0
+    assert cache.evictions == 3
+
+
+# ------------------------------------------------------------------ engine --
+
+def test_prefix_hits_bit_parity_with_cold_engine():
+    """Warm engine (prefix cache on) vs cold engine on a shared-prefix
+    trace: every request's greedy tokens are bit-identical, the warm run
+    records hits and shared pages, and after the trace only trie
+    references keep pages in use."""
+    params = _params()
+    reqs = _shared_trace(6)
+    cold = ServingEngine(params, _cfg(), _ecfg(cache=False))
+    warm = ServingEngine(params, _cfg(), _ecfg(cache=True))
+    tok_c = {f.rid: f.tokens for f in cold.run(_shared_trace(6))}
+    tok_w = {f.rid: f.tokens for f in warm.run(reqs)}
+    for r in reqs:
+        np.testing.assert_array_equal(tok_w[r.rid], tok_c[r.rid],
+                                      err_msg=f"req {r.rid}")
+    st = warm.stats()
+    assert st["prefix_cache_hits"] > 0 and st["pages_shared"] > 0
+    assert st["prefix_tokens_reused"] >= st["prefix_cache_hits"] * 2 * W
+    assert warm.prefix_hits, "per-request hit sizes not recorded"
+    # drained engine: the only remaining references are the trie's
+    assert warm.alloc.in_use == warm.cache.n_pages
+    assert all(c == 1 for c in warm.alloc.refs.values())
+
+
+def test_retiring_one_sharer_keeps_pages_for_the_other():
+    """Two concurrent sharers of one cached prefix: the short one retires
+    first, and the pages it shared must stay live (and unmutated — pinned
+    by token parity) for the survivor."""
+    params = _params()
+    seed_req = _shared_trace(1, gen=2, seed=3)
+    rng = np.random.default_rng(3)
+    sys_prompt = rng.integers(0, 97, size=4 * W).astype(np.int32)
+    tails = [rng.integers(0, 97, size=2 * W).astype(np.int32)
+             for _ in range(3)]
+
+    def pair(gen_a, gen_b):
+        return [Request(rid=10, prompt=np.concatenate([sys_prompt, tails[1]]),
+                        max_new_tokens=gen_a),
+                Request(rid=11, prompt=np.concatenate([sys_prompt, tails[2]]),
+                        max_new_tokens=gen_b)]
+
+    cold = ServingEngine(params, _cfg(), _ecfg(cache=False))
+    ref = {f.rid: f.tokens for f in cold.run(pair(2, 14))}
+
+    warm = ServingEngine(params, _cfg(), _ecfg(cache=True))
+    warm.run(seed_req)                       # populate the cache
+    for r in pair(2, 14):
+        warm.submit(r)
+    shared = [nd.page for nd in warm.cache.match(sys_prompt, 4)]
+    assert len(shared) == 4
+    retired_early = False
+    while warm.step():
+        done = {f.rid for f in warm.finished}
+        if 10 in done and 11 not in done:
+            retired_early = True
+            # rid 11 still reads the shared pages: none may be free
+            assert not set(shared) & set(warm.alloc.free)
+            assert all(warm.alloc.refcount(p) >= 2 for p in shared), \
+                "sharer's pages dropped to trie-only while still read"
+    assert retired_early, "scenario never had one sharer outlive the other"
+    out = {f.rid: f.tokens for f in warm.finished if f.rid in (10, 11)}
+    np.testing.assert_array_equal(out[10], ref[10])
+    np.testing.assert_array_equal(out[11], ref[11])
+
+
+def test_preempting_one_sharer_keeps_the_other_exact():
+    """Tight pool: a high-priority burst preempts one sharer mid-decode.
+    The victim's release must only drop ITS references — the surviving
+    sharer and the trie keep the prefix pages, and every request still
+    matches the cold run bit-exactly."""
+    params = _params()
+    ecfg_kw = dict(n_slots=2, pages_per_slot=8, n_pages=18)
+    reqs = _shared_trace(2, shared_w=3, tail_w=1, gen=20, seed=5)
+    hp = [Request(rid=100 + i,
+                  prompt=np.random.default_rng(7 + i).integers(
+                      0, 97, size=2 * W).astype(np.int32),
+                  max_new_tokens=16, priority=5) for i in range(2)]
+
+    cold = ServingEngine(params, _cfg(), _ecfg(cache=False, **ecfg_kw))
+    cold.run(_shared_trace(2, shared_w=3, tail_w=1, gen=20, seed=5))
+    for r in hp:
+        cold.submit(Request(rid=r.rid, prompt=r.prompt.copy(),
+                            max_new_tokens=16, priority=5))
+    while cold.step():
+        pass
+    ref = {f.rid: f.tokens for f in cold.finished}
+
+    warm = ServingEngine(params, _cfg(), _ecfg(cache=True, **ecfg_kw))
+    for r in reqs:
+        warm.submit(r)
+    for _ in range(8):
+        warm.step()
+    for r in hp:
+        warm.submit(r)
+    while warm.step():
+        owned = [p for pages in warm.slot_pages.values() for p in pages]
+        assert not set(owned) & set(warm.alloc.free), "owned page freed"
+    assert warm.n_preemptions >= 1, "scenario no longer preempts"
+    out = {f.rid: f.tokens for f in warm.finished}
+    for rid in ref:
+        np.testing.assert_array_equal(out[rid], ref[rid],
+                                      err_msg=f"req {rid}")
+
+
+def test_cow_tail_state_matches_cold_engine_bit_exact():
+    """The COW contract at the state level: a cache-hit request's
+    landmark/expert/q_sum rows AND its pool pages (shared prefix + the
+    freshly-recomputed tail page) are bit-identical to a cold engine's
+    after its own full prefill — modulo the physical page ids, which the
+    page tables translate."""
+    params = _params()
+    rng = np.random.default_rng(11)
+    sys_prompt = rng.integers(0, 97, size=4 * W).astype(np.int32)
+    tail_a = rng.integers(0, 97, size=2 * W).astype(np.int32)
+    tail_b = rng.integers(0, 97, size=2 * W).astype(np.int32)
+    req_b = lambda: Request(rid=1, prompt=np.concatenate(  # noqa: E731
+        [sys_prompt, tail_b]), max_new_tokens=4)
+
+    def drive_until_active(eng, rid):
+        for _ in range(64):
+            eng.step()
+            if any(r.rid == rid for r in eng.slot_req.values()):
+                slot = next(s for s, r in eng.slot_req.items()
+                            if r.rid == rid)
+                return slot
+        raise AssertionError("request never reached the decode batch")
+
+    warm = ServingEngine(params, _cfg(), _ecfg(cache=True))
+    warm.run([Request(rid=0, prompt=np.concatenate([sys_prompt, tail_a]),
+                      max_new_tokens=2)])     # seed the cache
+    warm.submit(req_b())
+    slot_w = drive_until_active(warm, 1)
+    assert warm.prefix_hits.get(1, 0) == 4 * W, "hit did not cover 4 windows"
+
+    cold = ServingEngine(params, _cfg(), _ecfg(cache=False))
+    cold.submit(req_b())
+    slot_c = drive_until_active(cold, 1)
+
+    st_w, st_c = warm.backend.states, cold.backend.states
+    m = 6 * W // W
+    for f in ("lm_q", "lm_v", "pre_lm_q"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st_w, f))[:, slot_w, :, :m],
+            np.asarray(getattr(st_c, f))[:, slot_c, :, :m], err_msg=f)
+    np.testing.assert_array_equal(np.asarray(st_w.q_sum)[:, slot_w],
+                                  np.asarray(st_c.q_sum)[:, slot_c])
+    # expert rows are GLOBAL pool rows — translate through each page table
+    pt_w = np.asarray(warm.slot_pages[slot_w])
+    pt_c = np.asarray(cold.slot_pages[slot_c])
+    inv_w = {int(p): i for i, p in enumerate(pt_w)}
+    inv_c = {int(p): i for i, p in enumerate(pt_c)}
+    ev_w = np.asarray(st_w.expert_valid)[:, slot_w, :, :m]
+    ev_c = np.asarray(st_c.expert_valid)[:, slot_c, :, :m]
+    np.testing.assert_array_equal(ev_w, ev_c)
+    ei_w = np.asarray(st_w.expert_idx)[:, slot_w, :, :m]
+    ei_c = np.asarray(st_c.expert_idx)[:, slot_c, :, :m]
+    # invalid rows hold arbitrary pool indices — mask them before
+    # translating through the (different) physical page tables
+    trans = np.vectorize(lambda g, inv: inv.get(g // W, -1) * W + g % W,
+                         excluded=[1])
+    log_w = np.where(ev_w, trans(ei_w, inv_w), -1)
+    log_c = np.where(ev_c, trans(ei_c, inv_c), -1)
+    np.testing.assert_array_equal(log_w, log_c)
+    # pool rows: shared prefix pages AND the recomputed tail pages hold
+    # bit-identical K/V — the "copy" in copy-on-write is an exact rebuild
+    kp_w, kp_c = np.asarray(st_w.k_pool), np.asarray(st_c.k_pool)
+    vp_w, vp_c = np.asarray(st_w.v_pool), np.asarray(st_c.v_pool)
+    for c in range(6 * W):
+        rw = pt_w[c // W] * W + c % W
+        rc = pt_c[c // W] * W + c % W
+        np.testing.assert_array_equal(kp_w[:, rw], kp_c[:, rc],
+                                      err_msg=f"k_pool tok {c}")
+        np.testing.assert_array_equal(vp_w[:, rw], vp_c[:, rc],
+                                      err_msg=f"v_pool tok {c}")
+    # and the COW structure is physical: the prefix pages ARE the seed's
+    # trie pages (attached by reference), while the tail windows landed in
+    # fresh pages the seed never owned
+    seed_path = [nd.page for nd in warm.cache.match(
+        np.concatenate([sys_prompt, tail_a]), 6)]
+    assert [int(p) for p in pt_w[:4]] == seed_path[:4]
+    assert not {int(pt_w[4]), int(pt_w[5])} & set(seed_path)
+    assert all(warm.alloc.refcount(int(p)) >= 2 for p in pt_w[:4])
+
+
+def test_cache_pages_reclaimed_under_pressure_before_preemption():
+    """A pool sized so new admissions need the cache's pages: the engine
+    must evict LRU cache leaves (never preempting live work) and keep
+    serving correctly."""
+    params = _params()
+    ecfg_kw = dict(n_slots=2, pages_per_slot=6, n_pages=13)
+    trace = [_shared_trace(1, shared_w=3, tail_w=1, gen=4, seed=s)[0]
+             for s in range(4)]
+    for i, r in enumerate(trace):
+        r.rid = i                        # distinct prompts, distinct rids
+    cold = ServingEngine(params, _cfg(), _ecfg(cache=False, **ecfg_kw))
+    ref = {f.rid: f.tokens for f in cold.run(
+        [Request(rid=r.rid, prompt=r.prompt.copy(), max_new_tokens=4)
+         for r in trace])}
+    warm = ServingEngine(params, _cfg(), _ecfg(cache=True, **ecfg_kw))
+    done = warm.run(trace)
+    st = warm.stats()
+    assert st["prefix_cache_evictions"] > 0, \
+        "scenario never pressured the cache"
+    assert st["preemptions"] == 0, "pressure hit live work before the cache"
+    for f in done:
+        np.testing.assert_array_equal(f.tokens, ref[f.rid],
+                                      err_msg=f"req {f.rid}")
+
+
+def test_nonaligned_prompts_never_match_or_insert():
+    """Prompts whose length is not window-aligned train their summaries on
+    a different grid — they must be pure cache misses and never populate
+    the trie."""
+    params = _params()
+    rng = np.random.default_rng(21)
+    # 4W+4 = 36: chunk-servable (36 % (36 // 8) == 0) but NOT aligned —
+    # its summary grid differs from the aligned one, so no cache traffic
+    prompt = rng.integers(0, 97, size=4 * W + 4).astype(np.int32)
+    warm = ServingEngine(params, _cfg(), _ecfg(cache=True))
+    cold = ServingEngine(params, _cfg(), _ecfg(cache=False))
+    for eng in (warm, cold):
+        eng.run([Request(rid=i, prompt=prompt.copy(), max_new_tokens=4)
+                 for i in range(2)])
+    assert warm.cache.n_nodes == 0
+    st = warm.stats()
+    assert st["prefix_cache_hits"] == 0 and st["pages_shared"] == 0
+    tok_w = {f.rid: f.tokens for f in warm.finished}
+    tok_c = {f.rid: f.tokens for f in cold.finished}
+    for rid in tok_c:
+        np.testing.assert_array_equal(tok_w[rid], tok_c[rid])
+
+
+def test_cancel_hit_request_releases_only_its_refs():
+    """Cancelling a cache-hit request mid-decode drops the slot's
+    references but leaves the trie's — the prefix stays warm for the next
+    arrival, and accounting balances."""
+    params = _params()
+    warm = ServingEngine(params, _cfg(), _ecfg(cache=True))
+    warm.run(_shared_trace(1, gen=2))
+    trie_pages = warm.cache.n_pages
+    r = _shared_trace(2, gen=14)[1]
+    warm.submit(r)
+    for _ in range(8):
+        warm.step()
+    assert warm.prefix_hits.get(r.rid, 0) > 0, "second request missed"
+    assert warm.cancel(r.rid)
+    # its own tail windows joined the trie at prefill commit, but the
+    # slot's references are gone: only trie refs remain, all singular
+    assert warm.alloc.in_use == warm.cache.n_pages >= trie_pages
+    assert all(c == 1 for c in warm.alloc.refs.values())
+    assert not warm.step()

@@ -88,6 +88,30 @@ def test_engine_module_is_backend_agnostic():
     assert "mita" not in src
 
 
+@pytest.mark.parametrize("family", ["mamba2", "rglru"])
+def test_prefix_cache_silently_off_for_recurrent_backends(family):
+    """`prefix_cache=True` on a backend that doesn't advertise
+    `supports_prefix_cache` (constant-size recurrent state has no pages to
+    share) must be a silent no-op: no cache is built, stats report zeros,
+    and repeated prompts still match the static reference exactly."""
+    cfg, params, mk = _setup(family)
+    ecfg = EngineConfig(n_slots=2, pages_per_slot=5, n_pages=12,
+                        prefill_chunk=W, prefix_cache=True)
+    eng = _engine(cfg, params, mk, ecfg)
+    assert eng.cache is None
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(11), (2 * W,),
+                                           0, cfg.vocab))
+    done = eng.run([Request(rid=i, prompt=prompt.copy(), max_new_tokens=5)
+                    for i in range(3)])
+    ref = mk(ecfg).static_reference(prompt[None], 5)
+    for f in done:
+        np.testing.assert_array_equal(f.tokens, ref[0],
+                                      err_msg=f"{family} req {f.rid}")
+    st = eng.stats()
+    assert st["prefix_cache_hits"] == 0 and st["pages_shared"] == 0
+    assert st["prefix_cache_pages"] == 0 and st["prefix_tokens_reused"] == 0
+
+
 def test_resolve_requires_explicit_backend_for_recurrent():
     cfg = _mamba_cfg()
     params = m2.mamba_init(jax.random.PRNGKey(0), cfg)

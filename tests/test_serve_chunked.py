@@ -385,6 +385,163 @@ def test_allocator_reserve_high_water_property(n_pages, reserve, seed):
             == list(range(n_pages)), "page leaked or duplicated"
 
 
+def test_allocator_release_validation():
+    """Ref-count hard errors: double-free, foreign release, duplicate ids
+    in one call, retain of a free page — and none of them mutate state."""
+    al = _PageAllocator(6)
+    got = al.alloc(3)
+    al.release(got)
+    with pytest.raises(RuntimeError, match="double-free"):
+        al.release([got[0]])                  # already back in the pool
+    with pytest.raises(RuntimeError, match="double-free"):
+        al.release([5])                       # never allocated
+    got = al.alloc(2)
+    with pytest.raises(RuntimeError, match="duplicate"):
+        al.release([got[0], got[0]])
+    with pytest.raises(RuntimeError, match="not allocated"):
+        al.retain([al.free[0]])
+    # the raising calls left accounting intact
+    assert al.in_use == 2 and al.refcount(got[0]) == 1
+    al.release(got)
+    assert al.in_use == 0 and sorted(al.free) == list(range(6))
+
+
+def test_allocator_refcount_shared_page_lifecycle():
+    """A retained page survives the first release and frees on the last;
+    shared_pages tracks multi-holder pages."""
+    al = _PageAllocator(4)
+    pages = al.alloc(2)
+    al.retain([pages[0]])
+    assert al.refcount(pages[0]) == 2 and al.shared_pages == 1
+    al.release(pages)                         # slot lets go of both
+    assert pages[0] not in al.free and pages[1] in al.free
+    assert al.in_use == 1 and al.shared_pages == 0
+    al.release([pages[0]])                    # cache lets go: page frees
+    assert al.in_use == 0
+    with pytest.raises(RuntimeError, match="double-free"):
+        al.release([pages[0]])
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 16), st.integers(0, 2**32 - 1))
+def test_allocator_refcount_property(n_pages, seed):
+    """Property: under ANY interleaving of alloc / retain / release —
+    including injected release-twice, release-foreign, and duplicate-id
+    attempts, which must raise WITHOUT mutating — the allocator's refs
+    match a model reference multiset exactly, every un-referenced page is
+    free, and in_use counts distinct live pages."""
+    from collections import Counter
+
+    al = _PageAllocator(n_pages)
+    rng = np.random.default_rng(seed)
+    held: list[list[int]] = []        # one reference per page per batch
+    for _ in range(80):
+        op = int(rng.integers(4))
+        if op == 0:                                 # alloc
+            n = int(rng.integers(0, n_pages + 1))
+            if al.can_alloc(n):
+                held.append(al.alloc(n))
+        elif op == 1 and held:                      # retain (share) a batch
+            batch = held[int(rng.integers(len(held)))]
+            if batch:
+                al.retain(batch)
+                held.append(list(batch))
+        elif op == 2 and held:                      # release one reference
+            al.release(held.pop(int(rng.integers(len(held)))))
+        else:                                       # invalid ops must raise
+            if al.free:
+                p = al.free[int(rng.integers(len(al.free)))]
+                with pytest.raises(RuntimeError, match="double-free"):
+                    al.release([p])                 # foreign / already free
+            if held and held[-1]:
+                p = held[-1][0]
+                with pytest.raises(RuntimeError, match="duplicate"):
+                    al.release([p, p])
+        model = Counter(p for h in held for p in h)
+        assert dict(al.refs) == dict(model), "refcount drift"
+        assert sorted(al.free + list(model)) == list(range(n_pages)), \
+            "page leaked or duplicated"
+        assert al.in_use == len(model)
+        assert al.shared_pages == sum(1 for c in model.values() if c > 1)
+
+
+def test_preempted_prefill_keeps_admission_stamp():
+    """A victim evicted MID-PREFILL must report its ORIGINAL admission
+    time: re-admission restamping `admitted` would under-report queueing
+    delay (TTFT = first_token - admitted) for exactly the requests that
+    suffered preemption."""
+    import time as _time
+
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    N = 6 * W
+    victim = np.asarray(jax.random.randint(jax.random.PRNGKey(17), (N,),
+                                           0, cfg.vocab))
+    eng = ServingEngine(params, cfg, EngineConfig(
+        n_slots=1, pages_per_slot=8, n_pages=8, prefill_chunk=W))
+    eng.submit(Request(rid=0, prompt=victim, max_new_tokens=2, priority=0))
+    eng.step()                           # admit + first chunk only
+    assert eng.prefilling, "victim should still be mid-prefill"
+    first_admit = next(iter(eng.prefilling.values())).admit_time
+    mark = _time.perf_counter()
+    assert first_admit <= mark
+    hp = np.asarray(jax.random.randint(jax.random.PRNGKey(18), (W,),
+                                       0, cfg.vocab))
+    eng.submit(Request(rid=1, prompt=hp, max_new_tokens=4, priority=5))
+    while eng.step():
+        pass
+    f0 = next(f for f in eng.finished if f.rid == 0)
+    assert f0.preemptions >= 1, "scenario no longer preempts mid-prefill"
+    assert f0.admitted == first_admit, \
+        "re-admission restamped the admission time"
+    assert f0.admitted <= mark < f0.first_token
+
+
+def test_cancel_releases_pages_in_every_state():
+    """`cancel(rid)` in each lifecycle state — waiting, prefilling,
+    decoding — frees the slot and every page immediately (alloc.in_use
+    returns to zero), emits a cancelled FinishedRequest carrying the
+    tokens emitted so far, and makes the rid reusable."""
+    cfg = _cfg()
+    params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(23), (3, 4 * W), 0,
+                                 cfg.vocab)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        n_slots=1, pages_per_slot=6, n_pages=6, prefill_chunk=W))
+
+    # --- waiting: one slot is busy, the second request queues
+    eng.submit(Request(rid=0, prompt=np.asarray(prompts[0]),
+                       max_new_tokens=8))
+    eng.submit(Request(rid=1, prompt=np.asarray(prompts[1]),
+                       max_new_tokens=8))
+    eng.step()
+    assert eng.cancel(1)
+    f1 = next(f for f in eng.finished if f.rid == 1)
+    assert f1.cancelled and len(f1.tokens) == 0
+    assert not eng.waiting
+
+    # --- prefilling: rid 0 is mid-chunked-prefill right now
+    assert eng.prefilling
+    assert eng.cancel(0)
+    f0 = next(f for f in eng.finished if f.rid == 0)
+    assert f0.cancelled and len(f0.tokens) == 0
+    assert eng.alloc.in_use == 0, "prefill pages leaked"
+    assert not eng.prefilling and len(eng.free_slots) == 1
+
+    # --- decoding: cancel after a few emitted tokens; rid 0 is reusable
+    eng.submit(Request(rid=0, prompt=np.asarray(prompts[2]),
+                       max_new_tokens=16))
+    for _ in range(8):
+        eng.step()
+    assert eng.slot_req, "request should be decoding by now"
+    assert eng.cancel(0)
+    f0b = [f for f in eng.finished if f.rid == 0][-1]
+    assert f0b.cancelled and 0 < len(f0b.tokens) < 16
+    assert eng.alloc.in_use == 0, "decode pages leaked"
+    assert not eng.cancel(0), "cancel of a finished rid must be a no-op"
+    assert not eng.step()
+
+
 def test_engine_rejects_bad_chunk_and_reserve():
     cfg = _cfg()
     params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
