@@ -96,6 +96,9 @@ def _engine_compare(n_short: int, n_long: int, n_slots: int,
             "prefill_kernel_fallbacks": int(st["prefill_kernel_fallbacks"]),
             "prefix_cache_hits": int(st["prefix_cache_hits"]),
             "pages_shared": int(st["pages_shared"]),
+            "spec_drafted": int(st["spec_drafted"]),
+            "spec_accepted": int(st["spec_accepted"]),
+            "spec_rollbacks": int(st["spec_rollbacks"]),
         }
         emit(f"prefill_engine_{name}", dt * 1e6 / total_tokens,
              f"{out[name]['tok_s']:.1f} tok/s | short ttft "

@@ -7,7 +7,7 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [tab2 tab5 ...]
 import sys
 
 from benchmarks import (decode_bench, prefill_bench, prefix_bench,
-                        serve_bench, tables)
+                        serve_bench, spec_bench, tables)
 
 
 ALL = [
@@ -23,6 +23,7 @@ ALL = [
     ("decode", decode_bench.decode_bench),
     ("prefill", prefill_bench.prefill_bench),
     ("prefix", prefix_bench.run_prefix),
+    ("spec", spec_bench.run_spec),
 ]
 
 

@@ -327,7 +327,10 @@ def serve_arch(which: str = "all", n_req: int = 10,
             preemptions=st["preemptions"],
             prefill_kernel_fallbacks=st["prefill_kernel_fallbacks"],
             prefix_cache_hits=st["prefix_cache_hits"],
-            pages_shared=st["pages_shared"])
+            pages_shared=st["pages_shared"],
+            spec_drafted=st["spec_drafted"],
+            spec_accepted=st["spec_accepted"],
+            spec_rollbacks=st["spec_rollbacks"])
         emit(f"serve_arch_{name}", dt * 1e6 / total,
              f"{total / dt:.1f} tok/s | greedy_match={match} | "
              f"chunks={st['chunks']} in {st['prefill_dispatches']} "

@@ -1,0 +1,158 @@
+"""Speculative-decoding benchmark: spec_k > 0 vs the plain decode loop.
+
+One row per (backend, spec) cell over the same queued mixed-length trace:
+
+  * ``mita``   — landmark self-drafting: the drafter runs the model over
+    the COMPRESSED branch only (landmark + expert summaries, no local
+    window reads), the fused verify pass re-derives every draft from the
+    full three-branch program in one teacher-forced dispatch;
+  * ``mamba2`` / ``rglru`` — "self" mode: the draft scan IS the exact
+    decode recurrence, so acceptance is total and a round of k drafts +
+    1 verify commits k+1 tokens in 2 dispatches instead of k+1 (the
+    dispatch-collapse win this bench measures).
+
+Gates:
+  * bit-parity (ALWAYS, hard): every request's stream with spec_k > 0 is
+    identical to the spec_k = 0 engine — speculation is lossless or it
+    fails the build;
+  * accept-rate > 0: the drafter must actually land accepted tokens;
+  * tok/s >= 0.95x the non-spec engine on the recurrent self-draft rows
+    (their speedup is dispatch arithmetic, so it holds even on CPU CI
+    runners); the MiTA row's tok/s ratio is reported but advisory off-TPU
+    (the landmark drafter trades FLOPs for memory traffic, a bet the
+    paged kernel only cashes on real accelerators).
+
+Emits BENCH_spec.json (always, before any gate-failure exit): per-cell
+tok/s, accept-rate, dispatch counts, rollback counts, and the gate block.
+
+Run:  PYTHONPATH=src python -m benchmarks.spec_bench [--smoke]
+      PYTHONPATH=src python -m benchmarks.run spec
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.serve_bench import _arch_cell
+from repro.core.mita_decode import window_aligned
+from repro.serve import EngineConfig, Request, ServingEngine
+
+BACKENDS = ("mita", "mamba2", "rglru")
+SPEC_K = 3
+
+
+def _trace(vocab: int, w: int, n_req: int, lo: int, hi: int,
+           seed: int = 11) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, size=int(
+                        rng.choice([w, 2 * w]))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(lo, hi)))
+            for i in range(n_req)]
+
+
+def run_spec(n_req: int = 12, smoke: bool = False,
+             out: str = "BENCH_spec.json") -> dict:
+    gens = dict(mita=(8, 25), mamba2=(8, 21), rglru=(8, 21))
+    results: dict = {"config": dict(n_req=n_req, spec_k=SPEC_K, smoke=smoke)}
+    gate_fail: list[str] = []
+    for name in BACKENDS:
+        cfg, params, mk = _arch_cell(name)
+        w = cfg.attn.window
+        lo, hi = gens[name]
+        reqs = _trace(cfg.vocab, w, n_req, lo, hi)
+        total = sum(r.max_new_tokens for r in reqs)
+        pages = window_aligned(2 * w + hi, w) // w
+        base = EngineConfig(n_slots=4, pages_per_slot=pages,
+                            n_pages=4 * pages + 4, prefill_chunk=w,
+                            sample_device="fused")
+        spec = dataclasses.replace(base, spec_k=SPEC_K)
+
+        row: dict = {}
+        tokens: dict[str, dict[int, np.ndarray]] = {}
+        for cell, ecfg in (("plain", base), ("spec", spec)):
+            # compile outside the timed region: the probe runs the
+            # IDENTICAL trace, so every program shape (prefill widths
+            # included) the timed runs dispatch is already compiled —
+            # then best-of-3 fresh-engine repeats against CI-runner noise
+            dt = float("inf")
+            for _ in range(4):
+                eng2 = ServingEngine(params, cfg, ecfg, backend=mk(ecfg))
+                t0 = time.perf_counter()
+                done = eng2.run([Request(rid=r.rid, prompt=r.prompt.copy(),
+                                         max_new_tokens=r.max_new_tokens)
+                                 for r in reqs])
+                dt = min(dt, time.perf_counter() - t0)
+            st = eng2.stats()
+            tokens[cell] = {f.rid: f.tokens for f in done}
+            row[cell] = dict(
+                tok_s=total / dt, steps=st["steps"],
+                decode_dispatches=st["decode_dispatches"],
+                spec_drafted=st["spec_drafted"],
+                spec_accepted=st["spec_accepted"],
+                spec_rollbacks=st["spec_rollbacks"],
+                accept_rate=(st["spec_accepted"]
+                             / max(st["spec_drafted"], 1)))
+            emit(f"spec_{name}_{cell}", dt * 1e6 / total,
+                 f"{row[cell]['tok_s']:.1f} tok/s | steps={st['steps']} "
+                 f"dispatches={st['decode_dispatches']} | accepted "
+                 f"{st['spec_accepted']}/{st['spec_drafted']} "
+                 f"rollbacks={st['spec_rollbacks']}")
+
+        match = (set(tokens["plain"]) == set(tokens["spec"]) and all(
+            np.array_equal(tokens["plain"][r], tokens["spec"][r])
+            for r in tokens["plain"]))
+        tps_ratio = row["spec"]["tok_s"] / row["plain"]["tok_s"]
+        # the recurrent self-drafters' win is dispatch arithmetic — gate
+        # it; the MiTA landmark drafter's wall-clock is advisory off-TPU
+        tps_gated = name != "mita"
+        row["gates"] = dict(
+            parity=bool(match),
+            accept_rate=row["spec"]["accept_rate"],
+            accept_nonzero=row["spec"]["accept_rate"] > 0,
+            tps_ratio=tps_ratio, tps_gated=tps_gated,
+            tps_gate=bool(tps_ratio >= 0.95) if tps_gated else True)
+        if not match:
+            gate_fail.append(f"{name}:parity")
+        if not row["gates"]["accept_nonzero"]:
+            gate_fail.append(f"{name}:accept_rate")
+        if not row["gates"]["tps_gate"]:
+            gate_fail.append(f"{name}:tps")
+        results[name] = row
+        emit(f"spec_{name}_gates", 0.0,
+             f"parity={match} accept_rate="
+             f"{row['spec']['accept_rate']:.2f} "
+             f"tps_ratio={tps_ratio:.3f} "
+             f"({'gate>=0.95' if tps_gated else 'advisory'})")
+
+    results["gates_failed"] = gate_fail
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    if gate_fail:
+        raise SystemExit(f"spec bench gate(s) failed: {gate_fail}")
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: fewer requests (gates unchanged — "
+                         "parity and the recurrent tok/s ratio hold at "
+                         "any scale)")
+    ap.add_argument("--requests", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_spec.json")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run_spec(n_req=args.requests or (6 if args.smoke else 12),
+             smoke=args.smoke, out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

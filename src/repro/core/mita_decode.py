@@ -565,6 +565,39 @@ def mita_paged_decode_step(state: PagedMiTAState, q: jax.Array,
     return jnp.where(active[:, None, None, None], out, 0.0), state
 
 
+def mita_paged_landmark_attend(state: PagedMiTAState, q: jax.Array,
+                               m_cnt: jax.Array,
+                               cfg: DecodeConfig) -> jax.Array:
+    """Compressed-branch-only attention for the speculative drafter.
+
+    The shared landmark branch alone — no expert gather, no page walk, no
+    KV append, no q_sum accumulation, no state mutation of any kind.  This
+    is the cheap standalone approximation MiTA's compress-and-route design
+    gives away for free: a draft token costs O(m) reads of slot-resident
+    landmark tiles instead of O(m + s·k + w) with two pool gathers.
+
+    Args:
+      q:      [S, Hkv, G, d] draft-position queries (RoPE'd by the caller).
+      m_cnt:  [S] finalized landmark count per slot (the drafter sees the
+              landmarks committed so far; any in-flight window stays
+              invisible, exactly like the external-finalize decode rule).
+    Returns [S, Hkv, G, d].  Slots with m_cnt == 0 attend a zero-value
+    sink instead (deterministic output, no NaNs) — their drafts are
+    near-random and simply get rejected at verify time.
+    """
+    d = q.shape[-1]
+    m_max = state.lm_q.shape[-2]
+    lm_mask = (jnp.arange(m_max)[None, None, None, :]
+               < m_cnt[:, None, None, None])
+    r = jnp.einsum("shgd,shmd->shgm", q, state.lm_q) / math.sqrt(d)
+    r = jnp.where(lm_mask, r.astype(jnp.float32), NEG_INF)
+    sink = partial_from_scores(
+        jnp.zeros(r.shape[:-1] + (1,), jnp.float32),
+        jnp.zeros_like(state.lm_v[:, :, :1]),
+        mask=(m_cnt == 0)[:, None, None, None])
+    return combine([partial_from_scores(r, state.lm_v), sink])
+
+
 def pack_prefill_into_pages(state: PagedMiTAState, pre: MiTADecodeState,
                             slot: jax.Array, pages: jax.Array,
                             cfg: DecodeConfig) -> PagedMiTAState:

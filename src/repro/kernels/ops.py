@@ -147,6 +147,20 @@ def paged_attention_vmem_bytes(window: int, m: int, k_width: int, g: int,
     return tiles * itemsize + tables
 
 
+# Paged-decode analogue of `_PREFILL_KERNEL_FALLBACKS` below: a dispatch
+# decision that WANTED the fused paged-decode kernel but fell back to XLA
+# because the working set exceeded the VMEM budget.  Counted at trace time
+# (one decision per compiled shape).  Surfaced as
+# ``stats()["paged_kernel_fallbacks"]`` by the MiTA serving backend.
+_PAGED_KERNEL_FALLBACKS = 0
+_PAGED_FALLBACK_WARNED = False
+
+
+def paged_kernel_fallbacks() -> int:
+    """Process-wide count of paged-decode kernel→XLA VMEM fallbacks."""
+    return _PAGED_KERNEL_FALLBACKS
+
+
 def use_paged_kernel(impl: str, *, window: int, m: int, k_width: int,
                      g: int, d: int, itemsize: int = 4,
                      budget: int = 0) -> bool:
@@ -156,14 +170,31 @@ def use_paged_kernel(impl: str, *, window: int, m: int, k_width: int,
     budget), "kernel" (force, still bounded by the budget so an oversized
     config degrades to the fallback instead of failing to lower), or "xla".
     ``budget`` = 0 uses `vmem_budget_bytes()` (env-overridable).
+
+    A "no" that is due to the VMEM budget (rather than impl="xla" or
+    running off-TPU in auto mode) increments `paged_kernel_fallbacks` and
+    warns once per process, mirroring the chunk-prefill dispatch.
     """
+    global _PAGED_KERNEL_FALLBACKS, _PAGED_FALLBACK_WARNED
     if impl == "xla":
         return False
     if impl not in ("auto", "kernel"):
         raise ValueError(f"unknown paged impl {impl!r}")
-    fits = paged_attention_vmem_bytes(window, m, k_width, g, d,
-                                      itemsize) <= (budget
-                                                    or vmem_budget_bytes())
+    need = paged_attention_vmem_bytes(window, m, k_width, g, d, itemsize)
+    have = budget or vmem_budget_bytes()
+    fits = need <= have
+    if not fits and (impl == "kernel" or on_tpu()):
+        _PAGED_KERNEL_FALLBACKS += 1
+        if not _PAGED_FALLBACK_WARNED:
+            _PAGED_FALLBACK_WARNED = True
+            warnings.warn(
+                f"paged-decode kernel working set {need} B exceeds the "
+                f"VMEM budget {have} B (m={m}, window={window}, d={d}); "
+                "dispatching to the XLA path — raise "
+                "REPRO_VMEM_BUDGET_BYTES / DecodeConfig.vmem_budget to "
+                "keep the fused kernel "
+                "(further fallbacks are counted, not warned)",
+                RuntimeWarning, stacklevel=2)
     if impl == "kernel":
         return fits
     return on_tpu() and fits

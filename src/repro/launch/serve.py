@@ -150,9 +150,23 @@ def main(argv=None):
                          "window-aligned prompt prefixes — repeated "
                          "prompts attach cached pages by reference and "
                          "skip straight to the first unshared chunk")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="continuous: lossless speculative decoding — "
+                         "draft up to K tokens per slot per round and "
+                         "verify them in one fused teacher-forced pass "
+                         "(requires --sample-device fused; 0 = off)")
+    ap.add_argument("--spec-mode", default="auto",
+                    choices=("auto", "landmark", "self", "stress"),
+                    help="drafting strategy: auto picks the backend's "
+                         "native one (MiTA: landmark-branch self-draft; "
+                         "recurrent: exact decode scan); stress forces "
+                         "synthetic wrong drafts to exercise rollback")
     args = ap.parse_args(argv)
     if args.prefix_cache and not args.prefill_chunk:
         ap.error("--prefix-cache requires --prefill-chunk > 0")
+    if args.spec_k and args.sample_device != "fused":
+        ap.error("--spec-k requires --sample-device fused (verification "
+                 "samples inside the fused program)")
 
     arch = get_arch(args.arch, smoke=args.smoke)
     if arch.family not in ("dense", "moe", "vlm", "ssm", "hybrid"):
@@ -182,7 +196,8 @@ def main(argv=None):
                         reserve_pages=args.reserve_pages,
                         sample_device=args.sample_device,
                         prefill_mode=args.prefill_mode,
-                        prefix_cache=args.prefix_cache)
+                        prefix_cache=args.prefix_cache,
+                        spec_k=args.spec_k, spec_mode=args.spec_mode)
 
     if args.engine == "static" and arch.family in ("dense", "moe", "vlm"):
         gen, tm = static_generate(params, cfg,
@@ -228,7 +243,9 @@ def main(argv=None):
               f"pages_hw={st['pages_high_water']}, "
               f"kernel_fallbacks={st['prefill_kernel_fallbacks']}, "
               f"prefix_hits={st['prefix_cache_hits']}, "
-              f"pages_shared={st['pages_shared']}")
+              f"pages_shared={st['pages_shared']}, "
+              f"spec_accepted={st['spec_accepted']}/"
+              f"{st['spec_drafted']}")
         sample = np.stack([done[b].tokens for b in range(min(2, len(done)))])
     print("sample generations (token ids):")
     for b in range(min(2, sample.shape[0])):

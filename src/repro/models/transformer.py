@@ -115,7 +115,9 @@ def _decode_cfg(cfg: nn.ModelConfig) -> mdec.DecodeConfig:
     return mdec.DecodeConfig(window=cfg.attn.window, k=cfg.attn.k,
                              s=cfg.attn.s,
                              external_finalize=cfg.attn.external_finalize,
-                             prefill_impl=cfg.attn.prefill_impl)
+                             prefill_impl=cfg.attn.prefill_impl,
+                             paged_impl=cfg.attn.paged_impl,
+                             vmem_budget=cfg.attn.vmem_budget)
 
 
 def lm_finalize_states(states, cfg: nn.ModelConfig):
@@ -405,6 +407,84 @@ def lm_paged_decode_step(params: Params, states, token: jax.Array,
         return logits, new_states
     rid, index, temperature, key = sample
     return sample_tokens(logits, rid, index, temperature, key), new_states
+
+
+def attention_decode_landmark(params: Params, x: jax.Array, state,
+                              cfg: nn.ModelConfig, pos: jax.Array,
+                              m_cnt: jax.Array) -> jax.Array:
+    """Landmark-branch-only attention for the speculative drafter: the q
+    projection alone (no k/v — nothing is appended), RoPE'd at the
+    per-slot draft position, attending the slot's finalized landmark tiles
+    (`mdec.mita_paged_landmark_attend`).  Read-only w.r.t. ``state``."""
+    b, _ = x.shape
+    kv, g, dh = cfg.n_kv, cfg.group, cfg.dh
+    ct = cfg.compute_dtype
+    q = (x @ params["wq"].astype(ct)).reshape(b, kv, g, dh)
+    if cfg.qk_norm:
+        q = nn.rms_norm(q, params["q_norm"], cfg.norm_eps)
+    q = nn.rope(q[..., None, :], pos[:, None, None, None],
+                cfg.rope_theta)[..., 0, :]
+    o = mdec.mita_paged_landmark_attend(state, q, m_cnt, _decode_cfg(cfg))
+    o = o.reshape(b, cfg.n_heads * dh)
+    return o @ params["wo"].astype(ct)
+
+
+def block_decode_landmark(params: Params, x: jax.Array, state,
+                          cfg: nn.ModelConfig, pos: jax.Array,
+                          m_cnt: jax.Array) -> jax.Array:
+    h = attention_decode_landmark(
+        params["attn"], nn.rms_norm(x, params["ln1"]), state, cfg, pos,
+        m_cnt)
+    x = x + h
+    xn = nn.rms_norm(x, params["ln2"])
+    if cfg.n_experts:
+        f, _ = moe_apply(params["moe"], xn[:, None, :], cfg)
+        f = f[:, 0]
+    else:
+        f = nn.swiglu_apply(params["ffn"], xn, cfg)
+    return x + f
+
+
+def lm_landmark_draft(params: Params, states, tokens: jax.Array,
+                      t: jax.Array, active: jax.Array, m_cnt: jax.Array,
+                      cfg: nn.ModelConfig, n_pos: int, rid: jax.Array,
+                      sample_idx: jax.Array, temperature: jax.Array,
+                      key: jax.Array) -> jax.Array:
+    """Self-drafting forward: propose ``n_pos`` tokens per slot against
+    the compressed branch only, feeding each draft to the next position.
+
+    tokens: [S] last committed token per slot; t: [S] positions of the
+    first draft; active: [S] bool (per-position masks come from the
+    caller's spec-length rule folded into ``active`` — here a slot either
+    drafts all ``n_pos`` positions or its carry passes through untouched
+    via the masks below); m_cnt: [S] finalized landmark count (constant
+    across the draft: nothing finalizes until the verify step commits).
+
+    Sampling uses the same (rid, sample_idx + i) keys the verify step will
+    use at the same output indices, so a tempered draft can actually match
+    its verification.  Returns drafts [n_pos, S] int32.  Entirely
+    read-only: no KV append, no q_sum accumulation, no landmark change —
+    a rejected draft needs NO state rollback from this program.
+    """
+    def pos_body(carry, i):
+        tok, si = carry
+        x = nn.embed(params["emb"], tok, cfg)
+
+        def body(h, layer):
+            lp, st = layer
+            return block_decode_landmark(lp, h, st, cfg, t + i, m_cnt), None
+
+        x, _ = jax.lax.scan(body, x, (params["blocks"], states),
+                            unroll=cfg.scan_unroll)
+        logits = nn.unembed(params["emb"], nn.rms_norm(x, params["ln_f"]),
+                            cfg)
+        tok2 = jnp.where(active, sample_tokens(logits, rid, si, temperature,
+                                               key), tok)
+        return (tok2, si + active.astype(si.dtype)), tok2
+
+    (_, _), drafts = jax.lax.scan(pos_body, (tokens, sample_idx),
+                                  jnp.arange(n_pos))
+    return drafts
 
 
 def pack_prefill_into_states(states, prefill_states, slot: jax.Array,

@@ -62,6 +62,28 @@ Protocol (duck-typed; `BackendBase` supplies the defaults):
                                   slot's state is exactly what prefilling
                                   those windows itself would have produced
                                   (the pages attach via the page table).
+  * ``supports_speculation``    — True if the backend implements the
+                                  draft/verify/rollback triple below
+                                  (``EngineConfig.spec_k > 0`` requires it).
+  * ``draft_horizon(t)``        — per-slot cap on how many tokens may be
+                                  drafted past position ``t`` before a
+                                  backend-internal boundary (the MiTA
+                                  backend stops short of the next landmark
+                                  finalize so a rejected draft never needs
+                                  a landmark/expert rollback).
+  * ``draft_steps(...)``        — cheaply propose up to ``spec_len[s]``
+                                  tokens per slot ([k, S]); MUST NOT change
+                                  any state a rejected draft would need
+                                  undone beyond what ``rollback`` restores.
+  * ``verify_step(...)``        — run the EXACT decode rule over the k+1
+                                  positions [input, drafts...] and return
+                                  the tokens it samples ([k+1, S]); the
+                                  engine commits the longest exact-match
+                                  prefix + one correction.
+  * ``rollback(commits, active)``— rewind per-slot state to exactly
+                                  ``commits[s]`` tokens past the round's
+                                  start — bit-identical to having decoded
+                                  those tokens one step at a time.
 """
 
 from __future__ import annotations
@@ -73,6 +95,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.mita_decode import window_aligned
+
+# THE stats schema: every `ServingEngine.stats()` dict holds exactly these
+# keys — the engine's scheduler counters plus the backend counters every
+# `BackendBase.stats()` reports.  Bench JSON rows and the conformance suite
+# pin against these sets instead of three ad-hoc copies drifting apart.
+ENGINE_STAT_KEYS = frozenset({
+    "backend", "steps", "chunks", "prefill_dispatches", "preemptions",
+    "pages_high_water", "reserve_dips", "prefix_cache_hits",
+    "prefix_cache_misses", "pages_shared", "prefix_tokens_reused",
+    "prefix_cache_pages", "prefix_cache_evictions",
+    "spec_drafted", "spec_accepted", "spec_rollbacks",
+})
+BACKEND_STAT_KEYS = frozenset({
+    "decode_dispatches", "prefill_kernel_fallbacks",
+    "paged_kernel_fallbacks",
+})
+STATS_SCHEMA = ENGINE_STAT_KEYS | BACKEND_STAT_KEYS
 
 
 def sample_host(logits, rid: int, index: int, temperature: float,
@@ -103,6 +142,7 @@ class BackendBase:
 
     name = "backend"
     supports_prefix_cache = False
+    supports_speculation = False
 
     def __init__(self, params: Any, cfg: Any, ecfg: Any):
         self.params = params
@@ -144,15 +184,42 @@ class BackendBase:
         raise NotImplementedError(
             f"{self.name} backend does not support the prefix cache")
 
+    # --- speculative decoding (EngineConfig.spec_k > 0) ------------------
+    # A backend advertises `supports_speculation = True` and implements the
+    # triple; the engine owns accept/reject bookkeeping and never calls
+    # these on a backend that does not advertise them.
+
+    def draft_horizon(self, t: np.ndarray) -> np.ndarray:
+        """Per-slot cap on draftable tokens past position ``t`` ([S] ->
+        [S]).  Default: no backend-internal boundary, draft freely."""
+        return np.full_like(np.asarray(t), np.iinfo(np.int32).max)
+
+    def draft_steps(self, tokens_in, t, active, page_table, rid,
+                    temperature, sample_idx, key, spec_len) -> np.ndarray:
+        raise NotImplementedError(
+            f"{self.name} backend does not support speculative decoding")
+
+    def verify_step(self, tokens_in, t, active, page_table, rid,
+                    temperature, sample_idx, key, spec_len,
+                    drafts) -> np.ndarray:
+        raise NotImplementedError(
+            f"{self.name} backend does not support speculative decoding")
+
+    def rollback(self, commits: np.ndarray, active: np.ndarray) -> None:
+        raise NotImplementedError(
+            f"{self.name} backend does not support speculative decoding")
+
     def invalidate(self) -> None:
         self._dirty = True
 
     def stats(self) -> dict:
-        # the fallback counter is process-global and MiTA-kernel-specific;
-        # backends that never dispatch the chunk-prefill kernel report 0
+        # the fallback counters are process-global and MiTA-kernel-
+        # specific; backends that never dispatch those kernels report 0
         # rather than inheriting another engine's trace-time fallbacks
+        # (keys must cover BACKEND_STAT_KEYS exactly)
         return {"decode_dispatches": self.decode_dispatches,
-                "prefill_kernel_fallbacks": 0}
+                "prefill_kernel_fallbacks": 0,
+                "paged_kernel_fallbacks": 0}
 
 
 def resolve(params: Any, cfg: Any, ecfg: Any) -> BackendBase:
@@ -187,4 +254,5 @@ def for_arch(arch: Any, params: Any, ecfg: Any) -> BackendBase:
                      "(encdec decode is capacity-448 native; see registry)")
 
 
-__all__ = ["BackendBase", "resolve", "for_arch", "sample_host"]
+__all__ = ["BackendBase", "resolve", "for_arch", "sample_host",
+           "ENGINE_STAT_KEYS", "BACKEND_STAT_KEYS", "STATS_SCHEMA"]

@@ -112,6 +112,73 @@ def _batched_chunk_prefill_fn(cfg: ModelConfig, chunk: int,
 
 
 @functools.lru_cache(maxsize=None)
+def _draft_fn(cfg: ModelConfig, n_pos: int) -> Callable:
+    """Self-drafting program: ``n_pos`` landmark-branch-only forward
+    passes, each feeding its sampled token to the next (``lm_landmark_
+    draft``).  Read-only — no donation, no state output: a rejected draft
+    has nothing to undo."""
+
+    def run(p, st, tok, t, ac, m_cnt, rid, si, temp, key):
+        return tfm.lm_landmark_draft(p, st, tok, t, ac, m_cnt, cfg, n_pos,
+                                     rid, si, temp, key)
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=None)
+def _verify_fn(cfg: ModelConfig, fused_finalize: bool,
+               n_pos: int) -> Callable:
+    """Teacher-forced verify: ONE program scans the EXACT fused decode body
+    (`_decode_fn`'s step, finalize cond and all) over the ``n_pos`` =
+    spec_k + 1 positions [input, drafts...], sampling at every position.
+    Collects the sampled tokens [n_pos, S] plus a per-position q_sum
+    snapshot stack for `rollback` — the draft horizon guarantees the
+    landmark finalize can only fire at position 0 (always committed), so
+    the running query sum is the ONLY state a rejected suffix perturbs
+    (appended KV rows past the commit point are masked by ``t`` and
+    overwritten by future appends; no page churn)."""
+    w = cfg.attn.window
+
+    def run(p, st, toks, t, m_done, pt, ac, rid, si, temp, key, spec_len):
+        def body(carry, inp):
+            st, t, m_done, si = carry
+            i, tok = inp
+            ac_i = ac & (i <= spec_len)
+            due = None
+            if fused_finalize:
+                due = ac_i & (t % w == 0) & (t // w > m_done)
+                m_done = jnp.where(due, t // w, m_done)
+            out, st = tfm.lm_paged_decode_step(
+                p, st, tok, t, pt, ac_i, cfg, due=due,
+                sample=(rid, si, temp, key))
+            adv = ac_i.astype(t.dtype)
+            return (st, t + adv, m_done, si + adv), (out, st.q_sum)
+
+        (st, _, _, _), (toks_out, q_stack) = jax.lax.scan(
+            body, (st, t, m_done, si), (jnp.arange(n_pos), toks))
+        return toks_out, q_stack, st
+
+    return jax.jit(run, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _rollback_fn(cfg: ModelConfig) -> Callable:
+    """Rewind the running query sums to the snapshot taken after the last
+    committed verify position: per-slot gather of ``q_stack[commits - 1]``
+    (commits >= 1 always — position 0 commits unconditionally; inactive
+    slots pass commits=1, whose stack row equals their untouched sums
+    because the verify scan's accumulate and finalize are active-masked)."""
+
+    def run(st, q_stack, commits):
+        sel = jnp.moveaxis(q_stack, 2, 0)            # [S, k+1, L, Hkv, d]
+        idx = (commits - 1)[:, None, None, None, None]
+        picked = jnp.take_along_axis(sel, idx, axis=1)[:, 0]
+        return st._replace(q_sum=jnp.moveaxis(picked, 0, 1))
+
+    return jax.jit(run, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
 def _attach_prefix_fn(cfg: ModelConfig) -> Callable:
     """Install cached prefix summary rows into one slot: landmark
     queries/values, global expert rows and their validity, with both
@@ -144,6 +211,7 @@ class MiTABackend(BackendBase):
 
     name = "mita"
     supports_prefix_cache = True
+    supports_speculation = True
 
     def __init__(self, params: Any, cfg: ModelConfig, ecfg: Any):
         from repro.kernels import ops
@@ -151,9 +219,18 @@ class MiTABackend(BackendBase):
         if cfg.attn.backend not in ("mita", "mita_ref"):
             raise ValueError("MiTABackend drives MiTA decode caches "
                              f"(got attention backend {cfg.attn.backend!r})")
+        mode = getattr(ecfg, "spec_mode", "auto")
+        if getattr(ecfg, "spec_k", 0) and mode not in ("auto", "landmark"):
+            raise ValueError(
+                f"MiTABackend speculates by self-drafting against the "
+                f"compressed landmark branch (spec_mode='landmark'; got "
+                f"{mode!r})")
+        self.spec_mode = "landmark"
         # chunk-prefill kernel→XLA VMEM fallbacks are counted process-wide
         # at trace time; this backend reports the delta since it was built
         self._fallback_base = ops.prefill_kernel_fallbacks()
+        self._paged_base = ops.paged_kernel_fallbacks()
+        self._q_stack = None                  # verify→rollback handoff
         self.cfg = dataclasses.replace(
             cfg, attn=dataclasses.replace(
                 cfg.attn, external_finalize=ecfg.finalize == "external"))
@@ -332,11 +409,86 @@ class MiTABackend(BackendBase):
         # whole [S, V] logits (docs/serving.md, host-transfer budget)
         return np.asarray(out)
 
+    # -------------------------------------------------------- speculation --
+
+    def draft_horizon(self, t: np.ndarray) -> np.ndarray:
+        """Stop drafting short of the next landmark finalize so it can only
+        fire at verify position 0 (which always commits): a rejected draft
+        then never needs a landmark/expert/m_done rollback, and every
+        speculative append stays inside the slot's current page — the one
+        `_ensure_append_pages` guarantees.  With ``r = t % window``:
+        external finalize fires when a position hits a window boundary;
+        inline finalize fires one position earlier (it closes window
+        ``(t+1) // w`` after the append), so at ``r == w - 1`` the round
+        degenerates to plain decode — position ``t`` is the page's last
+        row and drafting past it would append into an unowned page."""
+        r = np.asarray(t) % self.window
+        if self.cfg.attn.external_finalize:
+            return np.where(r != 0, self.window - r - 1, self.window - 1)
+        return np.where(r < self.window - 1, self.window - 2 - r, 0)
+
+    def draft_steps(self, tokens_in: np.ndarray, t: np.ndarray,
+                    active: np.ndarray, page_table: np.ndarray,
+                    rid: np.ndarray, temperature: np.ndarray,
+                    sample_idx: np.ndarray, key: jax.Array,
+                    spec_len: np.ndarray) -> np.ndarray:
+        # drafts attend ONLY the already-finalized landmark tiles — no
+        # expert gather, no page-walk: page_table is unused, and the
+        # landmark count is frozen at the round's start (external mode
+        # drafts against the host m_done mirror; the position-0 finalize
+        # lands in the verify step)
+        ac = np.asarray(active) & (np.asarray(spec_len) > 0)
+        m_cnt = (self.m_done.copy() if self.cfg.attn.external_finalize
+                 else np.asarray(t) // self.window)
+        drafts = _draft_fn(self.cfg, self.ecfg.spec_k)(
+            self.params, self.states, jnp.asarray(tokens_in, jnp.int32),
+            jnp.asarray(t), jnp.asarray(ac), jnp.asarray(m_cnt),
+            jnp.asarray(rid), jnp.asarray(sample_idx),
+            jnp.asarray(temperature), key)
+        self.decode_dispatches += 1
+        return np.asarray(drafts)
+
+    def verify_step(self, tokens_in: np.ndarray, t: np.ndarray,
+                    active: np.ndarray, page_table: np.ndarray,
+                    rid: np.ndarray, temperature: np.ndarray,
+                    sample_idx: np.ndarray, key: jax.Array,
+                    spec_len: np.ndarray,
+                    drafts: np.ndarray) -> np.ndarray:
+        t = np.asarray(t)
+        active = np.asarray(active)
+        md_old = self.m_done.copy()
+        if self.cfg.attn.external_finalize:
+            # host mirror of the device transition: the draft horizon
+            # guarantees finalize can only fire at position 0
+            w = self.window
+            due0 = active & (t % w == 0) & (t // w > self.m_done)
+            self.m_done = np.where(due0, t // w, self.m_done)
+        toks = np.concatenate(
+            [np.asarray(tokens_in, np.int32)[None], np.asarray(drafts)], 0)
+        fn = _verify_fn(self.cfg, self.cfg.attn.external_finalize,
+                        self.ecfg.spec_k + 1)
+        toks_out, self._q_stack, self.states = fn(
+            self.params, self.states, jnp.asarray(toks, jnp.int32),
+            jnp.asarray(t), jnp.asarray(md_old), jnp.asarray(page_table),
+            jnp.asarray(active), jnp.asarray(rid),
+            jnp.asarray(sample_idx), jnp.asarray(temperature), key,
+            jnp.asarray(spec_len))
+        self.decode_dispatches += 1
+        return np.asarray(toks_out)
+
+    def rollback(self, commits: np.ndarray, active: np.ndarray) -> None:
+        commits = np.where(np.asarray(active), np.asarray(commits), 1)
+        self.states = _rollback_fn(self.cfg)(
+            self.states, self._q_stack, jnp.asarray(commits, jnp.int32))
+        self._q_stack = None
+
     def stats(self) -> dict:
         from repro.kernels import ops
         s = super().stats()
         s["prefill_kernel_fallbacks"] = (ops.prefill_kernel_fallbacks()
                                          - self._fallback_base)
+        s["paged_kernel_fallbacks"] = (ops.paged_kernel_fallbacks()
+                                       - self._paged_base)
         return s
 
     # ------------------------------------------------------------- oracle --

@@ -100,6 +100,71 @@ def _chunk_fn(family: str, cfg) -> Callable:
 
 
 @functools.lru_cache(maxsize=None)
+def _spec_draft_fn(family: str, cfg, n_pos: int) -> Callable:
+    """Free-running speculative scan (``spec_mode="self"``): the EXACT
+    decode body over ``n_pos`` positions in ONE dispatch, each sampled
+    token fed to the next, per-slot length as data (positions past
+    ``spec_len[s]`` pass the carry through bit-frozen).  The state commits
+    through the scan — self-drafted tokens ARE the decode rule's output,
+    so every draft verifies and no rollback exists on this path; the win
+    is dispatch collapse: one program commits up to ``n_pos`` tokens."""
+    _, decode_raw, _ = _OPS[family]
+
+    def run(p, st, tok, t, ac, rid, si, temp, key, spec_len):
+        def body(carry, i):
+            st, tok, t, si = carry
+            ac_i = ac & (i < spec_len)
+            logits, st_new = decode_raw(p, st, tok, t, cfg)
+            st = slotted.where_slots(ac_i, st_new, st, axis=1)
+            tok2 = tfm.sample_tokens(logits, rid, si, temp, key)
+            tok2 = jnp.where(ac_i, tok2, tok)
+            adv = ac_i.astype(t.dtype)
+            return (st, tok2, t + adv, si + adv), tok2
+
+        (st, _, _, _), drafts = jax.lax.scan(body, (st, tok, t, si),
+                                             jnp.arange(n_pos))
+        return drafts, st
+
+    return jax.jit(run, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _spec_tf_fn(family: str, cfg, n_pos: int) -> Callable:
+    """Teacher-forced speculative scan (``spec_mode="stress"`` verify AND
+    rollback replay): consume a fixed [n_pos, S] token stream through the
+    exact decode body, per-slot step count as data, collecting the sampled
+    tokens.  The same compiled program serves both calls — verify runs it
+    over [input, drafts...] with ``n_steps = spec_len + 1``; rollback
+    restores the pre-verify snapshot and re-runs it over the COMMITTED
+    stream with ``n_steps = commits``, which is bit-identical to having
+    decoded those tokens one step at a time (the committed prefix of the
+    verify scan consumed exactly these inputs from the same state)."""
+    _, decode_raw, _ = _OPS[family]
+
+    def run(p, st, toks, t, ac, rid, si, temp, key, n_steps):
+        def body(carry, inp):
+            st, t, si = carry
+            i, tok = inp
+            ac_i = ac & (i < n_steps)
+            logits, st_new = decode_raw(p, st, tok, t, cfg)
+            st = slotted.where_slots(ac_i, st_new, st, axis=1)
+            out = tfm.sample_tokens(logits, rid, si, temp, key)
+            adv = ac_i.astype(t.dtype)
+            return (st, t + adv, si + adv), out
+
+        (st, _, _), outs = jax.lax.scan(body, (st, t, si),
+                                        (jnp.arange(n_pos), toks))
+        return outs, st
+
+    return jax.jit(run, donate_argnums=(1,))
+
+
+# snapshot for the stress path's rollback; scans donate their state input,
+# so the copy must NOT (fresh buffers, original untouched)
+_tree_copy = jax.jit(lambda st: jax.tree.map(jnp.copy, st))
+
+
+@functools.lru_cache(maxsize=None)
 def _ref_prefill_fn(family: str, cfg, n: int) -> Callable:
     """Reference prefill: time-major scan of the FULL decode step over the
     prompt — a different program structure from the serving chunk scan, so
@@ -131,9 +196,18 @@ class _RecurrentBackend(BackendBase):
     """Shared `DecodeBackend` implementation over `_OPS[family]`."""
 
     family = ""
+    supports_speculation = True
 
     def __init__(self, params: Any, cfg: Any, ecfg: Any):
         super().__init__(params, cfg, ecfg)
+        mode = getattr(ecfg, "spec_mode", "auto")
+        self.spec_mode = "self" if mode == "auto" else mode
+        if getattr(ecfg, "spec_k", 0) and self.spec_mode not in ("self",
+                                                                 "stress"):
+            raise ValueError(
+                f"recurrent backends speculate by self-drafting through "
+                f"the decode scan (spec_mode='self') or via the synthetic "
+                f"rollback-exercising 'stress' mode (got {mode!r})")
         # inline landmark finalize for the hybrid's attention caches: the
         # slot-wise vmap evaluates both cond branches anyway, and inline
         # semantics make the chunk-scan prefill and the decode step the
@@ -148,6 +222,8 @@ class _RecurrentBackend(BackendBase):
                                   ecfg.sample_device == "fused")
         self._t_dev = self._ac_dev = self._rid_dev = None
         self._tp_dev = self._si_dev = None
+        self._snap = None                  # stress verify→rollback handoff
+        self._verify_toks = self._stress = None
 
     # ------------------------------------------------------ slot lifecycle --
 
@@ -213,6 +289,97 @@ class _RecurrentBackend(BackendBase):
             self._ac_dev, self._rid_dev, self._si_dev, self._tp_dev, key)
         self.decode_dispatches += 1
         return np.asarray(out)
+
+    # -------------------------------------------------------- speculation --
+
+    def draft_steps(self, tokens_in: np.ndarray, t: np.ndarray,
+                    active: np.ndarray, page_table: np.ndarray,
+                    rid: np.ndarray, temperature: np.ndarray,
+                    sample_idx: np.ndarray, key: jax.Array,
+                    spec_len: np.ndarray) -> np.ndarray:
+        del page_table                  # constant-size states: no pages
+        k = self.ecfg.spec_k
+        if self.spec_mode == "stress":
+            # synthetic host-side proposals, deliberately (mostly) wrong:
+            # zero dispatches here, and the verify/rollback pair below gets
+            # exercised with real mismatches — the conformance suite's way
+            # of pinning rollback bit-exactness on a backend whose natural
+            # speculation never rejects
+            off = np.arange(1, k + 1, dtype=np.int32)[:, None]
+            return ((np.asarray(tokens_in, np.int32)[None] + off)
+                    % self.cfg.vocab)
+        drafts, self.states = _spec_draft_fn(self.family, self.cfg, k)(
+            self.params, self.states, jnp.asarray(tokens_in, jnp.int32),
+            jnp.asarray(t), jnp.asarray(active), jnp.asarray(rid),
+            jnp.asarray(sample_idx), jnp.asarray(temperature), key,
+            jnp.asarray(spec_len))
+        self.decode_dispatches += 1
+        return np.asarray(drafts)
+
+    def verify_step(self, tokens_in: np.ndarray, t: np.ndarray,
+                    active: np.ndarray, page_table: np.ndarray,
+                    rid: np.ndarray, temperature: np.ndarray,
+                    sample_idx: np.ndarray, key: jax.Array,
+                    spec_len: np.ndarray,
+                    drafts: np.ndarray) -> np.ndarray:
+        del page_table                  # constant-size states: no pages
+        k = self.ecfg.spec_k
+        tokens_in = np.asarray(tokens_in, np.int32)
+        t = np.asarray(t)
+        active = np.asarray(active)
+        spec_len = np.asarray(spec_len)
+        sample_idx = np.asarray(sample_idx)
+        if self.spec_mode == "stress":
+            # snapshot (the scan donates the LIVE state, not the copy),
+            # then teacher-force [input, drafts...] through the decode
+            # scan; rollback restores + replays the committed prefix with
+            # the same inputs, stashed here
+            self._snap = _tree_copy(self.states)
+            self._stress = (tokens_in, t, np.asarray(rid),
+                            np.asarray(temperature), sample_idx, key)
+            toks = np.concatenate([tokens_in[None], np.asarray(drafts)], 0)
+            outs, self.states = _spec_tf_fn(self.family, self.cfg, k + 1)(
+                self.params, self.states, jnp.asarray(toks, jnp.int32),
+                jnp.asarray(t), jnp.asarray(active), jnp.asarray(rid),
+                jnp.asarray(sample_idx), jnp.asarray(temperature), key,
+                jnp.asarray(spec_len + 1))
+            self.decode_dispatches += 1
+            self._verify_toks = np.asarray(outs)
+            return self._verify_toks
+        # self mode: the draft scan already ran the exact decode rule and
+        # committed its state, so the drafts verify themselves; one more
+        # masked decode step at t0 + spec_len samples the correction token
+        s = len(tokens_in)
+        rows = np.maximum(spec_len - 1, 0)
+        tok_v = np.where(spec_len > 0,
+                         np.asarray(drafts)[rows, np.arange(s)], tokens_in)
+        self._dirty = True              # mirrors must see spec'd t/si
+        corr = self.decode_step(
+            tok_v.astype(np.int32), t + spec_len, active, None, rid,
+            temperature, sample_idx + spec_len, key)
+        self._dirty = True              # ...and forget them afterwards
+        verify = np.concatenate(
+            [np.asarray(drafts), np.zeros((1, s), np.int32)], 0)
+        verify[spec_len, np.arange(s)] = corr
+        return verify
+
+    def rollback(self, commits: np.ndarray, active: np.ndarray) -> None:
+        if self.spec_mode == "self":
+            return                      # drafted state IS the decode state
+        tokens_in, t, rid, temp, sample_idx, key = self._stress
+        n = np.where(np.asarray(active), np.asarray(commits), 0)
+        # the committed prefix of the verify scan consumed exactly
+        # [input, verify[0..c-2]] — replaying that stream from the
+        # snapshot is bit-identical to having decoded it step by step
+        toks = np.concatenate([tokens_in[None], self._verify_toks[:-1]], 0)
+        _, self.states = _spec_tf_fn(self.family, self.cfg,
+                                     self.ecfg.spec_k + 1)(
+            self.params, self._snap, jnp.asarray(toks, jnp.int32),
+            jnp.asarray(t), jnp.asarray(active), jnp.asarray(rid),
+            jnp.asarray(sample_idx), jnp.asarray(temp), key,
+            jnp.asarray(n, jnp.int32))
+        self.decode_dispatches += 1
+        self._snap = self._verify_toks = self._stress = None
 
     # ------------------------------------------------------------- oracle --
 

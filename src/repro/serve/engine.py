@@ -148,7 +148,24 @@ class EngineConfig:
     unshared chunk — TTFT collapses for shared-system-prompt traffic.
     Backends that do not store per-token context in pages have nothing to
     reuse and silently run cache-off.  Cached pages are reclaimed, LRU
-    leaf first, before the scheduler resorts to preempting live work."""
+    leaf first, before the scheduler resorts to preempting live work.
+
+    ``spec_k`` > 0 enables LOSSLESS speculative decoding: each engine step
+    becomes one draft/verify/commit round — the backend cheaply proposes up
+    to ``spec_k`` tokens per slot (`draft_steps`), re-derives all of them
+    plus one correction through its exact decode rule in one fused
+    teacher-forced pass (`verify_step`), and the engine commits the longest
+    draft prefix the verification reproduced plus the first corrected
+    token, rewinding backend state past the commit point (`rollback`).
+    Emitted streams are bit-identical to ``spec_k = 0`` at any temperature
+    (verification samples with the same (rid, index)-derived keys), across
+    preemption, cancellation, and the prefix cache.  Requires
+    ``sample_device="fused"`` and a backend advertising
+    ``supports_speculation``.  ``spec_mode`` selects the backend's drafting
+    strategy ("auto" picks its native one: the paged MiTA backend drafts
+    against the compressed landmark branch only; recurrent backends run
+    their exact decode scan — also accepting "stress", the synthetic
+    wrong-draft mode that exercises rollback)."""
     n_slots: int = 8                # decode batch width
     n_pages: int = 64               # shared pool size (pages of `window`)
     pages_per_slot: int = 8         # max context per request, in pages
@@ -158,6 +175,8 @@ class EngineConfig:
     sample_device: str = "host"     # host | fused (on-device sampling)
     prefill_mode: str = "batched"   # batched | per-job (chunk dispatch)
     prefix_cache: bool = False      # shared-prefix reuse (chunked only)
+    spec_k: int = 0                 # speculative tokens/round (0 = off)
+    spec_mode: str = "auto"         # backend drafting strategy
 
 
 class _PageAllocator:
@@ -297,8 +316,19 @@ class ServingEngine:
             raise ValueError("prefix_cache requires chunked prefill "
                              "(prefill_chunk > 0): cache hits resume the "
                              "chunk program at the first unshared chunk")
+        if ecfg.spec_k < 0:
+            raise ValueError("spec_k must be >= 0")
         self.backend = (backend if backend is not None
                         else _backends.resolve(params, cfg, ecfg))
+        if ecfg.spec_k:
+            if ecfg.sample_device != "fused":
+                raise ValueError(
+                    "speculative decoding samples inside the verify "
+                    "program (spec_k > 0 requires sample_device='fused')")
+            if not getattr(self.backend, "supports_speculation", False):
+                raise ValueError(
+                    f"the {self.backend.name!r} backend does not support "
+                    "speculative decoding (spec_k > 0)")
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
@@ -354,6 +384,11 @@ class ServingEngine:
         self.n_pages_shared = 0           # pages attached by reference
         self.n_prefix_tokens_reused = 0   # prompt tokens never re-prefilled
         self.prefix_hits: dict[int, int] = {}  # rid -> tokens reused
+
+        # speculative-decoding counters (zero when spec_k == 0)
+        self.n_spec_drafted = 0           # draft tokens proposed
+        self.n_spec_accepted = 0          # draft tokens verification kept
+        self.n_spec_rollbacks = 0         # rounds that rejected a draft
 
     # ------------------------------------------------------------ plumbing --
 
@@ -425,7 +460,10 @@ class ServingEngine:
              "prefix_cache_pages": (self.cache.n_pages
                                     if self.cache is not None else 0),
              "prefix_cache_evictions": (self.cache.evictions
-                                        if self.cache is not None else 0)}
+                                        if self.cache is not None else 0),
+             "spec_drafted": self.n_spec_drafted,
+             "spec_accepted": self.n_spec_accepted,
+             "spec_rollbacks": self.n_spec_rollbacks}
         s.update(self.backend.stats())
         return s
 
@@ -1010,39 +1048,106 @@ class ServingEngine:
         survivors."""
         for slot in np.nonzero(self.active)[0]:
             slot = int(slot)
-            if not self.active[slot]:
-                continue              # preempted as a victim this pass
-            need_idx = int(self.t[slot]) // self.w
-            if need_idx < len(self.slot_pages[slot]):
-                continue
-            self._reclaim_cache(1, reserved=True)
-            while not self.alloc.can_alloc(1, reserved=True):
-                victim = self._pick_victim()
-                if victim is None:
-                    break
-                self._preempt(victim)
+            # one speculative round can commit up to spec_k + 1 tokens, so
+            # a slot's position may have crossed SEVERAL page boundaries
+            # since the last pass — grow page by page until covered
+            # (non-speculative decode advances by one token and takes at
+            # most one iteration, exactly the old behavior)
+            while (self.active[slot]
+                   and int(self.t[slot]) // self.w
+                   >= len(self.slot_pages[slot])):
+                need_idx = len(self.slot_pages[slot])
                 self._reclaim_cache(1, reserved=True)
-                if victim == slot:
-                    break
-            if not self.active[slot]:
-                continue
-            page = self.alloc.alloc(1, reserved=True)[0]
-            # a decode append writes the page in place (the fused step's
-            # aliased scatter), so its target must never be shared: fresh
-            # allocations carry exactly one reference, and append pages
-            # are never inserted into the prefix cache (inserts cover
-            # prompt windows only, which precede every append index)
-            assert self.alloc.refcount(page) == 1
-            self.slot_pages[slot].append(page)
-            self.page_table[slot, need_idx] = page
-            self.backend.invalidate()
+                while not self.alloc.can_alloc(1, reserved=True):
+                    victim = self._pick_victim()
+                    if victim is None:
+                        break
+                    self._preempt(victim)
+                    self._reclaim_cache(1, reserved=True)
+                    if victim == slot:
+                        break
+                if not self.active[slot]:
+                    break             # preempted as a victim this pass
+                page = self.alloc.alloc(1, reserved=True)[0]
+                # a decode append writes the page in place (the fused
+                # step's aliased scatter), so its target must never be
+                # shared: fresh allocations carry exactly one reference,
+                # and append pages are never inserted into the prefix
+                # cache (inserts cover prompt windows only, which precede
+                # every append index)
+                assert self.alloc.refcount(page) == 1
+                self.slot_pages[slot].append(page)
+                self.page_table[slot, need_idx] = page
+                self.backend.invalidate()
+
+    # ---------------------------------------------------- speculative round --
+
+    def _spec_round(self, now: float) -> None:
+        """One draft/verify/commit round for the whole active batch.
+
+        Per-slot draft length = min(spec_k, remaining - 1, the backend's
+        draft horizon), floored at 0 — a zero-length slot still runs verify
+        position 0 and commits one token, so every request retires at
+        exactly the step count the non-speculative engine would reach.
+        The commit rule is the lossless one: keep the longest draft prefix
+        the exact decode rule reproduced token-for-token, plus its first
+        correction; rejected suffix state is rewound by the backend."""
+        k = self.ecfg.spec_k
+        act = [int(s) for s in np.nonzero(self.active)[0]]
+        remaining = np.zeros_like(self.t)
+        for slot in act:
+            remaining[slot] = (self.slot_req[slot].max_new_tokens
+                               - len(self.slot_out[slot]))
+        horizon = np.asarray(self.backend.draft_horizon(self.t))
+        spec_len = np.where(
+            self.active,
+            np.minimum(np.minimum(k, remaining - 1), horizon),
+            0).astype(np.int32)
+        spec_len = np.maximum(spec_len, 0)
+
+        drafts = self.backend.draft_steps(
+            self.tokens_in, self.t, self.active, self.page_table,
+            self.slot_rid, self.slot_temp, self.sample_idx, self._key,
+            spec_len)
+        verify = self.backend.verify_step(
+            self.tokens_in, self.t, self.active, self.page_table,
+            self.slot_rid, self.slot_temp, self.sample_idx, self._key,
+            spec_len, drafts)
+
+        commits = np.ones(len(self.t), np.int32)
+        for slot in act:
+            sl = int(spec_len[slot])
+            j = 0
+            while j < sl and drafts[j, slot] == verify[j, slot]:
+                j += 1
+            commits[slot] = j + 1
+            self.n_spec_drafted += sl
+            self.n_spec_accepted += j
+            self.n_spec_rollbacks += int(j < sl)
+        self.backend.rollback(commits, self.active)
+
+        for slot in act:
+            req = self.slot_req[slot]
+            c = int(commits[slot])
+            for i in range(c):
+                self._emit(slot, int(verify[i, slot]), now)
+            self.t[slot] += c
+            self.sample_idx[slot] += c
+            self.tokens_in[slot] = int(verify[c - 1, slot])
+            if len(self.slot_out[slot]) >= req.max_new_tokens:
+                self._retire(slot, now)
+        # scheduler tensors moved by per-slot amounts: device mirrors are
+        # stale no matter what (retire already invalidates, but a round
+        # with no retirement must too)
+        self.backend.invalidate()
 
     # ---------------------------------------------------------------- step --
 
     def step(self) -> bool:
         """One engine iteration: retire/admit, advance at most one prefill
-        chunk, then one fused decode step for the active batch.  Returns
-        False when there is nothing left to do."""
+        chunk, then one fused decode step — or, with ``spec_k`` > 0, one
+        speculative draft/verify/commit round — for the active batch.
+        Returns False when there is nothing left to do."""
         now = time.perf_counter()
         self._admit(now)
         self._advance_prefill(now)
@@ -1050,6 +1155,13 @@ class ServingEngine:
             self._ensure_append_pages()
         if not self.active.any():
             return bool(self.waiting or self.prefilling)
+
+        if self.ecfg.spec_k:
+            t0 = time.perf_counter()
+            self._spec_round(time.perf_counter())
+            self.step_times.append(time.perf_counter() - t0)
+            self.steps += 1
+            return True
 
         fused_sampling = self.ecfg.sample_device == "fused"
         t0 = time.perf_counter()

@@ -465,6 +465,54 @@ def test_allocator_refcount_property(n_pages, seed):
         assert al.shared_pages == sum(1 for c in model.values() if c > 1)
 
 
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 16), st.integers(0, 4), st.integers(0, 2**32 - 1))
+def test_allocator_spec_grow_rollback_property(n_pages, reserve, seed):
+    """Property: the speculative-decoding page pattern — a slot GROWS by
+    several reserved pages in one event (a verified run of k+1 commits can
+    cross multiple page boundaries, `_ensure_append_pages`' while-loop)
+    and may immediately ROLL BACK the newest pages (rejected drafts) —
+    preserves exact accounting: grow never leaves a partially-allocated
+    slot on failure paths we model (grow is all-or-nothing per page, so a
+    mid-grow exhaustion keeps the pages it did get), rollback releases
+    LIFO from the slot's tail only, and no interleaving of grows,
+    rollbacks, and full retires across slots leaks or duplicates pages."""
+    reserve = min(reserve, n_pages)
+    al = _PageAllocator(n_pages, reserve=reserve)
+    rng = np.random.default_rng(seed)
+    slots: dict[int, list[int]] = {}
+    next_slot = 0
+    for _ in range(60):
+        op = int(rng.integers(4))
+        if op == 0:                                 # admit a new slot
+            n = int(rng.integers(1, max(2, n_pages // 2)))
+            if al.can_alloc(n):
+                slots[next_slot] = al.alloc(n)
+                next_slot += 1
+        elif op == 1 and slots:                     # spec grow (while-loop)
+            s = int(rng.choice(list(slots)))
+            for _ in range(int(rng.integers(1, 4))):
+                if not al.can_alloc(1, reserved=True):
+                    break                           # engine would preempt
+                slots[s] += al.alloc(1, reserved=True)
+        elif op == 2 and slots:                     # spec rollback (tail)
+            s = int(rng.choice(list(slots)))
+            n = min(int(rng.integers(1, 4)), len(slots[s]) - 1)
+            if n > 0:
+                tail = [slots[s].pop() for _ in range(n)]
+                al.release(tail)
+        elif slots:                                 # retire a whole slot
+            al.release(slots.pop(int(rng.choice(list(slots)))))
+        live = [p for h in slots.values() for p in h]
+        assert al.in_use == len(live), "accounting drift"
+        assert len(set(live)) == len(live), "page double-owned"
+        assert sorted(al.free + live) == list(range(n_pages)), \
+            "page leaked or duplicated"
+    for pages in slots.values():
+        al.release(pages)
+    assert al.in_use == 0 and sorted(al.free) == list(range(n_pages))
+
+
 def test_preempted_prefill_keeps_admission_stamp():
     """A victim evicted MID-PREFILL must report its ORIGINAL admission
     time: re-admission restamping `admitted` would under-report queueing
