@@ -1,0 +1,201 @@
+"""Chaos benchmark: supervised serving under seeded fault injection.
+
+One cell per backend (the `serve_arch` matrix: paged MiTA, Mamba2 SSD,
+RG-LRU hybrid), four phases each:
+
+  1. **reference** — a fault-free engine runs the trace; its greedy
+     tokens are the parity oracle for every later phase.
+  2. **chaos** — the same trace through `Supervisor` + `ChaosBackend`
+     with seeded transient faults, slot-bound faults (quarantine +
+     bit-exact resurrection), and allocator spikes (real page pressure).
+     Gates: injected faults on >= 20% of step attempts, greedy bit-parity
+     for every completed request, and a drained pool (zero page leaks).
+  3. **ladder** — one scripted persistent fault that only clears at the
+     last degradation rung, so the supervised engine walks
+     spec_off -> prefix_cache_off -> xla_forced and still gates parity.
+  4. **kill + restore** — the supervised run is snapshotted mid-trace
+     (atomic journal), the engine is dropped, and a fresh supervised
+     engine restores and drains.  Gate: the union of pre-kill and
+     post-restore tokens is bit-identical to the reference.
+
+Rows land in ``BENCH_chaos.json`` with the robustness counters
+(`rejected` / `deadline_expired` / `retries` / `quarantined` /
+`degradation_level` / `stragglers`) plus the injector's own counts; any
+failed gate raises SystemExit (the CI lane hard-fails).
+
+Run:  PYTHONPATH=src python -m benchmarks.chaos_bench --smoke
+      PYTHONPATH=src python -m benchmarks.run chaos
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.serve_bench import BACKENDS, _arch_cell
+from repro.core.mita_decode import window_aligned
+from repro.serve import (ChaosBackend, ChaosConfig, EngineConfig, Request,
+                         ServingEngine, Supervisor, SupervisorConfig)
+
+#: robustness counters every bench row carries (mirrors STATS_SCHEMA adds)
+ROBUSTNESS_KEYS = ("rejected", "deadline_expired", "retries",
+                   "quarantined", "degradation_level")
+
+
+def _trace(cfg, n_req: int, hi: int, seed: int = 3) -> list[Request]:
+    w = cfg.attn.window
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, size=int(
+                        rng.choice([w, 2 * w]))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(2, hi)))
+            for i in range(n_req)]
+
+
+def _copies(reqs: list[Request]) -> list[Request]:
+    return [Request(rid=r.rid, prompt=r.prompt.copy(),
+                    max_new_tokens=r.max_new_tokens) for r in reqs]
+
+
+def _completed(finished) -> dict[int, np.ndarray]:
+    return {f.rid: f.tokens for f in finished if f.reason == "complete"}
+
+
+def _parity(tokens: dict, ref: dict) -> bool:
+    return set(tokens) == set(ref) and all(
+        np.array_equal(tokens[r], ref[r]) for r in ref)
+
+
+def _leaks(eng: ServingEngine) -> int:
+    return eng.alloc.in_use + len(eng.alloc.refs)
+
+
+def run_chaos(which: str = "all", n_req: int = 8,
+              out: str = "BENCH_chaos.json", kill_after: int = 6) -> dict:
+    results: dict = {}
+    gates_failed: list[str] = []
+    for name in (BACKENDS if which in ("all", None) else (which,)):
+        cfg, params, mk = _arch_cell(name)
+        w = cfg.attn.window
+        hi = 13
+        reqs = _trace(cfg, n_req, hi)
+        total = sum(r.max_new_tokens for r in reqs)
+        pages = window_aligned(2 * w + hi, w) // w
+        ecfg = EngineConfig(n_slots=4, pages_per_slot=pages,
+                            n_pages=4 * pages + 4, prefill_chunk=w)
+
+        # -- phase 1: fault-free reference ------------------------------
+        ref_eng = ServingEngine(params, cfg, ecfg, backend=mk(ecfg))
+        ref = _completed(ref_eng.run(_copies(reqs)))
+        assert _leaks(ref_eng) == 0
+
+        # -- phase 2: seeded chaos (transient + slot + spikes) ----------
+        chaos = ChaosConfig(seed=11, p_fault=0.35, transient_len=2,
+                            p_slot_fault=0.3, alloc_spike_every=6,
+                            alloc_spike_pages=2, alloc_spike_len=3,
+                            ops=("decode_step", "prefill_chunks"))
+        cb = ChaosBackend(mk(ecfg), chaos)
+        eng = ServingEngine(params, cfg, ecfg, backend=cb)
+        sup = Supervisor(eng, SupervisorConfig(max_retries=2))
+        t0 = time.perf_counter()
+        done = sup.run(_copies(reqs))
+        dt = time.perf_counter() - t0
+        st = sup.stats()
+        attempts = st["steps"] + cb.n_injected
+        fault_fraction = cb.n_injected / max(attempts, 1)
+        chaos_parity = _parity(_completed(done), ref)
+        chaos_leaks = _leaks(eng)
+        sup.close()
+
+        # -- phase 3: scripted persistent fault walks the full ladder ---
+        lcfg = ChaosConfig(seed=0, persistent_clears_at=3)
+        lcb = ChaosBackend(mk(ecfg), lcfg)
+        leng = ServingEngine(params, cfg, ecfg, backend=lcb)
+        lsup = Supervisor(leng, SupervisorConfig(max_retries=1))
+        lcb.inject("decode_step", kind="persistent")
+        ldone = lsup.run(_copies(reqs))
+        ladder_parity = _parity(_completed(ldone), ref)
+        ladder_level = leng.degradation_level
+        ladder_leaks = _leaks(leng)
+        lsup.close()        # restores REPRO_PREFILL_IMPL
+
+        # -- phase 4: kill mid-trace, restore on a fresh engine ---------
+        rcb = ChaosBackend(mk(ecfg), chaos)
+        reng = ServingEngine(params, cfg, ecfg, backend=rcb)
+        rsup = Supervisor(reng, SupervisorConfig(max_retries=2))
+        for r in _copies(reqs):
+            rsup.submit(r)
+        for _ in range(kill_after):
+            if not rsup.step():
+                break
+        fd, snap_path = tempfile.mkstemp(suffix=".chaos.json")
+        os.close(fd)
+        try:
+            rsup.save_snapshot(snap_path)
+            rsup.close()    # the old engine is now dead
+            snap = Supervisor.load_snapshot(snap_path)
+        finally:
+            os.unlink(snap_path)
+        rcb2 = ChaosBackend(mk(ecfg), ChaosConfig(seed=23, p_fault=0.2,
+                                                  transient_len=1,
+                                                  ops=("decode_step",)))
+        reng2 = ServingEngine(params, cfg, ecfg, backend=rcb2)
+        rsup2 = Supervisor(reng2, SupervisorConfig(max_retries=2))
+        rsup2.restore(snap)
+        while rsup2.step():
+            pass
+        restore_parity = _parity(_completed(reng2.finished), ref)
+        restore_leaks = _leaks(reng2)
+        rsup2.close()
+
+        gates = dict(
+            parity=bool(chaos_parity),
+            zero_leak=bool(chaos_leaks == 0 and ladder_leaks == 0
+                           and restore_leaks == 0),
+            fault_fraction=bool(fault_fraction >= 0.2),
+            ladder_walked=bool(ladder_level == 3 and ladder_parity),
+            restore_parity=bool(restore_parity))
+        row = dict(
+            tok_s=total / dt, fault_fraction=fault_fraction,
+            injected=cb.n_injected, faults_started=cb.n_faults_started,
+            spikes=cb.n_spikes, stragglers=st["stragglers"],
+            ladder_rungs=list(lsup.degradations), gates=gates)
+        for k in ROBUSTNESS_KEYS:
+            row[k] = st[k]
+        results[name] = row
+        gates_failed += [f"{name}:{g}" for g, ok in gates.items() if not ok]
+        emit(f"chaos_{name}", dt * 1e6 / total,
+             f"{row['tok_s']:.1f} tok/s | injected={cb.n_injected} "
+             f"({fault_fraction:.0%} of attempts) retries={st['retries']} "
+             f"quarantined={st['quarantined']} spikes={cb.n_spikes} | "
+             f"parity={chaos_parity} ladder={ladder_level} "
+             f"restore={restore_parity} leaks={chaos_leaks}")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    if gates_failed:
+        raise SystemExit(f"chaos gates failed: {gates_failed}")
+    return results
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: fewer requests")
+    ap.add_argument("--backend", default="all",
+                    choices=("all",) + BACKENDS)
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run_chaos(args.backend, n_req=6 if args.smoke else 8, out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

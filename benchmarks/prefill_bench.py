@@ -99,6 +99,11 @@ def _engine_compare(n_short: int, n_long: int, n_slots: int,
             "spec_drafted": int(st["spec_drafted"]),
             "spec_accepted": int(st["spec_accepted"]),
             "spec_rollbacks": int(st["spec_rollbacks"]),
+            "rejected": int(st["rejected"]),
+            "deadline_expired": int(st["deadline_expired"]),
+            "retries": int(st["retries"]),
+            "quarantined": int(st["quarantined"]),
+            "degradation_level": int(st["degradation_level"]),
         }
         emit(f"prefill_engine_{name}", dt * 1e6 / total_tokens,
              f"{out[name]['tok_s']:.1f} tok/s | short ttft "

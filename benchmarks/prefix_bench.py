@@ -125,7 +125,12 @@ def run_prefix(n_req: int = 16, n_slots: int = 4, smoke: bool = False,
             prefill_kernel_fallbacks=st["prefill_kernel_fallbacks"],
             spec_drafted=st["spec_drafted"],
             spec_accepted=st["spec_accepted"],
-            spec_rollbacks=st["spec_rollbacks"])
+            spec_rollbacks=st["spec_rollbacks"],
+            rejected=st["rejected"],
+            deadline_expired=st["deadline_expired"],
+            retries=st["retries"],
+            quarantined=st["quarantined"],
+            degradation_level=st["degradation_level"])
         emit(f"prefix_{name}", dt * 1e6 / total_tokens,
              f"{results[name]['tok_s']:.1f} tok/s | ttft "
              f"p50 {results[name]['ttft_p50'] * 1e3:.0f}ms "

@@ -6,8 +6,8 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [tab2 tab5 ...]
 
 import sys
 
-from benchmarks import (decode_bench, prefill_bench, prefix_bench,
-                        serve_bench, spec_bench, tables)
+from benchmarks import (chaos_bench, decode_bench, prefill_bench,
+                        prefix_bench, serve_bench, spec_bench, tables)
 
 
 ALL = [
@@ -24,6 +24,7 @@ ALL = [
     ("prefill", prefill_bench.prefill_bench),
     ("prefix", prefix_bench.run_prefix),
     ("spec", spec_bench.run_spec),
+    ("chaos", chaos_bench.run_chaos),
 ]
 
 

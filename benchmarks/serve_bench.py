@@ -330,7 +330,12 @@ def serve_arch(which: str = "all", n_req: int = 10,
             pages_shared=st["pages_shared"],
             spec_drafted=st["spec_drafted"],
             spec_accepted=st["spec_accepted"],
-            spec_rollbacks=st["spec_rollbacks"])
+            spec_rollbacks=st["spec_rollbacks"],
+            rejected=st["rejected"],
+            deadline_expired=st["deadline_expired"],
+            retries=st["retries"],
+            quarantined=st["quarantined"],
+            degradation_level=st["degradation_level"])
         emit(f"serve_arch_{name}", dt * 1e6 / total,
              f"{total / dt:.1f} tok/s | greedy_match={match} | "
              f"chunks={st['chunks']} in {st['prefill_dispatches']} "

@@ -98,7 +98,12 @@ def run_spec(n_req: int = 12, smoke: bool = False,
                 spec_accepted=st["spec_accepted"],
                 spec_rollbacks=st["spec_rollbacks"],
                 accept_rate=(st["spec_accepted"]
-                             / max(st["spec_drafted"], 1)))
+                             / max(st["spec_drafted"], 1)),
+                rejected=st["rejected"],
+                deadline_expired=st["deadline_expired"],
+                retries=st["retries"],
+                quarantined=st["quarantined"],
+                degradation_level=st["degradation_level"])
             emit(f"spec_{name}_{cell}", dt * 1e6 / total,
                  f"{row[cell]['tok_s']:.1f} tok/s | steps={st['steps']} "
                  f"dispatches={st['decode_dispatches']} | accepted "

@@ -34,7 +34,13 @@ log = logging.getLogger("repro.ft")
 
 
 class StepTimer:
-    """EWMA step timer with straggler detection."""
+    """EWMA step timer with straggler detection.
+
+    Shared between the training harness (per-host step times at scale)
+    and the serving supervisor (`serve/supervisor.py` wraps every
+    engine step in one to spot injected or organic slow steps);
+    ``n_stragglers`` accumulates how many observed steps tripped the
+    threshold so both consumers report one number."""
 
     def __init__(self, alpha: float = 0.1, threshold: float = 3.0):
         self.alpha = alpha
@@ -43,6 +49,7 @@ class StepTimer:
         self._prev_ewma: Optional[float] = None   # EWMA before the last obs
         self.last: Optional[float] = None
         self._t0: Optional[float] = None
+        self.n_stragglers = 0           # observations past the threshold
 
     def __enter__(self):
         self._t0 = time.perf_counter()
@@ -57,6 +64,8 @@ class StepTimer:
         self._prev_ewma = self.ewma
         self.ewma = dt if self.ewma is None else \
             (1 - self.alpha) * self.ewma + self.alpha * dt
+        if self.is_straggling:
+            self.n_stragglers += 1
 
     @property
     def is_straggling(self) -> bool:

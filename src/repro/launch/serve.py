@@ -27,6 +27,13 @@ interleaved with the decode batch and enables priority preemption;
 (docs/serving.md explains all three).  ``--sample-device fused`` moves
 sampling into the fused decode program so the hot loop downloads [S]
 int32 tokens instead of [S, V] logits.
+
+The continuous engine always runs SUPERVISED (`serve.Supervisor`):
+``--max-retries`` sets the per-fault retry budget, ``--deadline-ms``
+attaches a deadline to every generated request, and ``--chaos-seed`` /
+``--chaos-rate`` wrap the backend in the seeded fault injector
+(`serve.ChaosBackend`) to demonstrate retry / quarantine / degradation
+end-to-end (docs/serving.md §Failure domains).
 """
 
 from __future__ import annotations
@@ -161,12 +168,30 @@ def main(argv=None):
                          "native one (MiTA: landmark-branch self-draft; "
                          "recurrent: exact decode scan); stress forces "
                          "synthetic wrong drafts to exercise rollback")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="continuous: wrap the backend in the seeded "
+                         "fault injector (serve.ChaosBackend) and drive "
+                         "the engine through the Supervisor — transient "
+                         "faults, slot faults, and allocator spikes on "
+                         "this seed's schedule")
+    ap.add_argument("--chaos-rate", type=float, default=0.2,
+                    help="chaos: per-dispatch new-fault probability")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="continuous: per-request deadline; requests "
+                         "still unfinished when it expires are cancelled "
+                         "with finish reason 'deadline_expired'")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="supervisor: step retries before a fault "
+                         "escalates to quarantine / degradation")
     args = ap.parse_args(argv)
     if args.prefix_cache and not args.prefill_chunk:
         ap.error("--prefix-cache requires --prefill-chunk > 0")
     if args.spec_k and args.sample_device != "fused":
         ap.error("--spec-k requires --sample-device fused (verification "
                  "samples inside the fused program)")
+    if args.chaos_seed is not None and args.engine != "continuous":
+        ap.error("--chaos-seed requires --engine continuous (the fault "
+                 "injector wraps the DecodeBackend)")
 
     arch = get_arch(args.arch, smoke=args.smoke)
     if arch.family not in ("dense", "moe", "vlm", "ssm", "hybrid"):
@@ -220,17 +245,34 @@ def main(argv=None):
               f"({args.batch * args.gen / dt:.1f} tok/s)")
         sample = gen
     else:
+        from repro.serve import ChaosBackend, ChaosConfig, Supervisor, \
+            SupervisorConfig
+
         n_req = args.requests or 2 * args.batch
-        eng = ServingEngine(params, cfg, ecfg,
-                            backend=backends.for_arch(arch, params, ecfg))
+        backend = backends.for_arch(arch, params, ecfg)
+        if args.chaos_seed is not None:
+            # faults are gated at ops whose injection fires before any
+            # state mutation, so supervised retries stay bit-exact on
+            # every backend (recurrent self-drafters included)
+            backend = ChaosBackend(backend, ChaosConfig(
+                seed=args.chaos_seed, p_fault=args.chaos_rate,
+                transient_len=2, p_slot_fault=0.3,
+                alloc_spike_every=8, alloc_spike_pages=2,
+                ops=("decode_step", "prefill_chunks", "prefill_chunk",
+                     "prefill_group", "draft_steps")))
+        eng = ServingEngine(params, cfg, ecfg, backend=backend)
+        sup = Supervisor(eng, SupervisorConfig(
+            max_retries=args.max_retries))
         reqs = [Request(rid=i, prompt=prompts[i % len(prompts)],
                         max_new_tokens=args.gen,
                         temperature=args.temperature,
-                        priority=args.priority)
+                        priority=args.priority,
+                        deadline_ms=args.deadline_ms)
                 for i in range(n_req)]
         t0 = time.perf_counter()
-        done = eng.run(reqs)
+        done = sup.run(reqs)
         dt = time.perf_counter() - t0
+        sup.close()
         total = sum(len(f.tokens) for f in done)
         st = eng.stats()
         print(f"continuous[{st['backend']}]: {n_req} requests "
@@ -245,8 +287,15 @@ def main(argv=None):
               f"prefix_hits={st['prefix_cache_hits']}, "
               f"pages_shared={st['pages_shared']}, "
               f"spec_accepted={st['spec_accepted']}/"
-              f"{st['spec_drafted']}")
-        sample = np.stack([done[b].tokens for b in range(min(2, len(done)))])
+              f"{st['spec_drafted']}, "
+              f"rejected={st['rejected']}, "
+              f"deadline_expired={st['deadline_expired']}, "
+              f"retries={st['retries']}, "
+              f"quarantined={st['quarantined']}, "
+              f"degradation_level={st['degradation_level']}")
+        full = [f.tokens for f in done if f.reason == "complete"] \
+            or [f.tokens for f in done]
+        sample = np.stack(full[:2]) if full[0].size else np.zeros((1, 16))
     print("sample generations (token ids):")
     for b in range(min(2, sample.shape[0])):
         print(f"  [{b}] {sample[b, :16].tolist()}")

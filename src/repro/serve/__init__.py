@@ -13,14 +13,29 @@ Public surface:
     scheduler serves the whole fast-weight spectrum
     (`backends.for_arch(arch, params, ecfg)` builds one from a registry
     `ArchConfig`).
+  * `Supervisor` / `SupervisorConfig` — fault isolation around the
+    engine: retry with backoff, per-slot quarantine, the degradation
+    ladder, straggler detection, and bit-exact snapshot/restore crash
+    recovery (`serve/supervisor.py`).
+  * `ChaosBackend` / `ChaosConfig` / `InjectedFault` — the seeded fault
+    injector that makes every one of those paths exercisable in CI
+    (`serve/chaos.py`).
+  * `AllocatorInvariantError` — page-accounting corruption; never
+    retried, never shed.
 
 docs/serving.md documents the request lifecycle, the backend protocol, the
-page-pool layout, and every compiled program shape the engine can dispatch.
+page-pool layout, every compiled program shape the engine can dispatch,
+and the failure-domain taxonomy.
 """
 
 from repro.serve import backends
-from repro.serve.engine import (EngineConfig, FinishedRequest, Request,
-                                ServingEngine)
+from repro.serve.chaos import ChaosBackend, ChaosConfig, InjectedFault
+from repro.serve.engine import (AllocatorInvariantError, EngineConfig,
+                                FinishedRequest, Request, ServingEngine)
+from repro.serve.supervisor import (DEGRADATION_RUNGS, Supervisor,
+                                    SupervisorConfig, SupervisionExhausted)
 
-__all__ = ["EngineConfig", "FinishedRequest", "Request", "ServingEngine",
-           "backends"]
+__all__ = ["AllocatorInvariantError", "ChaosBackend", "ChaosConfig",
+           "DEGRADATION_RUNGS", "EngineConfig", "FinishedRequest",
+           "InjectedFault", "Request", "ServingEngine", "Supervisor",
+           "SupervisorConfig", "SupervisionExhausted", "backends"]

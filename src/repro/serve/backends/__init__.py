@@ -84,6 +84,14 @@ Protocol (duck-typed; `BackendBase` supplies the defaults):
                                   ``commits[s]`` tokens past the round's
                                   start — bit-identical to having decoded
                                   those tokens one step at a time.
+  * ``on_quarantine(slots)`` / ``on_degrade(level)`` / ``on_stall()`` —
+                                  supervision notifications (no-op
+                                  defaults); `serve/supervisor.py` fires
+                                  them on fault isolation, a degradation-
+                                  ladder rung, and scheduler stalls, and
+                                  fault-injection wrappers
+                                  (`serve/chaos.py`) key fault lifecycles
+                                  off them.
 """
 
 from __future__ import annotations
@@ -106,6 +114,8 @@ ENGINE_STAT_KEYS = frozenset({
     "prefix_cache_misses", "pages_shared", "prefix_tokens_reused",
     "prefix_cache_pages", "prefix_cache_evictions",
     "spec_drafted", "spec_accepted", "spec_rollbacks",
+    "rejected", "deadline_expired", "retries", "quarantined",
+    "degradation_level",
 })
 BACKEND_STAT_KEYS = frozenset({
     "decode_dispatches", "prefill_kernel_fallbacks",
@@ -211,6 +221,21 @@ class BackendBase:
 
     def invalidate(self) -> None:
         self._dirty = True
+
+    # --- supervision hooks (serve/supervisor.py) -------------------------
+    # No-op by default: the supervisor notifies the backend of fault-
+    # isolation events so wrappers (serve/chaos.py) can key fault
+    # lifecycles off them — quarantine clears slot-bound faults, a ladder
+    # rung clears persistent ones, a stall drains held resources.
+
+    def on_quarantine(self, slots: list) -> None:
+        pass
+
+    def on_degrade(self, level: int) -> None:
+        pass
+
+    def on_stall(self) -> None:
+        pass
 
     def stats(self) -> dict:
         # the fallback counters are process-global and MiTA-kernel-

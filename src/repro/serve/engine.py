@@ -54,6 +54,14 @@ import numpy as np
 from repro.serve import backends as _backends
 
 
+class AllocatorInvariantError(RuntimeError):
+    """Page accounting corruption: double-free, duplicate release, retain
+    of a free page, or an allocation the caller failed to guard with
+    `can_alloc`.  These are scheduler bugs, not workload conditions — the
+    supervisor re-raises them instead of retrying (`serve/supervisor.py`),
+    and no admission-control path may convert them into a rejection."""
+
+
 @dataclasses.dataclass(eq=False)
 class Request:
     """One generation job.
@@ -77,6 +85,7 @@ class Request:
     temperature: float = 0.0
     arrival: float = 0.0            # seconds since trace start
     priority: int = 0               # higher = more important
+    deadline_ms: Optional[float] = None   # wall-clock SLO from submit
 
 
 @dataclasses.dataclass
@@ -88,7 +97,15 @@ class FinishedRequest:
     ``cancelled``: the request was killed by `ServingEngine.cancel` —
     ``tokens`` holds whatever was emitted before the kill (possibly
     nothing), and a request cancelled while still waiting carries zeroed
-    admission/TTFT stamps."""
+    admission/TTFT stamps.
+
+    ``reason`` is the structured finish taxonomy (`FINISH_REASONS`):
+    ``"complete"`` ran to max_new_tokens; ``"cancelled"`` was killed by
+    `cancel`; ``"deadline_expired"`` missed its ``deadline_ms`` SLO (a
+    cancel with its own label — ``cancelled`` is True for both);
+    ``"rejected"`` was shed at submit time (typed backpressure: the
+    request can never fit a slot or no prefill path can serve it) and
+    never entered the scheduler."""
     rid: int
     tokens: np.ndarray              # [max_new_tokens] generated ids
     arrival: float
@@ -98,6 +115,10 @@ class FinishedRequest:
     token_times: list[float] = dataclasses.field(default_factory=list)
     preemptions: int = 0
     cancelled: bool = False
+    reason: str = "complete"
+
+
+FINISH_REASONS = ("complete", "cancelled", "deadline_expired", "rejected")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -222,7 +243,7 @@ class _PageAllocator:
 
     def alloc(self, n: int, reserved: bool = False) -> list[int]:
         if not self.can_alloc(n, reserved):
-            raise RuntimeError("page pool exhausted")
+            raise AllocatorInvariantError("page pool exhausted")
         if reserved and len(self.free) - n < self.reserve:
             self.reserve_dips += 1
         pages, self.free = self.free[:n], self.free[n:]
@@ -235,7 +256,7 @@ class _PageAllocator:
         """Add one reference to each (already-allocated) page."""
         for p in pages:
             if self.refs.get(p, 0) < 1:
-                raise RuntimeError(
+                raise AllocatorInvariantError(
                     f"retain of page {p} which is not allocated")
         for p in pages:
             self.refs[p] += 1
@@ -246,11 +267,11 @@ class _PageAllocator:
         Validates the whole batch before mutating anything, so a raising
         call never half-applies."""
         if len(set(pages)) != len(pages):
-            raise RuntimeError(
+            raise AllocatorInvariantError(
                 f"release with duplicate page ids: {sorted(pages)}")
         for p in pages:
             if self.refs.get(p, 0) < 1:
-                raise RuntimeError(
+                raise AllocatorInvariantError(
                     f"double-free: page {p} has no live reference")
         for p in pages:
             self.refs[p] -= 1
@@ -390,6 +411,17 @@ class ServingEngine:
         self.n_spec_accepted = 0          # draft tokens verification kept
         self.n_spec_rollbacks = 0         # rounds that rejected a draft
 
+        # robustness counters (serve/supervisor.py increments retries /
+        # quarantined / degradation_level; rejections and deadline kills
+        # are the engine's own admission-control outcomes)
+        self.n_rejected = 0               # requests shed at submit
+        self.n_deadline_expired = 0       # requests killed past their SLO
+        self.n_retries = 0                # supervised step re-executions
+        self.n_quarantined = 0            # slots evicted by fault isolation
+        self.degradation_level = 0        # supervisor ladder rung (0 = full)
+        self._deadline: dict[int, float] = {}  # rid -> absolute expiry
+        self.reject_reasons: dict[int, str] = {}  # rid -> why it was shed
+
     # ------------------------------------------------------------ plumbing --
 
     def _sample(self, logits: np.ndarray, req: Request, index: int) -> int:
@@ -463,27 +495,54 @@ class ServingEngine:
                                         if self.cache is not None else 0),
              "spec_drafted": self.n_spec_drafted,
              "spec_accepted": self.n_spec_accepted,
-             "spec_rollbacks": self.n_spec_rollbacks}
+             "spec_rollbacks": self.n_spec_rollbacks,
+             "rejected": self.n_rejected,
+             "deadline_expired": self.n_deadline_expired,
+             "retries": self.n_retries,
+             "quarantined": self.n_quarantined,
+             "degradation_level": self.degradation_level}
         s.update(self.backend.stats())
         return s
 
     # ----------------------------------------------------------- scheduler --
 
-    def submit(self, req: Request) -> None:
-        """Queue a request.  Validates — before any scheduler state is
-        touched — that the prompt is non-empty, that prompt + max_new fits a
-        slot's page budget (invariant 3: an admitted request can always
-        finish), that the rid is not already in flight, and that the prompt
-        length lowers through whichever prefill path will serve it."""
+    def submit(self, req: Request) -> bool:
+        """Queue a request, or shed it.  Returns True when queued.
+
+        Malformed submissions (empty prompt, max_new < 1, a rid already in
+        flight) are caller bugs and still raise ValueError.  Workload
+        conditions the engine can never serve — prompt + max_new exceeding
+        a slot's page budget, or a prompt length no prefill path can lower
+        — are STRUCTURED BACKPRESSURE, not errors: the request is shed
+        with a ``FinishedRequest(reason="rejected")`` (tokens empty, rid
+        free for resubmission), ``n_rejected`` counts it, and False is
+        returned.  Nothing downstream of a True return can reject: an
+        admitted request can always finish (invariant 3)."""
         if len(req.prompt) < 1 or req.max_new_tokens < 1:
             raise ValueError("need a non-empty prompt and ≥ 1 new token")
+        if req.rid in self._inflight:
+            raise ValueError(f"request id {req.rid} is already in flight")
+        try:
+            self._validate_servable(req)
+        except ValueError as e:
+            self._reject(req, str(e))
+            return False
+        self._inflight.add(req.rid)
+        self._seq += 1
+        self._enqueue(_WaitEntry(req=req, seq=self._seq))
+        if req.deadline_ms is not None:
+            self._deadline[req.rid] = (time.perf_counter()
+                                       + req.deadline_ms / 1e3)
+        return True
+
+    def _validate_servable(self, req: Request) -> None:
+        """Raise ValueError when no admission path can ever serve ``req``
+        — before any scheduler state is touched."""
         if self.pages_needed(req) > self.ecfg.pages_per_slot:
             raise ValueError(
                 f"request {req.rid} needs {self.pages_needed(req)} pages; a "
                 f"slot owns {self.ecfg.pages_per_slot} "
                 f"(max context {self.ecfg.pages_per_slot * self.w})")
-        if req.rid in self._inflight:
-            raise ValueError(f"request id {req.rid} is already in flight")
         n = len(req.prompt)
         batched = self.ecfg.prefill_mode == "batched"
         if not self.ecfg.prefill_chunk:
@@ -491,7 +550,7 @@ class ServingEngine:
         elif self.backend.chunkable(n, batched):
             self.backend.validate_prompt(n, "chunked")
         elif batched:
-            # batched chunked mode has no monolithic route — reject now
+            # batched chunked mode has no monolithic route — shed now
             # rather than feed the chunk program a prompt the backend
             # said it cannot start (unreachable for the current backends,
             # which chunk everything in batched mode)
@@ -502,9 +561,15 @@ class ServingEngine:
                 "monolithic prefill)")
         else:
             self.backend.validate_prompt(n, "monolithic")
-        self._inflight.add(req.rid)
-        self._seq += 1
-        self._enqueue(_WaitEntry(req=req, seq=self._seq))
+
+    def _reject(self, req: Request, why: str) -> None:
+        self.n_rejected += 1
+        self.reject_reasons[req.rid] = why
+        now = time.perf_counter()
+        self.finished.append(FinishedRequest(
+            rid=req.rid, tokens=np.zeros(0, np.int32), arrival=req.arrival,
+            admitted=0.0, first_token=0.0, finished=now,
+            reason="rejected"))
 
     def _enqueue(self, entry: _WaitEntry) -> None:
         bisect.insort(self.waiting, entry, key=lambda e: e.key)
@@ -513,7 +578,10 @@ class ServingEngine:
         self.slot_out[slot].append(tok)
         self.slot_times[slot].append(now)
 
-    def _retire(self, slot: int, now: float, cancelled: bool = False) -> None:
+    def _retire(self, slot: int, now: float, cancelled: bool = False,
+                reason: Optional[str] = None) -> None:
+        if reason is None:
+            reason = "cancelled" if cancelled else "complete"
         req = self.slot_req.pop(slot)
         self.slot_entry.pop(slot)
         out = self.slot_out.pop(slot)
@@ -536,14 +604,16 @@ class ServingEngine:
             rid=req.rid, tokens=np.asarray(out, np.int32),
             arrival=req.arrival, admitted=admitted, first_token=ttft,
             finished=now, token_times=times, preemptions=npre,
-            cancelled=cancelled))
+            cancelled=cancelled, reason=reason))
 
-    def cancel(self, rid: int) -> bool:
+    def cancel(self, rid: int, reason: str = "cancelled") -> bool:
         """Kill an in-flight request in ANY state — waiting (fresh or
         preempted-awaiting-readmission), mid-chunked-prefill, or decoding —
         releasing its slot and page references immediately and emitting a
         ``cancelled`` FinishedRequest carrying whatever tokens were already
-        out.  Returns False if the rid is not in flight (already finished,
+        out.  ``reason`` labels the kill ("cancelled", or
+        "deadline_expired" when the engine's own SLO sweep fires it).
+        Returns False if the rid is not in flight (already finished,
         never submitted, or cancelled twice)."""
         now = time.perf_counter()
         for entry in self.waiting:
@@ -557,7 +627,7 @@ class ServingEngine:
                     arrival=entry.req.arrival, admitted=meta[0],
                     first_token=meta[1], finished=now,
                     token_times=list(times), preemptions=entry.evictions,
-                    cancelled=True))
+                    cancelled=True, reason=reason))
                 return True
         for slot, job in self.prefilling.items():
             if job.entry.req.rid != rid:
@@ -577,13 +647,29 @@ class ServingEngine:
                 rid=rid, tokens=np.asarray(out, np.int32),
                 arrival=entry.req.arrival, admitted=meta[0],
                 first_token=meta[1], finished=now, token_times=list(times),
-                preemptions=entry.evictions, cancelled=True))
+                preemptions=entry.evictions, cancelled=True, reason=reason))
             return True
         for slot, req in self.slot_req.items():
             if req.rid == rid:
-                self._retire(slot, now, cancelled=True)
+                self._retire(slot, now, cancelled=True, reason=reason)
                 return True
         return False
+
+    def _expire_deadlines(self) -> None:
+        """Cancel every in-flight request whose ``deadline_ms`` SLO has
+        passed, with the ``deadline_expired`` finish reason — the kill
+        rides the ordinary `cancel` path, so slot and page release follow
+        the exact lifecycle cancellation already pins."""
+        if not self._deadline:
+            return
+        now = time.perf_counter()
+        for rid, expiry in list(self._deadline.items()):
+            if rid not in self._inflight:
+                del self._deadline[rid]
+            elif now >= expiry:
+                del self._deadline[rid]
+                if self.cancel(rid, reason="deadline_expired"):
+                    self.n_deadline_expired += 1
 
     # ---------------------------------------------------------- preemption --
 
@@ -815,9 +901,25 @@ class ServingEngine:
             for slot in slots:
                 self.backend.alloc_slot(slot)
 
-            logits = self.backend.prefill_group(
-                np.stack([e.req.prompt for e in group]).astype(np.int32),
-                slots, pages_list)
+            try:
+                logits = self.backend.prefill_group(
+                    np.stack([e.req.prompt for e in group]).astype(np.int32),
+                    slots, pages_list)
+            except Exception:
+                # fault-atomic admission: at this point the group's pages
+                # and slots are claimed but not yet recorded in slot_pages
+                # / slot_req — a raising backend would leak them all.
+                # Unwind to the pre-admission state (entries back in the
+                # queue, pages freed, slots returned) and re-raise so the
+                # supervisor can retry the whole step.
+                for slot, pages in zip(slots, pages_list):
+                    self.alloc.release(pages)
+                    self.free_slots.append(slot)
+                    self.backend.retire(slot)
+                self.backend.invalidate()
+                for e in group:
+                    self._enqueue(e)
+                raise
 
             for i, (entry, slot, pages) in enumerate(
                     zip(group, slots, pages_list)):
@@ -1148,6 +1250,7 @@ class ServingEngine:
         chunk, then one fused decode step — or, with ``spec_k`` > 0, one
         speculative draft/verify/commit round — for the active batch.
         Returns False when there is nothing left to do."""
+        self._expire_deadlines()
         now = time.perf_counter()
         self._admit(now)
         self._advance_prefill(now)

@@ -33,7 +33,9 @@ from repro.models import mamba2 as m2
 from repro.models import rglru as rglru_mod
 from repro.models import transformer as tfm
 from repro.models.modules import AttnConfig, ModelConfig
-from repro.serve import EngineConfig, Request, ServingEngine
+from repro.serve import (ChaosBackend, ChaosConfig, EngineConfig,
+                         InjectedFault, Request, ServingEngine, Supervisor,
+                         SupervisorConfig)
 from repro.serve.backends import (BACKEND_STAT_KEYS, ENGINE_STAT_KEYS,
                                   STATS_SCHEMA, BackendBase)
 from repro.serve.backends.mita import MiTABackend
@@ -230,17 +232,88 @@ def test_base_backend_refuses_speculation():
             == np.iinfo(np.int32).max).all()
 
 
+# ------------------------------------------------ fault & leak conformance --
+
+def test_midstep_exception_leaks_no_pages(cell):
+    """A backend raising mid-`step()` must leave the scheduler consistent:
+    after the exception propagates, draining the SAME engine returns the
+    pool to zero pages / zero refcounts and every stream still matches the
+    static reference.  All three dispatch sites are exercised — monolithic
+    admission (`prefill_group`, the rollback path), chunked prefill, and
+    decode — for every backend."""
+    name, cfg, params, engine = cell
+    mkcls = _cell(name)[2]
+    specs = [(W, 3), (2 * W, 4)]
+    for chunk, op in ((0, "prefill_group"), (W, "prefill_chunks"),
+                      (W, "decode_step")):
+        ecfg = EngineConfig(n_slots=2, pages_per_slot=4, n_pages=10,
+                            prefill_chunk=chunk)
+        cb = ChaosBackend(mkcls(params, cfg, ecfg), ChaosConfig())
+        eng = ServingEngine(params, cfg, ecfg, backend=cb)
+        for r in _requests(cfg.vocab, specs):
+            eng.submit(r)
+        if op == "decode_step":     # land the fault after prefill finished
+            while not eng.active.any():
+                eng.step()
+        cb.inject(op, raises=1)
+        with pytest.raises(InjectedFault):
+            while eng.step():
+                pass
+        while eng.step():           # fault healed: same engine drains
+            pass
+        assert eng.alloc.in_use == 0, f"{name}/{op}: pages leaked"
+        assert eng.alloc.refs == {}, f"{name}/{op}: refcounts leaked"
+        ref = cb.inner.fresh()
+        for f, r in zip(sorted(eng.finished, key=lambda f: f.rid),
+                        _requests(cfg.vocab, specs)):
+            np.testing.assert_array_equal(
+                f.tokens, ref.static_reference(r.prompt[None],
+                                               r.max_new_tokens)[0],
+                err_msg=f"{name}/{op}: stream diverged after fault")
+
+
+def test_supervised_chaos_parity(cell):
+    """Seeded chaos (transient + slot-bound faults + allocator spikes)
+    under the supervisor: every request completes bit-identical to the
+    fault-free engine, the pool drains to zero, and the robustness
+    counters in `stats()` actually move — for every backend."""
+    name, cfg, params, engine = cell
+    mkcls = _cell(name)[2]
+    specs = [(W, 4), (2 * W, 6), (W, 3), (2 * W, 5)]
+    ecfg = EngineConfig(n_slots=2, pages_per_slot=4, n_pages=12,
+                        prefill_chunk=W)
+    ref = _tokens(engine(ecfg).run(_requests(cfg.vocab, specs)))
+    chaos = ChaosConfig(seed=5, p_fault=0.3, transient_len=2,
+                        p_slot_fault=0.4, alloc_spike_every=5,
+                        alloc_spike_pages=2,
+                        ops=("decode_step", "prefill_chunks"))
+    cb = ChaosBackend(mkcls(params, cfg, ecfg), chaos)
+    eng = ServingEngine(params, cfg, ecfg, backend=cb)
+    sup = Supervisor(eng, SupervisorConfig(max_retries=2, stall_steps=4))
+    done = sup.run(_requests(cfg.vocab, specs))
+    sup.close()
+    assert _tokens(done) == ref, f"{name}: supervised streams diverged"
+    assert eng.alloc.in_use == 0 and eng.alloc.refs == {}
+    assert cb.n_injected > 0, f"{name}: chaos schedule fired nothing"
+    assert sup.stats()["retries"] > 0
+
+
 # ------------------------------------------------------- schedule fuzzing --
 
 @settings(max_examples=6, deadline=None)
 @given(st.sampled_from(["mita", "mamba2"]), st.integers(1, 4),
-       st.booleans(), st.integers(0, 2**31 - 1))
-def test_speculative_schedule_fuzz(name, spec_k, cancel, seed):
+       st.booleans(), st.booleans(), st.integers(0, 2**31 - 1))
+def test_speculative_schedule_fuzz(name, spec_k, cancel, chaos, seed):
     """Property: ANY random schedule — prompt lengths, generation budgets,
-    staggered arrivals, optional mid-trace cancellation — produces token
-    streams bit-identical to the spec_k=0 engine, and the allocator ends
-    every trace with zero pages in use (mita exercises the landmark
-    drafter; mamba2 the stress mode, so rollback replay is fuzzed too)."""
+    staggered arrivals, optional mid-trace cancellation, optional seeded
+    chaos (supervised transient/slot faults + allocator spikes) — produces
+    token streams bit-identical to the fault-free spec_k=0 engine for
+    every request that ran to completion, and the allocator ends every
+    trace with zero pages in use (mita exercises the landmark drafter;
+    mamba2 the stress mode, so rollback replay is fuzzed too).  Chaos only
+    intercepts ops whose faults fire BEFORE any state mutation
+    (`draft_steps` is gated pre-draft, never `verify_step`), so a retried
+    step replays against unchanged backend state by construction."""
     cfg, params, mk = _cell(name)
     rng = np.random.default_rng(seed)
     servable = [5, 6, W, W + 2, 2 * W - 2, 2 * W]
@@ -248,12 +321,22 @@ def test_speculative_schedule_fuzz(name, spec_k, cancel, seed):
              for _ in range(5)]
     mode = "auto" if name == "mita" else "stress"
 
-    def run(k):
+    def run(k, with_chaos):
         ecfg = EngineConfig(n_slots=2, pages_per_slot=4, n_pages=16,
                             prefill_chunk=W, sample_device="fused",
                             spec_k=k, spec_mode=mode if k else "auto")
-        eng = ServingEngine(params, cfg, ecfg,
-                            backend=mk(params, cfg, ecfg))
+        backend = mk(params, cfg, ecfg)
+        cb = None
+        if with_chaos:
+            backend = cb = ChaosBackend(backend, ChaosConfig(
+                seed=seed ^ 0xC0FFEE, p_fault=0.2, transient_len=2,
+                p_slot_fault=0.3, alloc_spike_every=7, alloc_spike_pages=2,
+                ops=("decode_step", "prefill_chunks", "draft_steps")))
+        eng = ServingEngine(params, cfg, ecfg, backend=backend)
+        sup = Supervisor(eng, SupervisorConfig(max_retries=2,
+                                               stall_steps=4)) \
+            if with_chaos else None
+        step = sup.step if sup is not None else eng.step
         pend = _requests(cfg.vocab, specs, seed=seed)
         idx = steps = 0
         while idx < len(pend) or eng.waiting or eng.prefilling \
@@ -263,13 +346,25 @@ def test_speculative_schedule_fuzz(name, spec_k, cancel, seed):
                 idx += 1
             if cancel and steps == 3:
                 eng.cancel(1)
-            eng.step()
+            step()
             steps += 1
+        if cb is not None:
+            cb.release_spikes()
+            sup.close()
         assert eng.alloc.in_use == 0 and eng.alloc.refs == {}, "page leak"
-        return _tokens(eng.finished)
+        return _tokens([f for f in eng.finished
+                        if f.reason == "complete"])
 
-    assert run(spec_k) == run(0), (
-        f"{name} spec_k={spec_k} cancel={cancel} seed={seed} diverged")
+    got, base = run(spec_k, chaos), run(0, False)
+    # the one cancel target may legitimately finish before the cancel
+    # fires in one run but not the other (spec_k / retries shift how many
+    # tokens a loop iteration emits); every request completed in BOTH
+    # runs must be bit-identical, and no other request may go missing
+    ctx = f"{name} spec_k={spec_k} cancel={cancel} chaos={chaos} seed={seed}"
+    assert set(got) ^ set(base) <= ({1} if cancel else set()), (
+        f"{ctx}: completed-request sets diverged beyond the cancel target")
+    for r in set(got) & set(base):
+        assert got[r] == base[r], f"{ctx}: rid {r} diverged"
 
 
 # ---------------------------------------------- VMEM fallback regression --

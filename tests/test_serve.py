@@ -276,9 +276,25 @@ def test_engine_rejects_oversized_and_bad_pool():
     params = tfm.lm_init(jax.random.PRNGKey(0), cfg)
     eng = ServingEngine(params, cfg, EngineConfig(
         n_slots=2, pages_per_slot=2, n_pages=4))
-    with pytest.raises(ValueError, match="pages"):
-        eng.submit(Request(rid=0, prompt=np.zeros(16, np.int32),
-                           max_new_tokens=8))
+    # a never-fitting prompt is structured backpressure, not an exception:
+    # submit sheds it with a typed FinishedRequest(reason="rejected")
+    assert eng.submit(Request(rid=0, prompt=np.zeros(16, np.int32),
+                              max_new_tokens=8)) is False
+    shed = eng.finished[-1]
+    assert shed.rid == 0 and shed.reason == "rejected"
+    assert not shed.cancelled and len(shed.tokens) == 0
+    assert eng.stats()["rejected"] == 1
+    assert "pages" in eng.reject_reasons[0]
+    # the rid is NOT burned: a right-sized resubmission is accepted
+    assert eng.submit(Request(rid=0, prompt=np.zeros(8, np.int32),
+                              max_new_tokens=4)) is True
+    # malformed submissions are caller bugs and still raise
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.submit(Request(rid=1, prompt=np.zeros(0, np.int32),
+                           max_new_tokens=4))
+    with pytest.raises(ValueError, match="in flight"):
+        eng.submit(Request(rid=0, prompt=np.zeros(8, np.int32),
+                           max_new_tokens=4))
     with pytest.raises(ValueError, match="deadlock"):
         ServingEngine(params, cfg, EngineConfig(
             n_slots=2, pages_per_slot=8, n_pages=4))
