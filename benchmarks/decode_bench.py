@@ -15,6 +15,14 @@ Three measurements, emitted as CSV rows (`benchmarks.common.emit`) and as
     interpret mode, so its absolute time is NOT meaningful there — the
     row exists so the TPU lane has a like-for-like comparison and the CPU
     CI lane exercises the kernel's compile + numerics end to end.
+  * ``finalize_step_{xla,kernel}`` — one jitted `mita_paged_finalize`
+    with ``finalize_impl`` "xla" vs "kernel" (same interpret-mode caveat),
+    bit-equality asserted on every finalized field, so the finalize-kernel
+    win lands in its own wall-time row instead of being buried in tok/s.
+
+Every kernel row runs inside `ops.scoped_fallback_counters()` and the
+main() hard-gates zero kernel→XLA VMEM fallbacks on those rows (after the
+JSON dump, so a red run still leaves BENCH_decode.json behind).
 
 Run:  PYTHONPATH=src python -m benchmarks.run decode
       PYTHONPATH=src python -m benchmarks.decode_bench --smoke
@@ -98,6 +106,8 @@ def _engine_compare(vocab: int, n_req: int, n_slots: int,
             "bytes_down_per_step": down,
             "bytes_up_per_step": n_slots * 4,
             "prefill_kernel_fallbacks": int(st["prefill_kernel_fallbacks"]),
+            "paged_kernel_fallbacks": int(st["paged_kernel_fallbacks"]),
+            "finalize_kernel_fallbacks": int(st["finalize_kernel_fallbacks"]),
             "prefix_cache_hits": int(st["prefix_cache_hits"]),
             "pages_shared": int(st["pages_shared"]),
             "spec_drafted": int(st["spec_drafted"]),
@@ -148,20 +158,73 @@ def _kernel_step_compare(n_steps: int) -> dict:
     t = jnp.full((b,), w + 1, jnp.int32)
     ac = jnp.ones((b,), bool)
     res = {"interpret": not ops.on_tpu()}
-    for name, cfg in (("xla", cfg_x), ("kernel", cfg_k)):
-        st = mdec.init_paged_state(hkv, d, b * m, b, m, cfg, jnp.float32)
-        step = jax.jit(lambda s, *a: mdec.mita_paged_decode_step(s, *a, cfg))
-        o, st = step(st, qi, ki, vi, pt, t, ac)       # compile
-        jax.block_until_ready(o)
-        t0 = time.perf_counter()
-        for _ in range(n_steps):
-            o, st = step(st, qi, ki, vi, pt, t, ac)
-        jax.block_until_ready(o)
-        us = (time.perf_counter() - t0) / n_steps * 1e6
-        res[f"{name}_us"] = us
-        note = " (interpret — not meaningful off-TPU)" \
-            if name == "kernel" and res["interpret"] else ""
-        emit(f"decode_step_{name}", us, f"S={b} Hkv={hkv} G={g} d={d}{note}")
+    with ops.scoped_fallback_counters() as fb:
+        for name, cfg in (("xla", cfg_x), ("kernel", cfg_k)):
+            st = mdec.init_paged_state(hkv, d, b * m, b, m, cfg, jnp.float32)
+            step = jax.jit(lambda s, *a: mdec.mita_paged_decode_step(
+                s, *a, cfg))
+            o, st = step(st, qi, ki, vi, pt, t, ac)       # compile
+            jax.block_until_ready(o)
+            t0 = time.perf_counter()
+            for _ in range(n_steps):
+                o, st = step(st, qi, ki, vi, pt, t, ac)
+            jax.block_until_ready(o)
+            us = (time.perf_counter() - t0) / n_steps * 1e6
+            res[f"{name}_us"] = us
+            note = " (interpret — not meaningful off-TPU)" \
+                if name == "kernel" and res["interpret"] else ""
+            emit(f"decode_step_{name}", us,
+                 f"S={b} Hkv={hkv} G={g} d={d}{note}")
+    res["kernel_fallbacks"] = fb["paged"] + fb["prefill"]
+    return res
+
+
+def _finalize_compare(n_steps: int) -> dict:
+    """One external-finalize dispatch, XLA gathers vs the fused Pallas
+    finalize kernel (`finalize_impl`), over randomized pools, landmarks,
+    and window-query accumulators.  Bit-equality on every finalized field
+    is a hard failure — the timing row may never quietly trade exactness
+    for speed."""
+    w, k = 8, 8
+    b, hkv, d, m = 4, 2, 32, 4
+    cfg_x = mdec.DecodeConfig(window=w, k=k, s=1, external_finalize=True,
+                              finalize_impl="xla")
+    cfg_k = dataclasses.replace(cfg_x, finalize_impl="kernel")
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    n_pages = b * m
+    pt = jnp.asarray(np.arange(n_pages).reshape(b, m), jnp.int32)
+    t = jnp.full((b,), 2 * w, jnp.int32)
+    due = jnp.ones((b,), bool)
+    res = {"interpret": not ops.on_tpu()}
+    states = {}
+    with ops.scoped_fallback_counters() as fb:
+        for name, cfg in (("xla", cfg_x), ("kernel", cfg_k)):
+            st = mdec.init_paged_state(hkv, d, n_pages, b, m, cfg,
+                                       jnp.float32)
+            st = st._replace(
+                k_pool=jax.random.normal(ks[0], st.k_pool.shape),
+                v_pool=jax.random.normal(ks[1], st.v_pool.shape),
+                q_sum=jax.random.normal(ks[2], st.q_sum.shape),
+                lm_q=jax.random.normal(ks[3], st.lm_q.shape))
+            fin = jax.jit(mdec.mita_paged_finalize, static_argnames="cfg")
+            out = fin(st, pt, t, due, cfg=cfg)
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            for _ in range(n_steps):
+                out = fin(st, pt, t, due, cfg=cfg)
+            jax.block_until_ready(out)
+            us = (time.perf_counter() - t0) / n_steps * 1e6
+            res[f"{name}_us"] = us
+            states[name] = out
+            note = " (interpret — not meaningful off-TPU)" \
+                if name == "kernel" and res["interpret"] else ""
+            emit(f"finalize_step_{name}", us,
+                 f"S={b} Hkv={hkv} M={m} d={d}{note}")
+    res["kernel_fallbacks"] = fb["finalize"]
+    for f in ("lm_q", "lm_v", "expert_idx", "expert_valid", "q_sum"):
+        if not np.array_equal(np.asarray(getattr(states["kernel"], f)),
+                              np.asarray(getattr(states["xla"], f))):
+            raise SystemExit(f"finalize kernel/xla bit mismatch on {f}")
     return res
 
 
@@ -181,11 +244,22 @@ def main(argv=None) -> dict:
     result = {
         "engine": _engine_compare(vocab, n_req, n_slots, repeats=reps),
         "kernel_step": _kernel_step_compare(n_steps),
+        "finalize_step": _finalize_compare(n_steps),
         "backend": jax.default_backend(),
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"wrote {args.out}")
+    # hard gates AFTER the dump: a red run still leaves the JSON behind
+    for row in ("kernel_step", "finalize_step"):
+        if result[row]["kernel_fallbacks"]:
+            raise SystemExit(
+                f"{row}: {result[row]['kernel_fallbacks']} kernel->XLA VMEM "
+                "fallback(s) on a kernel bench row (expected 0)")
+    for side in ("host", "fused"):
+        if result["engine"][side]["prefill_kernel_fallbacks"]:
+            raise SystemExit(
+                f"engine[{side}]: prefill_kernel_fallbacks != 0")
     return result
 
 

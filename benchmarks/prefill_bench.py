@@ -20,6 +20,16 @@ Three measurements, emitted as CSV rows (`benchmarks.common.emit`) and as
     runs in interpret mode, so its absolute time is NOT meaningful there —
     the row exists so the TPU lane has a like-for-like comparison and the
     CPU CI lane exercises the kernel's compile + numerics end to end.
+  * ``recurrent_prefill_{seq,chunk}_{mamba2,rglru}`` — one jitted recurrent
+    prefill chunk per family, token-sequential reference scan
+    (`*_prefill_chunk_seq`) vs the chunk-parallel path.  Bit-equality on
+    logits and every state leaf is a hard failure; main() additionally
+    gates mamba2 chunk-parallel speedup >= 1.5x (rglru is advisory — its
+    per-token attention cache append bounds the win).
+
+The kernel row runs inside `ops.scoped_fallback_counters()` and main()
+hard-gates zero kernel→XLA VMEM fallbacks on it and on the engine rows
+(after the JSON dump, so a red run still leaves BENCH_prefill.json).
 
 Run:  PYTHONPATH=src python -m benchmarks.run prefill
       PYTHONPATH=src python -m benchmarks.prefill_bench --smoke
@@ -40,6 +50,7 @@ from benchmarks.common import emit, tiny_lm_cfg
 from benchmarks.serve_bench import _interference_trace, _ttft
 from repro.core import mita_decode as mdec
 from repro.core.mita_decode import window_aligned
+from repro.kernels import ops
 from repro.launch.serve import static_generate
 from repro.models import transformer as tfm
 from repro.serve import EngineConfig, Request, ServingEngine
@@ -94,6 +105,8 @@ def _engine_compare(n_short: int, n_long: int, n_slots: int,
                                      / max(st["chunks"], 1)),
             "preemptions": int(st["preemptions"]),
             "prefill_kernel_fallbacks": int(st["prefill_kernel_fallbacks"]),
+            "paged_kernel_fallbacks": int(st["paged_kernel_fallbacks"]),
+            "finalize_kernel_fallbacks": int(st["finalize_kernel_fallbacks"]),
             "prefix_cache_hits": int(st["prefix_cache_hits"]),
             "pages_shared": int(st["pages_shared"]),
             "spec_drafted": int(st["spec_drafted"]),
@@ -150,24 +163,94 @@ def _chunk_step_compare(n_steps: int) -> dict:
     nv = jnp.full((s_n,), nc, jnp.int32)
     ntr = jnp.full((s_n,), nc, jnp.int32)
     act = jnp.ones((s_n,), bool)
-    from repro.kernels import ops
     res = {"interpret": not ops.on_tpu()}
-    for name, cfg in (("xla", cfg_x), ("kernel", cfg_k)):
-        st = mdec.init_paged_state(hkv, d, s_n * m, s_n, m, cfg, jnp.float32)
-        step = jax.jit(mdec.mita_batched_chunk_prefill,
-                       static_argnames="cfg")
-        o, st2 = step(st, q, kc, vc, pt, slots, t0, nv, ntr, act, cfg=cfg)
-        jax.block_until_ready(o)
-        t_start = time.perf_counter()
-        for _ in range(n_steps):
-            o, _ = step(st, q, kc, vc, pt, slots, t0, nv, ntr, act, cfg=cfg)
-        jax.block_until_ready(o)
-        us = (time.perf_counter() - t_start) / n_steps * 1e6
-        res[f"{name}_us"] = us
-        note = " (interpret — not meaningful off-TPU)" \
-            if name == "kernel" and res["interpret"] else ""
-        emit(f"prefill_step_{name}", us,
-             f"S={s_n} Hkv={hkv} G={g} nc={nc} d={d}{note}")
+    with ops.scoped_fallback_counters() as fb:
+        for name, cfg in (("xla", cfg_x), ("kernel", cfg_k)):
+            st = mdec.init_paged_state(hkv, d, s_n * m, s_n, m, cfg,
+                                       jnp.float32)
+            step = jax.jit(mdec.mita_batched_chunk_prefill,
+                           static_argnames="cfg")
+            o, st2 = step(st, q, kc, vc, pt, slots, t0, nv, ntr, act,
+                          cfg=cfg)
+            jax.block_until_ready(o)
+            t_start = time.perf_counter()
+            for _ in range(n_steps):
+                o, _ = step(st, q, kc, vc, pt, slots, t0, nv, ntr, act,
+                            cfg=cfg)
+            jax.block_until_ready(o)
+            us = (time.perf_counter() - t_start) / n_steps * 1e6
+            res[f"{name}_us"] = us
+            note = " (interpret — not meaningful off-TPU)" \
+                if name == "kernel" and res["interpret"] else ""
+            emit(f"prefill_step_{name}", us,
+                 f"S={s_n} Hkv={hkv} G={g} nc={nc} d={d}{note}")
+    res["kernel_fallbacks"] = fb["prefill"]
+    return res
+
+
+def _recurrent_chunk_compare(n_steps: int) -> dict:
+    """One recurrent prefill chunk per family: the retained token-sequential
+    scan (`*_prefill_chunk_seq`, the exact decode-step update) vs the
+    chunk-parallel path that hoists every position-local op out of the
+    scan.  Bit-equality on logits and EVERY state leaf is a hard failure —
+    the speedup row may never quietly trade the preemption-recompute
+    contract for wall time."""
+    from repro.models import mamba2 as m2
+    from repro.models import rglru as rg
+    from repro.models.modules import AttnConfig, ModelConfig
+
+    w, s_n, nc = 8, 4, 64
+    reps = max(n_steps, 2)
+    res: dict = {"n_slots": s_n, "chunk": nc}
+    for family in ("mamba2", "rglru"):
+        if family == "mamba2":
+            cfg = ModelConfig(n_layers=2, d_model=32, n_heads=1, n_kv=1,
+                              d_ff=0, vocab=97,
+                              attn=AttnConfig(window=w, backend="full"))
+            params = m2.mamba_init(jax.random.PRNGKey(0), cfg)
+            states = m2.mamba_slot_states(cfg, s_n)
+            fns = (("seq", m2.mamba_prefill_chunk_seq),
+                   ("chunk", m2.mamba_prefill_chunk))
+        else:
+            cfg = ModelConfig(n_layers=3, d_model=64, n_heads=4, n_kv=2,
+                              d_ff=128, vocab=97,
+                              attn=AttnConfig(window=w, k=w,
+                                              backend="mita_ref"))
+            params = rg.rg_init(jax.random.PRNGKey(0), cfg)
+            states = rg.rg_slot_states(cfg, s_n, 2 * nc)
+            fns = (("seq", rg.rg_prefill_chunk_seq),
+                   ("chunk", rg.rg_prefill_chunk))
+        rng = np.random.default_rng(1)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (s_n, nc)), jnp.int32)
+        t0 = jnp.zeros((s_n,), jnp.int32)
+        nv = jnp.full((s_n,), nc, jnp.int32)
+        outs, row = {}, {}
+        for name, fn in fns:
+            step = jax.jit(fn, static_argnames="cfg")
+            lg, st = step(params, states, toks, t0, nv, cfg=cfg)   # compile
+            jax.block_until_ready(lg)
+            best = np.inf
+            for _ in range(3):
+                t_start = time.perf_counter()
+                for _ in range(reps):
+                    lg, st = step(params, states, toks, t0, nv, cfg=cfg)
+                jax.block_until_ready(lg)
+                best = min(best, time.perf_counter() - t_start)
+            us = best / reps * 1e6
+            row[f"{name}_us"] = us
+            outs[name] = (lg, st)
+            emit(f"recurrent_prefill_{name}_{family}", us,
+                 f"S={s_n} nc={nc} d={cfg.d_model} L={cfg.n_layers}")
+        if not np.array_equal(np.asarray(outs["seq"][0]),
+                              np.asarray(outs["chunk"][0])):
+            raise SystemExit(f"recurrent prefill logits mismatch ({family})")
+        for a, b in zip(jax.tree.leaves(outs["seq"][1]),
+                        jax.tree.leaves(outs["chunk"][1])):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                raise SystemExit(
+                    f"recurrent prefill state mismatch ({family})")
+        row["speedup"] = row["seq_us"] / row["chunk_us"]
+        res[family] = row
     return res
 
 
@@ -187,16 +270,30 @@ def main(argv=None) -> dict:
     result = {
         "engine": _engine_compare(n_short, n_long, n_slots, repeats=reps),
         "chunk_step": _chunk_step_compare(n_steps),
+        "recurrent_chunk": _recurrent_chunk_compare(n_steps),
         "backend": jax.default_backend(),
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"wrote {args.out}")
-    # hard gate AFTER the dump: a red run still leaves the JSON behind,
+    # hard gates AFTER the dump: a red run still leaves the JSON behind,
     # and that is exactly the run worth inspecting (ci.yml uploads it)
     if not result["engine"]["greedy_match"]:
         raise SystemExit("greedy parity violated between chunked engines "
                          "and the static baseline")
+    if result["chunk_step"]["kernel_fallbacks"]:
+        raise SystemExit(
+            f"chunk_step: {result['chunk_step']['kernel_fallbacks']} "
+            "kernel->XLA VMEM fallback(s) on a kernel bench row (expected 0)")
+    for side in ("per_job", "batched"):
+        if result["engine"][side]["prefill_kernel_fallbacks"]:
+            raise SystemExit(
+                f"engine[{side}]: prefill_kernel_fallbacks != 0")
+    m2_speedup = result["recurrent_chunk"]["mamba2"]["speedup"]
+    if m2_speedup < 1.5:
+        raise SystemExit(
+            f"recurrent chunk-parallel prefill speedup {m2_speedup:.2f}x "
+            "on mamba2 below the 1.5x gate")
     return result
 
 

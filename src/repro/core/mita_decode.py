@@ -78,6 +78,9 @@ class DecodeConfig:
     # Batched chunk-prefill backend, same tri-state (dispatched by
     # `kernels.ops.use_prefill_kernel`; REPRO_PREFILL_IMPL overrides).
     prefill_impl: str = "auto"
+    # Paged landmark-finalize backend, same tri-state (dispatched by
+    # `kernels.ops.use_finalize_kernel`; REPRO_FINALIZE_IMPL overrides).
+    finalize_impl: str = "auto"
     # VMEM working-set budget for kernel dispatch; 0 = use the env/default
     # budget (`kernels.ops.vmem_budget_bytes`).
     vmem_budget: int = 0
@@ -394,13 +397,30 @@ def _paged_finalize(state: PagedMiTAState, page_table: jax.Array,
     Computed for all slots, committed where ``due`` — identical per-slot
     semantics to `_finalize_window` on a monolithic cache whose rows are the
     slot's pages in table order.
+
+    Backend dispatch (``cfg.finalize_impl``,
+    `kernels.ops.use_finalize_kernel`): the fused per-(slot, KV-head)
+    Pallas kernel (`kernels.mita_paged_finalize`) when it fits the VMEM
+    budget; the XLA gather path below is the fallback and the bit-exact
+    oracle.
     """
+    from repro.kernels import ops
     from repro.kernels.ops import gather_pages
 
     w = cfg.window
     n_slots, _, m_max, _ = state.expert_idx.shape
     d = state.k_pool.shape[-1]
     ctx = m_max * w
+
+    if ops.use_finalize_kernel(
+            cfg.finalize_impl, window=w, m=m_max, k_width=cfg.k, d=d,
+            itemsize=state.k_pool.dtype.itemsize, budget=cfg.vmem_budget):
+        lm_q, lm_v, ei, ev, q_sum = ops.paged_finalize(
+            state.q_sum, state.lm_q, state.lm_v, state.expert_idx,
+            state.expert_valid, state.k_pool, state.v_pool, page_table,
+            t_new, due, window=w, k_width=cfg.k)
+        return state._replace(lm_q=lm_q, lm_v=lm_v, expert_idx=ei,
+                              expert_valid=ev.astype(bool), q_sum=q_sum)
 
     # gather only pages covering positions < t_new; unowned table entries
     # redirect to the scratch row (they are masked below either way)
@@ -925,12 +945,17 @@ def mita_batched_chunk_prefill(state: PagedMiTAState, q: jax.Array,
     if ops.use_prefill_kernel(
             cfg.prefill_impl, nc=nc, window=w, m=m_slot, k_width=cfg.k,
             g=g, d=d, itemsize=pdt.itemsize, budget=cfg.vmem_budget):
+        # the budget also sizes the local-branch tile (static: a budget
+        # change retraces, mirroring the dispatch decision itself)
+        q_block = ops.select_prefill_q_block(
+            nc, w, m_slot, cfg.k, g, d, itemsize=pdt.itemsize,
+            budget=cfg.vmem_budget) or 0
         (out, lm_q_n, lm_v_n, ei_n, ev_n, qs_n, plm_n, pqs_n, kp, vp) = \
             ops.batched_chunk_prefill(
                 q, k, v, lm_q_r, lm_v_r, ei_r, ev_r, qs_r, plm_r, pqs_r,
                 state.k_pool, state.v_pool, page_table, t0, n_valid,
                 n_train, active, window=w, k_width=cfg.k, n_route=s_,
-                external_finalize=cfg.external_finalize)
+                external_finalize=cfg.external_finalize, q_block=q_block)
         ev_n = ev_n.astype(bool)
     else:
         (out, lm_q_n, lm_v_n, ei_n, ev_n, qs_n, plm_n, pqs_n, kp, vp) = \

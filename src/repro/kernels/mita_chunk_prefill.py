@@ -33,10 +33,15 @@ recompute, and inactive slots.
 Per-program VMEM working set (budget-checked by
 `kernels.ops.chunk_prefill_vmem_bytes`): the gathered context ``2·ctx·d``,
 chunk q/k/v/out ``(2G+2)·nc·d``, landmark tiles ``8·M·d``, expert tiles
-``2·M·K·d``, and the f32 score rows ``(2M + G·nc)·ctx`` — the local-branch
-scores are materialized over the full context, so production shapes with
-``G·nc·ctx`` beyond the budget dispatch to XLA (tiling that score matrix is
-the follow-on).
+``2·M·K·d``, and the f32 score rows.  The local-branch score matrix is
+TILED over query window-groups (static ``q_block`` from
+`kernels.ops.select_prefill_q_block`): each tile of ``q_block`` windows
+scores only a ``(q_block + 2)``-window key slab, so the local term is
+``G·(q_block·w)·kb`` instead of ``G·nc·ctx`` and production chunk shapes
+fit the budget instead of tripping `prefill_kernel_fallbacks`.  Because
+``w_a <= 2w - 1``, every position's whole local window lies inside its
+tile's slab — complete per-position partials, no online-softmax rescale,
+bit-identical at every tile size.
 """
 
 from __future__ import annotations
@@ -120,7 +125,7 @@ def _chunk_kernel(pt_ref, t0_ref, nv_ref, ntr_ref, act_ref,      # SMEM
                   kp_o, vp_o,
                   kctx, vctx, sem,
                   *, window: int, k_width: int, n_route: int,
-                  external: bool):
+                  external: bool, q_block: int):
     s = pl.program_id(0)
     h = pl.program_id(1)
     w = window
@@ -336,16 +341,54 @@ def _chunk_kernel(pt_ref, t0_ref, nv_ref, ntr_ref, act_ref,      # SMEM
     sh_b, ro_b = branch(lm_q_s, lm_v_s.astype(jnp.float32), k_e_b, v_e_b,
                         val_b, avail_b)
 
-    # local branch: masked scores over the context (ctx index == position)
-    s_loc = _dot(q2, k_ctx) / math.sqrt(d)              # [g*nc, ctx]
-    crow = jax.lax.broadcasted_iota(jnp.int32, (g * nc, ctx), 1)
-    win_row = jnp.where(rows_tr, (rows_pos // w_a) * w_a,
-                        (rows_pos // w) * w)
-    lmask = (crow >= win_row) & (crow <= rows_pos)
-    s_loc = jnp.where(lmask, s_loc, NEG_INF)
-    m_lo, l_lo, p_lo = _partial(s_loc, s_loc == NEG_INF)
-    o_lo = jax.lax.dot_general(p_lo, v_ctx, (((1,), (0,)), ((), ())),
-                               preferred_element_type=jnp.float32)
+    # local branch (ctx index == position).  Untiled (q_block == 0): one
+    # [g*nc, ctx] masked score matrix.  Tiled (q_block > 0, requires
+    # nc % w == 0): queries go in window-groups of q_block windows, each
+    # scoring a (q_block + 2)-window key slab that starts two windows
+    # before the tile — w_a <= 2w - 1, so every position's WHOLE local
+    # window sits inside its tile's slab and no cross-tile merge (and no
+    # rescaling) is needed: each lane is either identical to the untiled
+    # matrix or masked to an exact zero in both, keeping the tiled path
+    # bit-identical to the full-context one.
+    if q_block == 0:
+        s_loc = _dot(q2, k_ctx) / math.sqrt(d)          # [g*nc, ctx]
+        crow = jax.lax.broadcasted_iota(jnp.int32, (g * nc, ctx), 1)
+        win_row = jnp.where(rows_tr, (rows_pos // w_a) * w_a,
+                            (rows_pos // w) * w)
+        lmask = (crow >= win_row) & (crow <= rows_pos)
+        s_loc = jnp.where(lmask, s_loc, NEG_INF)
+        m_lo, l_lo, p_lo = _partial(s_loc, s_loc == NEG_INF)
+        o_lo = jax.lax.dot_general(p_lo, v_ctx, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+    else:
+        tw = q_block * w                                # tile width (tokens)
+        kb = min((q_block + 2) * w, ctx)                # key-slab width
+        n_tiles = nc // tw
+        m_parts, l_parts, o_parts = [], [], []
+        for ti in range(n_tiles):
+            p0 = ti * tw
+            qt = q[:, p0:p0 + tw, :].reshape(g * tw, d)
+            tpos = (t0 + p0 + jax.lax.broadcasted_iota(
+                jnp.int32, (g, tw), 1)).reshape(g * tw, 1)
+            ttr = tpos < ntr
+            twin = jnp.where(ttr, (tpos // w_a) * w_a, (tpos // w) * w)
+            # t0 and p0 are both window-aligned, so the slab start is too
+            base = pl.multiple_of(jnp.clip(t0 + p0 - 2 * w, 0, ctx - kb), w)
+            kt = kctx[pl.ds(base, kb)].astype(jnp.float32)
+            vt = vctx[pl.ds(base, kb)].astype(jnp.float32)
+            st = _dot(qt, kt) / math.sqrt(d)            # [g*tw, kb]
+            cpos = base + jax.lax.broadcasted_iota(
+                jnp.int32, (g * tw, kb), 1)
+            st = jnp.where((cpos >= twin) & (cpos <= tpos), st, NEG_INF)
+            m_t, l_t, p_t = _partial(st, st == NEG_INF)
+            o_t = jax.lax.dot_general(p_t, vt, (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+            m_parts.append(m_t.reshape(g, tw))
+            l_parts.append(l_t.reshape(g, tw))
+            o_parts.append(o_t.reshape(g, tw, d))
+        m_lo = jnp.concatenate(m_parts, axis=1).reshape(g * nc)
+        l_lo = jnp.concatenate(l_parts, axis=1).reshape(g * nc)
+        o_lo = jnp.concatenate(o_parts, axis=1).reshape(g * nc, d)
 
     # per-position A/B selection, then the oracle's exact `combine`
     sel = rows_tr[:, 0]
@@ -381,12 +424,13 @@ def _chunk_kernel(pt_ref, t0_ref, nv_ref, ntr_ref, act_ref,      # SMEM
 @functools.partial(
     jax.jit,
     static_argnames=("window", "k_width", "n_route", "external_finalize",
-                     "interpret"))
+                     "q_block", "interpret"))
 def mita_chunk_prefill_fused(q, k, v, lm_q, lm_v, expert_idx, expert_valid,
                              q_sum, pre_lm_q, pre_q_sum, k_pool, v_pool,
                              page_table, t0, n_valid, n_train, active,
                              window: int, k_width: int, n_route: int = 1,
                              external_finalize: bool = True,
+                             q_block: int = 0,
                              interpret: bool = False):
     """Fused batched chunk prefill (+ in-place KV append).
 
@@ -395,6 +439,11 @@ def mita_chunk_prefill_fused(q, k, v, lm_q, lm_v, expert_idx, expert_valid,
     expert_valid: [S, Hkv, M, K] bool; q_sum/pre_q_sum: [S, Hkv, d] f32;
     k_pool/v_pool: [R + 1, Hkv, d] (row R is the scratch row); page_table:
     [S, M] i32; t0/n_valid/n_train: [S] i32; active: [S] bool.
+
+    ``q_block`` tiles the local branch (windows per query tile, from
+    `kernels.ops.select_prefill_q_block`; 0 = untiled full-context scores;
+    > 0 requires ``nc % window == 0`` and ``q_block | (nc // window)``) —
+    every tile size is bit-identical to the untiled path.
 
     Returns (out, lm_q, lm_v, expert_idx, expert_valid [i32], q_sum,
     pre_lm_q, pre_q_sum, k_pool, v_pool) — the pools aliased in/out, every
@@ -405,6 +454,9 @@ def mita_chunk_prefill_fused(q, k, v, lm_q, lm_v, expert_idx, expert_valid,
     n_slots, hkv, g, nc, d = q.shape
     m_slot, kw = expert_idx.shape[-2:]
     assert kw == k_width
+    if q_block:
+        assert nc % window == 0 and (nc // window) % q_block == 0, \
+            (nc, window, q_block)
     pdt = k_pool.dtype
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -443,7 +495,8 @@ def mita_chunk_prefill_fused(q, k, v, lm_q, lm_v, expert_idx, expert_valid,
         ],
     )
     kern = functools.partial(_chunk_kernel, window=window, k_width=k_width,
-                             n_route=n_route, external=external_finalize)
+                             n_route=n_route, external=external_finalize,
+                             q_block=q_block)
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,

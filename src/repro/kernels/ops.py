@@ -22,6 +22,7 @@ Tunables (satellite of the module constants they replace):
 
 from __future__ import annotations
 
+import contextlib
 import math
 import os
 import warnings
@@ -34,6 +35,7 @@ from repro.kernels import flash_attn as _fa
 from repro.kernels import mita_chunk_prefill as _mcp
 from repro.kernels import mita_expert_attn as _mea
 from repro.kernels import mita_paged_attn as _mpa
+from repro.kernels import mita_paged_finalize as _mpf
 
 DEFAULT_VMEM_BUDGET_BYTES = 8 * 2**20   # expert-bank / paged working set
 DEFAULT_BLOCK_Q = 128
@@ -230,21 +232,64 @@ def dma_pipeline() -> bool:
 # ------------------------------------------------ fused chunk-prefill attn --
 
 def chunk_prefill_vmem_bytes(nc: int, window: int, m: int, k_width: int,
-                             g: int, d: int, itemsize: int = 4) -> int:
+                             g: int, d: int, itemsize: int = 4,
+                             q_block: int = 0) -> int:
     """Per-program VMEM working set of the fused chunk-prefill kernel: the
     gathered slot context, the chunk q/k/v + out blocks, both landmark
     systems, the expert K/V tiles, and the f32 score rows
-    (`kernels.mita_chunk_prefill` docstring)."""
+    (`kernels.mita_chunk_prefill` docstring).
+
+    ``q_block`` > 0 sizes the tiled local branch: queries are processed in
+    window-groups of ``q_block`` windows, each scoring only a
+    ``(q_block + 2)``-window key slab instead of the full context, so the
+    local score matrix is ``g·(q_block·w)·kb`` instead of ``g·nc·ctx``.
+    ``q_block`` = 0 sizes the untiled full-context local branch.
+    """
     ctx = m * window
+    if q_block > 0:
+        tw = q_block * window
+        kb = min((q_block + 2) * window, ctx)
+        local = g * tw * kb          # one local score tile at a time
+    else:
+        local = g * nc * ctx         # full-context local score matrix
     tiles = (2 * ctx * d            # gathered context (k, v)
              + (2 * g + 2) * nc * d  # chunk q/k/v + out
              + 8 * m * d            # lm_q/lm_v/pre_lm_q in+out tiles
              + 2 * m * k_width * d  # expert K/V tiles
              + 4 * d)               # q_sum / pre_q_sum in+out
-    scores = (2 * m + g * nc) * ctx  # landmark (A+B) + local score rows
+    scores = 2 * m * ctx + local     # landmark (A+B) rows + local branch
     onehot = 2 * m * k_width * ctx   # [M*K, ctx] one-hot gather + iota
     tables = m * k_width * (4 + 4)   # expert_idx + validity
     return tiles * itemsize + (scores + onehot) * 4 + tables
+
+
+def select_prefill_q_block(nc: int, window: int, m: int, k_width: int,
+                           g: int, d: int, itemsize: int = 4,
+                           budget: int = 0) -> Optional[int]:
+    """Pick the local-branch tile size for the chunk-prefill kernel.
+
+    Returns the largest ``q_block`` (in windows, a divisor of
+    ``nc // window``) whose working set fits the VMEM budget, 0 for the
+    untiled full-context path (only reachable when the chunk is not
+    window-aligned), or None when no tiling fits (caller falls back to
+    XLA).  Larger tiles amortize the key-slab reload; q_block = 1 is the
+    floor the budget can force.
+    """
+    have = budget or vmem_budget_bytes()
+    if nc % window == 0 and nc >= window:
+        nw = nc // window
+        for qb in range(nw, 0, -1):
+            if nw % qb:
+                continue
+            if chunk_prefill_vmem_bytes(nc, window, m, k_width, g, d,
+                                        itemsize, q_block=qb) <= have:
+                return qb
+        return None
+    # non-window-aligned chunk: only the untiled local branch is defined
+    if chunk_prefill_vmem_bytes(nc, window, m, k_width, g, d,
+                                itemsize) <= have:
+        return 0
+    return None
 
 
 # A dispatch decision that WANTED the fused chunk-prefill kernel but fell
@@ -283,19 +328,25 @@ def use_prefill_kernel(impl: str, *, nc: int, window: int, m: int,
         return False
     if impl not in ("auto", "kernel"):
         raise ValueError(f"unknown prefill impl {impl!r}")
-    need = chunk_prefill_vmem_bytes(nc, window, m, k_width, g, d, itemsize)
-    have = budget or vmem_budget_bytes()
-    fits = need <= have
+    q_block = select_prefill_q_block(nc, window, m, k_width, g, d,
+                                     itemsize, budget)
+    fits = q_block is not None
     if not fits and (impl == "kernel" or on_tpu()):
         _PREFILL_KERNEL_FALLBACKS += 1
         if not _PREFILL_FALLBACK_WARNED:
             _PREFILL_FALLBACK_WARNED = True
+            need = chunk_prefill_vmem_bytes(
+                nc, window, m, k_width, g, d, itemsize,
+                q_block=1 if (nc % window == 0 and nc >= window) else 0)
+            have = budget or vmem_budget_bytes()
             warnings.warn(
-                f"chunk-prefill kernel working set {need} B exceeds the "
-                f"VMEM budget {have} B (nc={nc}, m={m}, window={window}); "
-                "dispatching to the XLA path — raise "
-                "REPRO_VMEM_BUDGET_BYTES / DecodeConfig.vmem_budget or "
-                "shrink the chunk to keep the fused kernel "
+                f"chunk-prefill kernel working set {need} B at the "
+                f"smallest local tile exceeds the VMEM budget {have} B "
+                f"(nc={nc}, window={window}, m={m}, k_width={k_width}, "
+                f"g={g}, d={d}, itemsize={itemsize}); dispatching to the "
+                "XLA path — raise REPRO_VMEM_BUDGET_BYTES / "
+                "DecodeConfig.vmem_budget or shrink the chunk to keep "
+                "the fused kernel "
                 "(further fallbacks are counted, not warned)",
                 RuntimeWarning, stacklevel=2)
     if impl == "kernel":
@@ -307,15 +358,17 @@ def batched_chunk_prefill(q, k, v, lm_q, lm_v, expert_idx, expert_valid,
                           q_sum, pre_lm_q, pre_q_sum, k_pool, v_pool,
                           page_table, t0, n_valid, n_train, active, *,
                           window: int, k_width: int, n_route: int,
-                          external_finalize: bool,
+                          external_finalize: bool, q_block: int = 0,
                           interpret: Optional[bool] = None):
     """Kernel-backed batched chunk prefill: append + landmark build +
     three-branch chunk attention for every active row in one kernel.
 
     Operates on COMPACT per-row slot state ([P, ...] — the caller gathers
     rows by slot id and scatters the returned updates back); the pools are
-    aliased in/out.  See `kernels.mita_chunk_prefill
-    .mita_chunk_prefill_fused` for the full contract.
+    aliased in/out.  ``q_block`` (windows per local-branch tile, from
+    `select_prefill_q_block`; 0 = untiled) is static — a budget change
+    retraces.  See `kernels.mita_chunk_prefill.mita_chunk_prefill_fused`
+    for the full contract.
     """
     if interpret is None:
         interpret = not on_tpu()
@@ -323,7 +376,139 @@ def batched_chunk_prefill(q, k, v, lm_q, lm_v, expert_idx, expert_valid,
         q, k, v, lm_q, lm_v, expert_idx, expert_valid, q_sum, pre_lm_q,
         pre_q_sum, k_pool, v_pool, page_table, t0, n_valid, n_train,
         active, window=window, k_width=k_width, n_route=n_route,
-        external_finalize=external_finalize, interpret=interpret)
+        external_finalize=external_finalize, q_block=q_block,
+        interpret=interpret)
+
+
+# ------------------------------------------------ fused paged finalize ----
+
+def paged_finalize_vmem_bytes(window: int, m: int, k_width: int, d: int,
+                              itemsize: int = 4) -> int:
+    """Per-program VMEM working set of the fused paged-finalize kernel:
+    the gathered slot context, the landmark in+out tiles, the q_sum
+    accumulator, and the f32 landmark score row
+    (`kernels.mita_paged_finalize` docstring)."""
+    ctx = m * window
+    tiles = (2 * ctx * d        # gathered context (k, v)
+             + 4 * m * d        # lm_q / lm_v in+out tiles
+             + 4 * d)           # q_sum in+out (f32)
+    scores = 2 * ctx            # landmark score + softmax rows (f32)
+    onehot = k_width * ctx      # top-k location -> global-row gather iota
+    tables = 2 * m * k_width * (4 + 4)   # expert idx/valid in+out
+    return tiles * itemsize + (scores + onehot) * 4 + tables
+
+
+# Finalize analogue of the two fallback counters above: a dispatch decision
+# that WANTED the fused finalize kernel but fell back to the XLA gathers
+# because the working set exceeded the VMEM budget.  Counted at trace time.
+# Surfaced as ``stats()["finalize_kernel_fallbacks"]`` by the MiTA backend.
+_FINALIZE_KERNEL_FALLBACKS = 0
+_FINALIZE_FALLBACK_WARNED = False
+
+
+def finalize_kernel_fallbacks() -> int:
+    """Process-wide count of paged-finalize kernel→XLA VMEM fallbacks."""
+    return _FINALIZE_KERNEL_FALLBACKS
+
+
+def use_finalize_kernel(impl: str, *, window: int, m: int, k_width: int,
+                        d: int, itemsize: int = 4, budget: int = 0) -> bool:
+    """Paged-finalize dispatch: fused Pallas kernel vs the XLA gather
+    oracle in `core.mita_decode._paged_finalize`.
+
+    Same tri-state as `use_paged_kernel` (``DecodeConfig.finalize_impl``),
+    with a process-wide override via ``REPRO_FINALIZE_IMPL``.  A "no" due
+    to the VMEM budget (rather than impl="xla" or running off-TPU in auto
+    mode) increments `finalize_kernel_fallbacks` and warns once.
+    """
+    global _FINALIZE_KERNEL_FALLBACKS, _FINALIZE_FALLBACK_WARNED
+    impl = os.environ.get("REPRO_FINALIZE_IMPL", impl)
+    if impl == "xla":
+        return False
+    if impl not in ("auto", "kernel"):
+        raise ValueError(f"unknown finalize impl {impl!r}")
+    need = paged_finalize_vmem_bytes(window, m, k_width, d, itemsize)
+    have = budget or vmem_budget_bytes()
+    fits = need <= have
+    if not fits and (impl == "kernel" or on_tpu()):
+        _FINALIZE_KERNEL_FALLBACKS += 1
+        if not _FINALIZE_FALLBACK_WARNED:
+            _FINALIZE_FALLBACK_WARNED = True
+            warnings.warn(
+                f"paged-finalize kernel working set {need} B exceeds the "
+                f"VMEM budget {have} B (window={window}, m={m}, "
+                f"k_width={k_width}, d={d}, itemsize={itemsize}); "
+                "dispatching to the XLA path — raise "
+                "REPRO_VMEM_BUDGET_BYTES / DecodeConfig.vmem_budget to "
+                "keep the fused kernel "
+                "(further fallbacks are counted, not warned)",
+                RuntimeWarning, stacklevel=2)
+    if impl == "kernel":
+        return fits
+    return on_tpu() and fits
+
+
+def paged_finalize(q_sum, lm_q, lm_v, expert_idx, expert_valid, k_pool,
+                   v_pool, page_table, t_new, due, *, window: int,
+                   k_width: int, interpret: Optional[bool] = None):
+    """Kernel-backed paged landmark finalize: pool the completed window's
+    queries into a landmark row and rebuild the top-k expert gather, per
+    (slot, KV-head) program, reading pages via DMA.
+
+    Returns (lm_q, lm_v, expert_idx, expert_valid i32, q_sum) — the
+    caller merges them into the paged state.  See
+    `kernels.mita_paged_finalize.mita_paged_finalize_fused`.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    return _mpf.mita_paged_finalize_fused(
+        q_sum, lm_q, lm_v, expert_idx, expert_valid, k_pool, v_pool,
+        page_table, t_new, due, window=window, k_width=k_width,
+        interpret=interpret)
+
+
+# ------------------------------------------------ fallback counter scope --
+
+def fallback_counters() -> dict:
+    """Snapshot of every kernel→XLA fallback counter (process-wide)."""
+    return {"prefill": _PREFILL_KERNEL_FALLBACKS,
+            "paged": _PAGED_KERNEL_FALLBACKS,
+            "finalize": _FINALIZE_KERNEL_FALLBACKS}
+
+
+def reset_fallback_counters() -> None:
+    """Zero all fallback counters (and re-arm the warn-once flags) so a
+    bench run or test reports only its own dispatch decisions."""
+    global _PREFILL_KERNEL_FALLBACKS, _PREFILL_FALLBACK_WARNED
+    global _PAGED_KERNEL_FALLBACKS, _PAGED_FALLBACK_WARNED
+    global _FINALIZE_KERNEL_FALLBACKS, _FINALIZE_FALLBACK_WARNED
+    _PREFILL_KERNEL_FALLBACKS = 0
+    _PREFILL_FALLBACK_WARNED = False
+    _PAGED_KERNEL_FALLBACKS = 0
+    _PAGED_FALLBACK_WARNED = False
+    _FINALIZE_KERNEL_FALLBACKS = 0
+    _FINALIZE_FALLBACK_WARNED = False
+
+
+@contextlib.contextmanager
+def scoped_fallback_counters():
+    """Scope the fallback counters to a block: yields a dict that is
+    filled with this block's deltas on exit.  Counters keep accumulating
+    globally (backends that hold base snapshots stay correct); only the
+    yielded view is scoped.
+
+        with ops.scoped_fallback_counters() as fb:
+            run_bench()
+        assert fb["prefill"] == 0
+    """
+    base = fallback_counters()
+    delta: dict = {}
+    try:
+        yield delta
+    finally:
+        now = fallback_counters()
+        for key, val in now.items():
+            delta[key] = val - base[key]
 
 
 def routed_expert_partial(q_sorted, assign, k_e, v_e, valid,

@@ -120,7 +120,18 @@ def _mamba_proj(p: Params, xn: jax.Array, cfg: nn.ModelConfig):
     heads = d_in // hdim
     s = 128
     ct = cfg.compute_dtype
-    zxbcdt = xn @ p["w_in"].astype(ct)
+    # Pad the projection width to a 32-multiple: a trailing remainder
+    # column rides a different XLA:CPU GEMM micro-kernel whose reduction
+    # order depends on the M dimension, which would break the pinned
+    # bit-identity between the chunk-parallel prefill ([S·nc, D] GEMM) and
+    # the per-token decode step ([S, D] GEMM).  Zero columns are sliced
+    # off; every real column's dot product is unchanged arithmetic.
+    w_in = p["w_in"].astype(ct)
+    pad = (-w_in.shape[-1]) % 32
+    if pad:
+        w_in = jnp.concatenate(
+            [w_in, jnp.zeros((w_in.shape[0], pad), w_in.dtype)], axis=-1)
+    zxbcdt = (xn @ w_in)[..., :2 * d_in + 2 * s + heads]
     z = zxbcdt[..., :d_in]
     xbc = zxbcdt[..., d_in: 2 * d_in + 2 * s]
     dt = zxbcdt[..., 2 * d_in + 2 * s:]
@@ -252,22 +263,107 @@ def mamba_slot_states(cfg: nn.ModelConfig, n_slots: int):
     return mamba_init_decode_states(cfg, n_slots, 0)
 
 
+def _mamba_block_prefill(p: Params, x: jax.Array, st: MambaState,
+                         valid: jax.Array, n_valid: jax.Array,
+                         cfg: nn.ModelConfig):
+    """One layer's chunk-parallel prefill step.
+
+    Every position-local op — norm, input projection, causal conv, gates,
+    skip/output path — runs ONCE over the whole [S, nc] chunk; only the
+    O(nc) SSD state recurrence and its per-token readout stay sequential.
+    The per-token arithmetic (ops, operand order, dtypes, einsum
+    expressions) is EXACTLY `mamba_block_decode`'s — valid tokens are a
+    prefix per row, so each token's conv history and recurrence inputs
+    equal what the sequential scan would feed it, and the rebuilt state
+    plus every valid position's output are bit-identical to scanning the
+    decode step token-by-token.
+
+    x: [S, nc, D]; valid: [S, nc] bool; n_valid: [S] i32.
+    """
+    ct = cfg.compute_dtype
+    bsz, nc, _ = x.shape
+    xn = nn.rms_norm(x, p["ln"], cfg.norm_eps)
+    z, xbc, dt, (d_in, hdim, heads, s) = _mamba_proj(p, xn, cfg)
+
+    # token j's conv history rows are exactly padded[:, j : j + _CONV_K]
+    padded = jnp.concatenate([st.conv, xbc.astype(jnp.float32)], axis=1)
+    xbc = jax.nn.silu(sum(padded[:, j: j + nc]
+                          * p["conv"][j].astype(jnp.float32)
+                          for j in range(_CONV_K))).astype(jnp.float32)
+    xs = xbc[..., :d_in].reshape(bsz, nc, heads, hdim)
+    b = xbc[..., d_in: d_in + s]
+    c = xbc[..., d_in + s:]
+    da = jnp.exp(dt * (-jnp.exp(p["a_log"].astype(jnp.float32)))[None, None, :])
+
+    def tstep(h_prev, inp):
+        dt_t, xs_t, b_t, c_t, da_t, vj = inp
+        h_new = h_prev * da_t[..., None, None] + jnp.einsum(
+            "bh,bhp,bs->bhps", dt_t, xs_t, b_t)
+        y_t = jnp.einsum("bhps,bs->bhp", h_new, c_t)
+        return jnp.where(vj[:, None, None, None], h_new, h_prev), y_t
+
+    h_fin, ys = jax.lax.scan(
+        tstep, st.h,
+        (jnp.moveaxis(dt, 0, 1), jnp.moveaxis(xs, 0, 1),
+         jnp.moveaxis(b, 0, 1), jnp.moveaxis(c, 0, 1),
+         jnp.moveaxis(da, 0, 1), valid.T))
+
+    y = jnp.moveaxis(ys, 0, 1) \
+        + xs * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, nc, d_in).astype(ct)
+    y = nn.rms_norm(y * jax.nn.silu(z), p["ln_y"], cfg.norm_eps)
+    # final conv tail = the last _CONV_K-1 raw inputs at each row's last
+    # valid token; n_valid == 0 indexes straight back into st.conv
+    idx = (n_valid[:, None] + jnp.arange(_CONV_K - 1)[None, :])[..., None]
+    conv_fin = jnp.take_along_axis(padded, idx, axis=1)
+    return x + y @ p["w_out"].astype(ct), MambaState(h=h_fin, conv=conv_fin)
+
+
 def mamba_prefill_chunk(params: Params, states, tokens: jax.Array,
                         t0: jax.Array, n_valid: jax.Array,
                         cfg: nn.ModelConfig):
-    """Scan one fixed-shape chunk of prompt into a subset of slots.
+    """Chunk-parallel prefill of one fixed-shape chunk into a subset of
+    slots (`_mamba_block_prefill` per layer): the chunk's GEMMs, conv, and
+    gates are bulk [S, nc] ops; only the SSD recurrence itself is scanned.
+    Bit-identical — states and valid-position outputs — to
+    `mamba_prefill_chunk_seq`'s token-sequential scan of the exact decode
+    update (pinned by tests/test_recurrent_prefill.py), so
+    recompute-from-prompt preemption stays exact while TTFT drops by
+    roughly the chunk width's worth of per-token dispatch latency.
 
     tokens: [S, nc] int32 (rows with n_valid == 0 are untouched);
-    t0: [S] int32 resume points (unused by the position-free SSD recurrence;
-    kept for signature parity with the hybrid model); n_valid: [S] int32
-    valid tokens per row.  The chunk is a sequential `lax.scan` of the
-    EXACT `mamba_block_decode` update, masked per token by validity — a
-    row's state after its chunks equals the state the decode path would
-    have built token-by-token, which is what makes recompute-from-prompt
-    preemption exact.  ONE compiled shape per chunk length serves every
-    chunk of every request at any resume point.
+    t0: [S] int32 resume points (unused by the position-free SSD
+    recurrence; kept for signature parity with the hybrid model);
+    n_valid: [S] int32 valid tokens per row.  ONE compiled shape per chunk
+    length serves every chunk of every request at any resume point.
 
     Returns (logits [S, V] at each row's last valid position, states).
+    """
+    del t0
+    _, nc = tokens.shape
+    x = nn.embed(params["emb"], tokens, cfg)              # [S, nc, D]
+    valid = jnp.arange(nc)[None, :] < n_valid[:, None]    # [S, nc]
+
+    def body(h, layer):
+        bp, st = layer
+        return _mamba_block_prefill(bp, h, st, valid, n_valid, cfg)
+
+    x, new_states = jax.lax.scan(body, x, (params["blocks"], states),
+                                 unroll=cfg.scan_unroll)
+    x = nn.rms_norm(x, params["ln_f"])
+    last = jnp.take_along_axis(
+        x, jnp.maximum(n_valid - 1, 0)[:, None, None], axis=1)[:, 0]
+    return nn.unembed(params["emb"], last, cfg), new_states
+
+
+def mamba_prefill_chunk_seq(params: Params, states, tokens: jax.Array,
+                            t0: jax.Array, n_valid: jax.Array,
+                            cfg: nn.ModelConfig):
+    """Token-sequential reference for `mamba_prefill_chunk`: a `lax.scan`
+    of the EXACT `mamba_block_decode` update, masked per token by
+    validity.  Kept as the bit-identity oracle for the chunk-parallel path
+    (and its bench baseline) — a row's state after its chunks equals the
+    state the decode path would have built token-by-token.
     """
     del t0
     from repro.core import slotted

@@ -57,11 +57,13 @@ class AttnConfig:
     # working set fits the VMEM budget; XLA elsewhere), "kernel", "xla".
     # Overridable per-process via REPRO_PREFILL_IMPL (kernels.ops).
     prefill_impl: str = "auto"
-    # Paged decode-step backend, same tri-state (kernels.ops.
-    # use_paged_kernel), and the VMEM working-set budget both dispatchers
-    # honour (0 = REPRO_VMEM_BUDGET_BYTES / the built-in default) —
-    # threaded into DecodeConfig so the serving path can force a dispatch.
+    # Paged decode-step / landmark-finalize backends, same tri-state
+    # (kernels.ops.use_paged_kernel / use_finalize_kernel), and the VMEM
+    # working-set budget all dispatchers honour (0 =
+    # REPRO_VMEM_BUDGET_BYTES / the built-in default) — threaded into
+    # DecodeConfig so the serving path can force a dispatch.
     paged_impl: str = "auto"
+    finalize_impl: str = "auto"
     vmem_budget: int = 0
 
     def mita_cfg(self, n: int, bidir: bool = False) -> MiTAConfig:

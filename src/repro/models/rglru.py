@@ -216,9 +216,12 @@ def rg_decode_step(params: Params, states, token: jax.Array, pos: jax.Array,
 # recurrence and conv history are constant-size per slot; the super-block's
 # attention layer keeps a bounded per-slot monolithic cache with its OWN
 # per-slot position (`tfm.init_slot_attn_state` / `block_decode_slots`
-# vmap), so one program serves slots at independent progress.  The per-
-# token update of `rg_prefill_chunk` is EXACTLY the decode-step update,
-# which is what makes recompute-from-prompt preemption bit-exact.
+# vmap), so one program serves slots at independent progress.
+# `rg_prefill_chunk` is chunk-parallel — bulk hoisted RG-LRU/FFN layers
+# plus a minimal per-token attention scan — but every token's arithmetic
+# is EXACTLY the decode-step update (pinned bit-identical against
+# `rg_prefill_chunk_seq`), which is what makes recompute-from-prompt
+# preemption bit-exact.
 
 def _super_block_step(sp: Params, x: jax.Array, st: RGSuperState,
                       cfg: nn.ModelConfig, pos: jax.Array):
@@ -259,18 +262,116 @@ def rg_slot_decode_step(params: Params, states, token: jax.Array,
     return logits, new_states
 
 
+def _rglru_block_prefill(p: Params, x: jax.Array, st: RGLRUState,
+                         valid: jax.Array, n_valid: jax.Array,
+                         cfg: nn.ModelConfig):
+    """Chunk-parallel RG-LRU layer: norm, projections, causal conv, and
+    gates run ONCE over the whole [S, nc] chunk; only the O(nc) diagonal
+    recurrence h_t = a_t·h_{t-1} + gated_t is scanned.  Per-token
+    arithmetic (ops, operand order, dtypes) is EXACTLY
+    `rglru_block_decode`'s — valid tokens are a prefix per row, so every
+    valid token sees the same conv history and recurrence inputs the
+    sequential scan would feed it, making the rebuilt state and every
+    valid position's output bit-identical.
+
+    x: [S, nc, D]; valid: [S, nc] bool; n_valid: [S] i32.
+    """
+    ct = cfg.compute_dtype
+    _, nc, _ = x.shape
+    xn = nn.rms_norm(x, p["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(xn @ p["w_gate"].astype(ct))
+    xi = xn @ p["w_in"].astype(ct)
+
+    # token j's conv history rows are exactly padded[:, j : j + _CONV_K]
+    padded = jnp.concatenate([st.conv, xi.astype(jnp.float32)], axis=1)
+    xc = sum(padded[:, j: j + nc] * p["conv"][j].astype(jnp.float32)
+             for j in range(_CONV_K)).astype(ct)
+
+    a, gated = _rglru_gates(p, xc, ct)
+
+    def tstep(h_prev, inp):
+        a_t, g_t, vj = inp
+        h_new = a_t * h_prev + g_t
+        return jnp.where(vj[:, None], h_new, h_prev), h_new
+
+    h_fin, hs = jax.lax.scan(
+        tstep, st.h,
+        (jnp.moveaxis(a, 0, 1), jnp.moveaxis(gated, 0, 1), valid.T))
+    h = jnp.moveaxis(hs, 0, 1)                            # [S, nc, Dr] f32
+    y = (h.astype(ct) * gate) @ p["w_out"].astype(ct)
+    # final conv tail = the last _CONV_K-1 raw inputs at each row's last
+    # valid token; n_valid == 0 indexes straight back into st.conv
+    idx = (n_valid[:, None] + jnp.arange(_CONV_K - 1)[None, :])[..., None]
+    conv_fin = jnp.take_along_axis(padded, idx, axis=1)
+    return x + y, RGLRUState(h=h_fin, conv=conv_fin)
+
+
+def _super_block_prefill(sp: Params, x: jax.Array, st: RGSuperState,
+                         cfg: nn.ModelConfig, pos: jax.Array,
+                         valid: jax.Array, n_valid: jax.Array):
+    """One super-block over a whole [S, nc] chunk: both RG-LRU layers and
+    the FFN are chunk-parallel (`_rglru_block_prefill` + bulk swiglu);
+    only the attention layer — whose per-slot monolithic cache appends one
+    row per token — keeps a per-token scan, masking its state by validity
+    exactly as the sequential path does."""
+    from repro.core import slotted
+
+    h, r1 = _rglru_block_prefill(sp["rec1"], x, st.rec1, valid, n_valid, cfg)
+    h = h + nn.swiglu_apply(sp["ffn1"], nn.rms_norm(h, sp["ln_f1"]), cfg)
+    h, r2 = _rglru_block_prefill(sp["rec2"], h, st.rec2, valid, n_valid, cfg)
+
+    def tstep(ast, inp):
+        hj, vj, pj = inp
+        y, a_new = tfm.block_decode_slots(sp["attn_blk"], hj, ast, cfg, pj)
+        return slotted.where_slots(vj, a_new, ast), y
+
+    ast, ys = jax.lax.scan(tstep, st.attn,
+                           (jnp.moveaxis(h, 0, 1), valid.T, pos.T))
+    return jnp.moveaxis(ys, 0, 1), RGSuperState(rec1=r1, rec2=r2, attn=ast)
+
+
 def rg_prefill_chunk(params: Params, states, tokens: jax.Array,
                      t0: jax.Array, n_valid: jax.Array, cfg: nn.ModelConfig):
-    """Scan one fixed-shape chunk of prompt into a subset of slots.
+    """Chunk-parallel prefill of one fixed-shape chunk into a subset of
+    slots (`_super_block_prefill` per super-block): the RG-LRU layers and
+    FFNs run as bulk [S, nc] ops with only the diagonal recurrence (and
+    the cache-appending attention sub-step) scanned per token.
+    Bit-identical — states and valid-position outputs — to
+    `rg_prefill_chunk_seq`'s token-sequential scan of the exact decode
+    update (pinned by tests/test_recurrent_prefill.py), so preemption
+    recompute stays exact while TTFT drops with the chunk width.
 
     tokens: [S, nc] int32; t0: [S] int32 resume points (rotary positions
     continue at t0 + j); n_valid: [S] int32 valid tokens per row (0 leaves
-    the row's state untouched).  Sequential `lax.scan` of the exact
-    decode-step update, masked per token by validity — one compiled shape
-    per chunk length serves every chunk of every request at any resume
-    point, so preemption recompute stays exact.
+    the row's state untouched).  ONE compiled shape per chunk length
+    serves every chunk of every request at any resume point.
 
     Returns (logits [S, V] at each row's last valid position, states).
+    """
+    _, nc = tokens.shape
+    x = nn.embed(params["emb"], tokens, cfg)              # [S, nc, D]
+    valid = jnp.arange(nc)[None, :] < n_valid[:, None]    # [S, nc]
+    pos = t0[:, None] + jnp.arange(nc)                    # [S, nc]
+
+    def body(h, layer):
+        sp, st = layer
+        return _super_block_prefill(sp, h, st, cfg, pos, valid, n_valid)
+
+    x, new_states = jax.lax.scan(body, x, (params["supers"], states),
+                                 unroll=cfg.scan_unroll)
+    x = nn.rms_norm(x, params["ln_f"])
+    last = jnp.take_along_axis(
+        x, jnp.maximum(n_valid - 1, 0)[:, None, None], axis=1)[:, 0]
+    return nn.unembed(params["emb"], last, cfg), new_states
+
+
+def rg_prefill_chunk_seq(params: Params, states, tokens: jax.Array,
+                         t0: jax.Array, n_valid: jax.Array,
+                         cfg: nn.ModelConfig):
+    """Token-sequential reference for `rg_prefill_chunk`: a `lax.scan` of
+    the EXACT `_super_block_step` decode update, masked per token by
+    validity.  Kept as the bit-identity oracle for the chunk-parallel
+    path (and its bench baseline).
     """
     from repro.core import slotted
 

@@ -117,6 +117,7 @@ def _decode_cfg(cfg: nn.ModelConfig) -> mdec.DecodeConfig:
                              external_finalize=cfg.attn.external_finalize,
                              prefill_impl=cfg.attn.prefill_impl,
                              paged_impl=cfg.attn.paged_impl,
+                             finalize_impl=cfg.attn.finalize_impl,
                              vmem_budget=cfg.attn.vmem_budget)
 
 

@@ -119,7 +119,7 @@ ENGINE_STAT_KEYS = frozenset({
 })
 BACKEND_STAT_KEYS = frozenset({
     "decode_dispatches", "prefill_kernel_fallbacks",
-    "paged_kernel_fallbacks",
+    "paged_kernel_fallbacks", "finalize_kernel_fallbacks",
 })
 STATS_SCHEMA = ENGINE_STAT_KEYS | BACKEND_STAT_KEYS
 
@@ -244,7 +244,8 @@ class BackendBase:
         # (keys must cover BACKEND_STAT_KEYS exactly)
         return {"decode_dispatches": self.decode_dispatches,
                 "prefill_kernel_fallbacks": 0,
-                "paged_kernel_fallbacks": 0}
+                "paged_kernel_fallbacks": 0,
+                "finalize_kernel_fallbacks": 0}
 
 
 def resolve(params: Any, cfg: Any, ecfg: Any) -> BackendBase:

@@ -226,10 +226,9 @@ class MiTABackend(BackendBase):
                 f"compressed landmark branch (spec_mode='landmark'; got "
                 f"{mode!r})")
         self.spec_mode = "landmark"
-        # chunk-prefill kernel→XLA VMEM fallbacks are counted process-wide
-        # at trace time; this backend reports the delta since it was built
-        self._fallback_base = ops.prefill_kernel_fallbacks()
-        self._paged_base = ops.paged_kernel_fallbacks()
+        # kernel→XLA VMEM fallbacks are counted process-wide at trace
+        # time; this backend reports the deltas since it was built
+        self._fallback_base = ops.fallback_counters()
         self._q_stack = None                  # verify→rollback handoff
         self.cfg = dataclasses.replace(
             cfg, attn=dataclasses.replace(
@@ -485,10 +484,12 @@ class MiTABackend(BackendBase):
     def stats(self) -> dict:
         from repro.kernels import ops
         s = super().stats()
-        s["prefill_kernel_fallbacks"] = (ops.prefill_kernel_fallbacks()
-                                         - self._fallback_base)
-        s["paged_kernel_fallbacks"] = (ops.paged_kernel_fallbacks()
-                                       - self._paged_base)
+        now = ops.fallback_counters()
+        s["prefill_kernel_fallbacks"] = (now["prefill"]
+                                         - self._fallback_base["prefill"])
+        s["paged_kernel_fallbacks"] = now["paged"] - self._fallback_base["paged"]
+        s["finalize_kernel_fallbacks"] = (now["finalize"]
+                                          - self._fallback_base["finalize"])
         return s
 
     # ------------------------------------------------------------- oracle --

@@ -490,6 +490,202 @@ def test_prefill_impl_dispatch(monkeypatch):
     _drive_chunks(cfg_x, cfg_tiny, n_trains=[16], n_totals=[16], chunk=16)
 
 
+@pytest.mark.parametrize("qb", [4, 2, 1, None])
+def test_chunk_kernel_forced_tile_sweep(qb, monkeypatch):
+    """VMEM-budget-driven tiling flips: REPRO_VMEM_BUDGET_BYTES values
+    computed from the estimator force every local-branch tile size the
+    selector can produce (q_block = nw, nw/2, 1) and, below the smallest
+    tile, the counted XLA fallback — parity must be bit-exact at every
+    tile shape (the tiled kernel merges no partials across tiles, so no
+    tolerance loosening is allowed)."""
+    shape = dict(nc=32, window=W, m=4, k_width=K, g=2, d=16, itemsize=4)
+    need = {b: ops.chunk_prefill_vmem_bytes(**shape, q_block=b)
+            for b in (4, 2, 1)}
+    assert need[1] < need[2] < need[4]
+    budget = need[qb] if qb else need[1] - 1
+    # the env override reaches the selector (budget=0 reads it)...
+    monkeypatch.setenv("REPRO_VMEM_BUDGET_BYTES", str(budget))
+    assert ops.select_prefill_q_block(**shape) == qb
+    monkeypatch.delenv("REPRO_VMEM_BUDGET_BYTES")
+    # ...while the drive pins the budget via DecodeConfig so each swept
+    # value is part of the static jit key (an env flip alone would reuse
+    # the first parameterization's compiled trace and tile size)
+    cfg_x, cfg_k = _chunk_pair()
+    cfg_k = dataclasses.replace(cfg_k, vmem_budget=budget)
+    with ops.scoped_fallback_counters() as fb:
+        _drive_chunks(cfg_x, cfg_k, n_trains=[32, 32], n_totals=[32, 32],
+                      chunk=32)
+    if qb is None:
+        assert fb["prefill"] >= 1      # counted, and still oracle-exact
+    else:
+        assert fb["prefill"] == 0
+
+
+# ---------------------------------------------- fused paged-finalize kernel --
+
+
+def _finalize_pair(s_route=1):
+    cfg_x = mdec.DecodeConfig(window=W, k=K, s=s_route, finalize_impl="xla",
+                              external_finalize=True)
+    return cfg_x, dataclasses.replace(cfg_x, finalize_impl="kernel")
+
+
+def _finalize_state(cfg, s_n=4, m_slot=4, hkv=2, d=16, seed=9):
+    """A paged state with fully random pools, landmarks, and window-query
+    accumulators over a SHUFFLED page table — nothing about the finalize
+    may depend on pool layout beyond what the table names."""
+    n_pages = s_n * m_slot + 2
+    table = np.random.default_rng(seed).permutation(n_pages)[: s_n * m_slot]
+    pt = jnp.asarray(table.reshape(s_n, m_slot), jnp.int32)
+    st = mdec.init_paged_state(hkv, d, n_pages, s_n, m_slot, cfg,
+                               jnp.float32)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    return st._replace(
+        k_pool=jax.random.normal(ks[0], st.k_pool.shape, st.k_pool.dtype),
+        v_pool=jax.random.normal(ks[1], st.v_pool.shape, st.v_pool.dtype),
+        q_sum=jax.random.normal(ks[2], st.q_sum.shape, jnp.float32),
+        lm_q=jax.random.normal(ks[3], st.lm_q.shape, st.lm_q.dtype),
+        lm_v=jax.random.normal(ks[4], st.lm_v.shape, st.lm_v.dtype)), pt
+
+
+_FIN_FIELDS = ("lm_q", "lm_v", "expert_idx", "expert_valid", "q_sum")
+
+
+@pytest.mark.parametrize("t_new,due", [
+    ((8, 16, 0, 29), (True, True, False, False)),
+    ((32, 8, 24, 5), (True, True, True, False)),
+])
+def test_finalize_kernel_matches_xla(t_new, due):
+    """Finalize kernel vs the `_paged_finalize` XLA oracle over a shuffled
+    page table, ragged per-slot t (first/middle/last window ordinals),
+    non-due and inactive (t = 0) slots: landmarks, expert rows, validity,
+    and q_sum bit-exact; pools untouched."""
+    cfg_x, cfg_k = _finalize_pair()
+    st, pt = _finalize_state(cfg_x)
+    td = jnp.asarray(t_new, jnp.int32)
+    dd = jnp.asarray(due)
+    fin = jax.jit(mdec.mita_paged_finalize, static_argnames="cfg")
+    st_x = fin(st, pt, td, dd, cfg=cfg_x)
+    st_k = fin(st, pt, td, dd, cfg=cfg_k)
+    for f in _FIN_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(st_k, f)),
+                                      np.asarray(getattr(st_x, f)),
+                                      err_msg=f)
+    for f in ("k_pool", "v_pool"):
+        np.testing.assert_array_equal(np.asarray(getattr(st_k, f)),
+                                      np.asarray(getattr(st_x, f)),
+                                      err_msg=f)
+    # non-due rows pass through bit-exactly (q_sum zeroing is due-gated)
+    for f in _FIN_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st_k, f))[~np.asarray(due)],
+            np.asarray(getattr(st, f))[~np.asarray(due)],
+            err_msg=f"{f} non-due passthrough")
+
+
+def test_finalize_kernel_in_decode_loop():
+    """The finalize kernel inside the full external-finalize decode drive:
+    the `_drive` loop re-runs with the KERNEL finalize on one side and the
+    XLA finalize on the other (decode steps identical), pinning the
+    integration point `_paged_finalize` dispatches through."""
+    cfg_x = mdec.DecodeConfig(window=W, k=K, s=1, paged_impl="xla",
+                              external_finalize=True, finalize_impl="xla")
+    cfg_k = dataclasses.replace(cfg_x, finalize_impl="kernel")
+    key = jax.random.PRNGKey(3)
+    b, hkv, g, d, n_steps = 3, 2, 2, 16, 24
+    q = jax.random.normal(key, (b, hkv, g, n_steps, d))
+    k, v = (jax.random.normal(kk, (b, hkv, n_steps, d))
+            for kk in jax.random.split(key, 2))
+    m = (n_steps + W - 1) // W
+    n_pages = b * m + 2
+    table = np.random.default_rng(3).permutation(n_pages)[: b * m]
+    pt = jnp.asarray(table.reshape(b, m), jnp.int32)
+    st_x = mdec.init_paged_state(hkv, d, n_pages, b, m, cfg_x, jnp.float32)
+    st_k = st_x
+    step = jax.jit(lambda s, *a: mdec.mita_paged_decode_step(s, *a, cfg_x))
+    fin = jax.jit(mdec.mita_paged_finalize, static_argnames="cfg")
+    offs = [0, 5, 11]
+    t = np.zeros(b, np.int32)
+    m_done = np.zeros(b, np.int32)
+    for i in range(n_steps):
+        act = np.array([offs[s] <= i for s in range(b)])
+        due = act & (t % W == 0) & (t // W > m_done)
+        if due.any():
+            td, dd = jnp.asarray(t), jnp.asarray(due)
+            st_x = fin(st_x, pt, td, dd, cfg=cfg_x)
+            st_k = fin(st_k, pt, td, dd, cfg=cfg_k)
+            for f in _FIN_FIELDS:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(st_k, f)),
+                    np.asarray(getattr(st_x, f)), err_msg=f"{f} step {i}")
+            m_done = np.where(due, t // W, m_done)
+        qi = jnp.stack([q[s, :, :, (i - offs[s]) % n_steps]
+                        for s in range(b)])
+        ki = jnp.stack([k[s, :, (i - offs[s]) % n_steps] for s in range(b)])
+        vi = jnp.stack([v[s, :, (i - offs[s]) % n_steps] for s in range(b)])
+        td, ad = jnp.asarray(t), jnp.asarray(act)
+        o_x, st_x = step(st_x, qi, ki, vi, pt, td, ad)
+        o_k, st_k = step(st_k, qi, ki, vi, pt, td, ad)
+        np.testing.assert_array_equal(np.asarray(o_k), np.asarray(o_x),
+                                      err_msg=f"decode out step {i}")
+        t = t + act
+
+
+def test_finalize_impl_dispatch(monkeypatch):
+    """`use_finalize_kernel`: tri-state impl + VMEM budget + the
+    REPRO_FINALIZE_IMPL env override flip dispatch without touching
+    numerics (the XLA path IS the fallback)."""
+    shape = dict(window=W, m=4, k_width=K, d=16, itemsize=4)
+    assert ops.use_finalize_kernel("kernel", **shape)
+    assert not ops.use_finalize_kernel("kernel", **shape, budget=64)
+    assert not ops.use_finalize_kernel("xla", **shape)
+    with pytest.raises(ValueError, match="finalize impl"):
+        ops.use_finalize_kernel("bogus", **shape)
+    monkeypatch.setenv("REPRO_FINALIZE_IMPL", "xla")
+    assert not ops.use_finalize_kernel("kernel", **shape)
+    monkeypatch.setenv("REPRO_FINALIZE_IMPL", "kernel")
+    assert ops.use_finalize_kernel("xla", **shape)
+    monkeypatch.delenv("REPRO_FINALIZE_IMPL")
+    # an oversized "kernel" config silently runs the oracle, counted
+    cfg_x, cfg_k = _finalize_pair()
+    cfg_tiny = dataclasses.replace(cfg_k, vmem_budget=64)
+    st, pt = _finalize_state(cfg_x)
+    td = jnp.asarray([8, 16, 0, 29], jnp.int32)
+    dd = jnp.asarray([True, True, False, False])
+    fin = jax.jit(mdec.mita_paged_finalize, static_argnames="cfg")
+    with ops.scoped_fallback_counters() as fb:
+        st_t = fin(st, pt, td, dd, cfg=cfg_tiny)
+    assert fb["finalize"] >= 1 and fb["prefill"] == 0
+    st_x = fin(st, pt, td, dd, cfg=cfg_x)
+    for f in _FIN_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(st_t, f)),
+                                      np.asarray(getattr(st_x, f)),
+                                      err_msg=f)
+
+
+def test_fallback_counters_reset_and_scope():
+    """`reset_fallback_counters` zeroes all three counters and re-arms the
+    warn-once flags; `scoped_fallback_counters` reports only its block's
+    deltas while the globals keep accumulating for backend snapshots."""
+    ops.reset_fallback_counters()
+    assert ops.fallback_counters() == {"prefill": 0, "paged": 0,
+                                       "finalize": 0}
+    shape = dict(nc=16, window=W, m=4, k_width=K, g=2, d=16)
+    with pytest.warns(RuntimeWarning, match="VMEM budget"):
+        with ops.scoped_fallback_counters() as fb:
+            assert not ops.use_prefill_kernel("kernel", **shape, budget=64)
+    assert fb == {"prefill": 1, "paged": 0, "finalize": 0}
+    assert ops.fallback_counters()["prefill"] == 1   # global still counts
+    with ops.scoped_fallback_counters() as fb2:
+        pass
+    assert fb2 == {"prefill": 0, "paged": 0, "finalize": 0}
+    ops.reset_fallback_counters()
+    # the warn flag is re-armed: the next budget fallback warns again
+    with pytest.warns(RuntimeWarning, match="VMEM budget"):
+        ops.use_prefill_kernel("kernel", **shape, budget=64)
+    ops.reset_fallback_counters()
+
+
 def test_paged_kernel_dma_pipeline_parity(monkeypatch):
     """REPRO_DMA_PIPELINE=0 (serial expert-row DMAs) and =1 (double-
     buffered) produce identical decode steps — the pipeline only reorders

@@ -1,0 +1,119 @@
+"""Chunk-parallel recurrent prefill ↔ sequential-scan bit-identity.
+
+`models.mamba2.mamba_prefill_chunk` and `models.rglru.rg_prefill_chunk`
+hoist every position-local op (norms, projections, causal conv, gates,
+output paths) into bulk [S, nc] computations and keep only the O(nc)
+state recurrence (plus the cache-appending attention sub-step in the
+hybrid) in a `lax.scan`.  The serving contract — recompute-from-prompt
+preemption is exact, chunked admission equals decode-built state — rests
+on these being BIT-identical to the retained token-sequential references
+(`*_prefill_chunk_seq`, which scan the exact decode-step update), so this
+suite compares logits at valid rows and EVERY state leaf with
+array_equal, never allclose, across ragged n_valid (full, partial, zero
+rows) and chained chunks at staggered resume points."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import mamba2 as m2
+from repro.models import rglru as rg
+from repro.models.modules import AttnConfig, ModelConfig
+
+W = 8
+S = 4
+
+
+def _family(name):
+    if name == "mamba2":
+        cfg = ModelConfig(n_layers=2, d_model=32, n_heads=1, n_kv=1, d_ff=0,
+                          vocab=97, attn=AttnConfig(window=W, backend="full"))
+        params = m2.mamba_init(jax.random.PRNGKey(0), cfg)
+        states = m2.mamba_slot_states(cfg, S)
+        return cfg, params, states, m2.mamba_prefill_chunk, \
+            m2.mamba_prefill_chunk_seq
+    cfg = ModelConfig(n_layers=3, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+                      vocab=97,
+                      attn=AttnConfig(window=W, k=W, backend="mita_ref"))
+    params = rg.rg_init(jax.random.PRNGKey(0), cfg)
+    states = rg.rg_slot_states(cfg, S, 64)
+    return cfg, params, states, rg.rg_prefill_chunk, rg.rg_prefill_chunk_seq
+
+
+def _assert_states_equal(st_a, st_b, msg):
+    la, lb = jax.tree.leaves(st_a), jax.tree.leaves(st_b)
+    assert len(la) == len(lb)
+    for i, (a, b) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{msg} leaf {i}")
+
+
+@pytest.mark.parametrize("family", ["mamba2", "rglru"])
+@pytest.mark.parametrize("n_valid", [
+    (16, 16, 16, 16),    # full chunk every row
+    (16, 5, 0, 1),       # ragged tails + an untouched row
+    (3, 16, 7, 0),
+])
+def test_chunk_parallel_matches_sequential(family, n_valid):
+    """One chunk, then a second chained chunk from the produced state at
+    shifted resume points: logits at live rows and every state leaf
+    bit-identical between the chunk-parallel path and the sequential
+    reference.  Rows with n_valid == 0 must leave state untouched in both
+    (their logits are unspecified and excluded)."""
+    nc = 16
+    cfg, params, states, new_fn, seq_fn = _family(family)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (S, nc)), jnp.int32)
+    t0 = jnp.asarray([0, W, 2 * W, 0], jnp.int32)
+    nv = jnp.asarray(n_valid, jnp.int32)
+    live = np.asarray(n_valid) > 0
+
+    lg_n, st_n = new_fn(params, states, toks, t0, nv, cfg)
+    lg_s, st_s = seq_fn(params, states, toks, t0, nv, cfg)
+    np.testing.assert_array_equal(np.asarray(lg_n)[live],
+                                  np.asarray(lg_s)[live], err_msg="logits")
+    _assert_states_equal(st_n, st_s, "chunk 1")
+    # zero-valid rows keep their incoming state bit-exactly
+    if not live.all():
+        dead = ~live
+        for i, (a, b) in enumerate(zip(jax.tree.leaves(st_n),
+                                       jax.tree.leaves(states))):
+            a, b = np.asarray(a), np.asarray(b)
+            if a.ndim >= 2 and a.shape[1] == S:     # [layers, S, ...] leaves
+                np.testing.assert_array_equal(
+                    a[:, dead], b[:, dead], err_msg=f"dead-row leaf {i}")
+
+    lg_n2, st_n2 = new_fn(params, st_n, toks[:, ::-1], t0 + nv, nv, cfg)
+    lg_s2, st_s2 = seq_fn(params, st_s, toks[:, ::-1], t0 + nv, nv, cfg)
+    np.testing.assert_array_equal(np.asarray(lg_n2)[live],
+                                  np.asarray(lg_s2)[live],
+                                  err_msg="logits chunk 2")
+    _assert_states_equal(st_n2, st_s2, "chunk 2")
+
+
+@pytest.mark.parametrize("family", ["mamba2", "rglru"])
+def test_chunk_size_invariance(family):
+    """The same 32-token prompt admitted as 2×16 and as 4×8 chunks builds a
+    bit-identical state on the chunk-parallel path — chunk-boundary
+    invariance is what lets preemption recompute use a different chunking
+    than the original admission."""
+    cfg, params, states, new_fn, _ = _family(family)
+    rng = np.random.default_rng(8)
+    toks = np.asarray(rng.integers(0, cfg.vocab, (S, 32)), np.int32)
+
+    def admit(chunk):
+        st = states
+        lg = None
+        for c0 in range(0, 32, chunk):
+            t0 = jnp.full((S,), c0, jnp.int32)
+            nv = jnp.full((S,), chunk, jnp.int32)
+            lg, st = new_fn(params, st,
+                            jnp.asarray(toks[:, c0: c0 + chunk]), t0, nv,
+                            cfg)
+        return lg, st
+
+    lg_a, st_a = admit(16)
+    lg_b, st_b = admit(8)
+    np.testing.assert_array_equal(np.asarray(lg_a), np.asarray(lg_b))
+    _assert_states_equal(st_a, st_b, "chunk-size invariance")
